@@ -1,0 +1,81 @@
+"""Kernel microbenchmarks: jitted wall time of the quantization hot paths
+(value-space jnp simulation, the path the framework executes on CPU) and
+derived bytes/value. Pallas-interpret timings are not meaningful wall-clock
+(Python interpreter loop) and are reported only as correctness-path info.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import csv_row
+from repro.core.gse import gse_fake_quant, gse_quantize
+from repro.core.nf4 import nf4_dequantize, nf4_quantize
+from repro.core.qcd import quantized_matmul
+
+
+def _time(fn, *args, iters=20):
+    fn(*args)                       # compile + warm
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run():
+    rows = []
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (512, 2048))
+    w = jax.random.normal(jax.random.PRNGKey(1), (2048, 512)) * 0.05
+
+    us = _time(jax.jit(lambda v: gse_fake_quant(v, 6, 32)), x)
+    rows.append(csv_row("kernel/gse_fake_quant_512x2048", us,
+                        f"GBps={x.nbytes / us * 1e6 / 1e9:.2f}"))
+    us = _time(jax.jit(lambda v: gse_quantize(v, 6, 32).mantissa), x)
+    rows.append(csv_row("kernel/gse_quantize_512x2048", us,
+                        f"GBps={x.nbytes / us * 1e6 / 1e9:.2f}"))
+    us = _time(jax.jit(
+        lambda a, b: quantized_matmul(a, b, 6, 6, 6, 32)), x, w)
+    flops = 2 * 512 * 2048 * 512
+    rows.append(csv_row("kernel/qcd_matmul_512x2048x512", us,
+                        f"GFLOPs={flops / us * 1e6 / 1e9:.1f}"))
+    us = _time(jax.jit(lambda a, b: a @ b), x, w)
+    rows.append(csv_row("kernel/bf16_matmul_baseline", us,
+                        f"GFLOPs={flops / us * 1e6 / 1e9:.1f}"))
+
+    t = nf4_quantize(w)
+    us = _time(jax.jit(nf4_dequantize), t)
+    rows.append(csv_row("kernel/nf4_dequant_2048x512", us,
+                        f"GBps={w.nbytes / us * 1e6 / 1e9:.2f}"))
+
+    # flash attention (jnp chunked) vs direct at prefill-ish shape
+    from repro.models.attention import (MaskInfo, direct_attention,
+                                        flash_attention)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (1, 2048, 8, 64), jnp.bfloat16)
+    kk = jax.random.normal(ks[1], (1, 2048, 4, 64), jnp.bfloat16)
+    vv = jax.random.normal(ks[2], (1, 2048, 4, 64), jnp.bfloat16)
+    info = MaskInfo(causal=True)
+    us1 = _time(jax.jit(lambda q, k, v: flash_attention(q, k, v, info,
+                                                        512, 512)),
+                q, kk, vv, iters=5)
+    us2 = _time(jax.jit(lambda q, k, v: direct_attention(q, k, v, info)),
+                q, kk, vv, iters=5)
+    rows.append(csv_row("kernel/flash_attn_2k", us1,
+                        f"direct_us={us2:.0f} ratio={us2 / us1:.2f}"))
+
+    # Pallas interpret-mode correctness path (not wall-representative)
+    from repro.kernels import ops
+    xs = jax.random.normal(key, (128, 512))
+    us = _time(lambda v: ops.gse_quantize(v, 6, 32)[0], xs, iters=3)
+    rows.append(csv_row("kernel/pallas_gse_quant_interpret", us,
+                        "correctness-path-only"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,143 @@
+"""Analytic fine-tuning memory model — reproduces the paper's Mem.(G)
+columns (Tab. 1/8) for the LLaMA family.
+
+Components per the paper's setting (batch 16, seq 2048, 8-bit AdamW,
+activation storage for backward in the compute format):
+
+  base weights     : NF4 = 4 bits + fp32 absmax / 64 + DQ overhead
+  adapters         : bf16 master + fp32 copy + 2x int8 moments (+scales)
+  activations      : stored GEMM inputs per layer, b_act bits/value
+                     (16 for QLoRA, GSE bits + 5/32 shared exp for GSQ)
+  gradients        : transient microbatch gradient workspace, b_grad bits
+  logits/workspace : fp32 logits on the last microbatch + fixed runtime
+
+The activation/workspace constant is calibrated once on the paper's QLoRA
+LLaMA2-7B r64 row (10.73 GB) and then *predicts* every other row.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs import get_config
+from repro.core.gse import gse_bits_per_value
+
+BATCH, SEQ = 16, 2048
+GB = 1024 ** 3
+
+
+@dataclasses.dataclass
+class MemRow:
+    label: str
+    act_bits: float
+    grad_bits: float
+    rank: int
+
+
+def _linear_params(cfg) -> int:
+    """Params in quantizable linear layers (excludes embeddings/norms)."""
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    attn = d * (cfg.n_heads + 2 * cfg.n_kv_heads) * hd \
+        + cfg.n_heads * hd * d
+    ff = 3 * d * cfg.d_ff if cfg.act in ("silu", "gelu") else 2 * d * cfg.d_ff
+    return cfg.n_layers * (attn + ff)
+
+
+def _adapter_params(cfg, rank: int) -> int:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    per_layer = 0
+    for i, o in [(d, cfg.n_heads * hd), (d, cfg.n_kv_heads * hd),
+                 (d, cfg.n_kv_heads * hd), (cfg.n_heads * hd, d),
+                 (d, cfg.d_ff), (d, cfg.d_ff), (cfg.d_ff, d)]:
+        per_layer += rank * (i + o)
+    return cfg.n_layers * per_layer
+
+
+def _stored_act_values(cfg) -> int:
+    """GEMM-input values saved for backward per microbatch (QCD residuals):
+    roughly every linear's input + attention p/v inputs ~ 7 x (B,T,d) +
+    2 x (B,T,ff-ish) -> calibrated constant x B x T x d x L."""
+    return BATCH * SEQ * cfg.d_model * cfg.n_layers
+
+
+def estimate_gb(arch: str, row: MemRow, act_factor: float) -> float:
+    cfg = get_config(arch)
+    n_lin = _linear_params(cfg)
+    n_emb = cfg.padded_vocab * cfg.d_model * (1 if cfg.tie_embeddings else 2)
+    base = n_lin * (4 + 32 / 64 + 8 / 4096) / 8 + n_emb * 2
+    n_ad = _adapter_params(cfg, row.rank)
+    adapters = n_ad * (2 + 4 + 2 + 8 / 256) if row.rank else 0
+    acts = _stored_act_values(cfg) * act_factor * row.act_bits / 8
+    grads = _stored_act_values(cfg) / cfg.n_layers * row.grad_bits / 8 * 2
+    runtime = 0.75 * GB                      # cuda/xla context + code
+    return (base + adapters + acts + grads + runtime) / GB
+
+
+def calibrate(paper_qlora_7b_r64: float = 10.73) -> float:
+    """Solve act_factor from the paper's QLoRA LLaMA2-7B r64 row."""
+    row = MemRow("4-16-16/16", 16, 16, 64)
+    lo, hi = 0.1, 40.0
+    for _ in range(60):
+        mid = (lo + hi) / 2
+        if estimate_gb("llama2_7b", row, mid) < paper_qlora_7b_r64:
+            lo = mid
+        else:
+            hi = mid
+    return (lo + hi) / 2
+
+
+PAPER_ROWS_7B_R64 = {          # paper Tab. 1, LLaMA2-7B, rank 64
+    "qlora_4-16-16": (MemRow("qlora", 16, 16, 64), 10.73),
+    "gsq_4-8-8": (MemRow("gsq8", gse_bits_per_value(8), 8, 64), 7.28),
+    "gsq_4-6-6": (MemRow("gsq6", gse_bits_per_value(6), 6, 64), 5.97),
+    "gsq_4-5-5": (MemRow("gsq5", gse_bits_per_value(5), 5, 64), 5.81),
+}
+
+PAPER_ROWS_13B_R64 = {
+    "qlora_4-16-16": (MemRow("qlora", 16, 16, 64), 17.42),
+    "gsq_4-8-8": (MemRow("gsq8", gse_bits_per_value(8), 8, 64), 11.99),
+    "gsq_4-6-6": (MemRow("gsq6", gse_bits_per_value(6), 6, 64), 10.89),
+    "gsq_4-5-5": (MemRow("gsq5", gse_bits_per_value(5), 5, 64), 10.33),
+}
+
+
+def run(print_csv=True):
+    rows = []
+    f = calibrate()
+    for arch, table in (("llama2_7b", PAPER_ROWS_7B_R64),
+                        ("llama2_13b_proxy", None)):
+        if table is None:
+            continue
+        for name, (row, paper_gb) in table.items():
+            est = estimate_gb(arch, row, f)
+            rows.append((f"memory_model/{arch}/{name}", est, paper_gb))
+    # 13B uses scaled config (paper arch): 40L d5120 40H ff13824
+    import repro.configs.llama2_7b as l7
+    import dataclasses as dc
+    cfg13 = dc.replace(l7.config(), name="llama2-13b", n_layers=40,
+                       d_model=5120, n_heads=40, n_kv_heads=40, d_ff=13824)
+    import repro.configs
+    # register temporarily
+    import sys
+    mod = type(sys)("repro.configs.llama2_13b_proxy")
+    mod.config = lambda: cfg13
+    sys.modules["repro.configs.llama2_13b_proxy"] = mod
+    for name, (row, paper_gb) in PAPER_ROWS_13B_R64.items():
+        est = estimate_gb("llama2_13b_proxy", row, f)
+        rows.append((f"memory_model/llama2_13b/{name}", est, paper_gb))
+    out = []
+    for name, est, paper in rows:
+        rel = est / paper - 1
+        out.append(f"{name},0.0,est={est:.2f}GB paper={paper:.2f}GB "
+                   f"rel={rel:+.1%}")
+    # headline: the ~50% saving claim at 6 bits
+    q = [r for r in rows if "7b/qlora" in r[0]][0]
+    g6 = [r for r in rows if "7b/gsq_4-6-6" in r[0]][0]
+    out.append(f"memory_model/claim_50pct_saving,0.0,"
+               f"model={1 - g6[1] / q[1]:.1%} paper={1 - 5.97 / 10.73:.1%}")
+    if print_csv:
+        print("\n".join(out))
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,49 @@
+"""Benchmark entry point — one function per paper table. Prints
+``name,us_per_call,derived`` CSV. ``python -m benchmarks.run [--quick]``."""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer proxy-finetune steps")
+    ap.add_argument("--only", default=None,
+                    help="comma list: table1,table2,table5,table6,table7,"
+                         "pareto,memory,kernels")
+    args = ap.parse_args()
+    steps = 40 if args.quick else 120
+    sel = set(args.only.split(",")) if args.only else None
+
+    from benchmarks import tables, kernel_bench, memory_model
+
+    jobs = [
+        ("table5", lambda: tables.table5_hardware()),
+        ("memory", lambda: memory_model.run(print_csv=False)),
+        ("kernels", lambda: kernel_bench.run()),
+        ("table2", lambda: tables.table2_fp8(steps)),
+        ("table1", lambda: tables.table1_bits(steps)),
+        ("table6", lambda: tables.table6_group(steps)),
+        ("table7", lambda: tables.table7_rank(steps)),
+        ("pareto", lambda: tables.pareto(max(steps * 2 // 3, 30))),
+    ]
+    print("name,us_per_call,derived")
+    for name, fn in jobs:
+        if sel and name not in sel:
+            continue
+        t0 = time.time()
+        try:
+            for row in fn():
+                print(row, flush=True)
+        except Exception as e:  # keep the harness running
+            print(f"{name}/ERROR,0.0,{type(e).__name__}: {e}",
+                  file=sys.stderr)
+            raise
+        print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""End-to-end driver: fine-tune the same model under the paper's policy
+ladder (QLoRA-BF16 vs GSQ 8/6/5-bit) for a few hundred steps and compare —
+the proxy-scale version of paper Tab. 1.
+
+    PYTHONPATH=src python examples/finetune_policies.py [--steps 200]
+"""
+import argparse
+
+from benchmarks.common import run_proxy_finetune
+from repro.core.policy import QuantPolicy
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    args = ap.parse_args()
+    ladder = [
+        ("QLoRA  4-16-16 (bf16 adapters)", QuantPolicy.qlora_bf16(rank=16)),
+        ("GSQ    4-8-8   (GSE-INT8)", QuantPolicy.gsq(8, rank=16)),
+        ("GSQ    4-6-6   (GSE-INT6)", QuantPolicy.gsq(6, rank=16)),
+        ("GSQ    4-5-5   (GSE-INT5)", QuantPolicy.gsq(5, rank=16)),
+    ]
+    print(f"{'policy':36s} {'eval_loss':>9s} {'eval_acc':>8s} "
+          f"{'ms/step':>8s}")
+    for name, pol in ladder:
+        m = run_proxy_finetune(pol, steps=args.steps)
+        print(f"{name:36s} {m['eval_loss']:9.4f} {m['eval_acc']:8.3f} "
+              f"{m['us_per_step'] / 1000:8.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,392 @@
+"""Trip-count-aware HLO cost analysis.
+
+XLA's ``compiled.cost_analysis()`` counts each ``while`` body ONCE — under a
+scan-over-layers + grad-accum + flash-attention-scan architecture that
+undercounts FLOPs/bytes/collectives by orders of magnitude. This walker
+parses the optimized (post-SPMD, per-device) HLO text, builds the
+computation call graph and an SSA def->shape map, extracts while-loop trip
+counts from their condition computations, and accumulates:
+
+  * flops               — 2 * prod(result_dims) * contraction for every dot
+  * hbm_bytes           — operand+result bytes of top-level instructions
+                          (fusion internals excluded: they live in
+                          VMEM/registers under XLA's fusion model)
+  * collective_bytes    — payload bytes per collective kind
+  * int8_dot_flops      — dot FLOPs whose lhs operand is s8/u8 (MXU int8)
+
+all multiplied through nested while trip counts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "ragged-all-to-all")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\(")
+_CALL_SINGLE_RE = re.compile(
+    r"(?:calls|body|condition|to_apply)=%?([\w.\-]+)")
+_CALL_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_TRIP_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _shape_list(text: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for m in _SHAPE_RE.finditer(text):
+        dt = m.group(1)
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = [int(d) for d in m.group(2).split(",") if d]
+        out.append((dt, dims))
+    return out
+
+
+def _shape_bytes(text: str) -> int:
+    tot = 0
+    for dt, dims in _shape_list(text):
+        n = 1
+        for d in dims:
+            n *= d
+        tot += n * _DTYPE_BYTES[dt]
+    return tot
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    result: str          # result shape text
+    opcode: str
+    line: str            # full line (metadata stripped)
+
+    def operands(self) -> List[str]:
+        """SSA names referenced inside opcode(...)."""
+        body = self.line.split(self.opcode + "(", 1)
+        if len(body) < 2:
+            return []
+        args = body[1]
+        # cut at the matching close paren (first '), ' attr separator or EOL)
+        depth = 1
+        for i, ch in enumerate(args):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    args = args[:i]
+                    break
+        return _OPERAND_RE.findall(args)
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+    defs: Dict[str, str]        # ssa name -> result shape text
+
+
+def _parse_header_params(header: str, defs: Dict[str, str]):
+    """header like '%name (p0: s32[], p1: (f32[2,3]{1,0}, s8[4]))' —
+    register p0/p1 shapes."""
+    m = re.match(r"^(?:ENTRY\s+)?%?[\w.\-]+\s*\((.*)\)\s*->", header)
+    if not m:
+        return
+    params = m.group(1)
+    # split top-level commas
+    depth = 0
+    parts, cur = [], []
+    for ch in params:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+        if ch == "," and depth == 0:
+            parts.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        parts.append("".join(cur))
+    for p in parts:
+        if ":" not in p:
+            continue
+        name, shape = p.split(":", 1)
+        defs[name.strip().lstrip("%")] = shape.strip()
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        if not line.startswith("  ") and s.endswith("{") and "->" in s:
+            m = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(", s)
+            if m:
+                cur = Computation(m.group(1), [], {})
+                _parse_header_params(s, cur.defs)
+                comps[cur.name] = cur
+                continue
+        if s == "}" and not line.startswith("   "):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        mi = _INSTR_RE.match(line)
+        if mi:
+            clean = s.split(", metadata=")[0]
+            ins = Instr(mi.group(1), mi.group(2), mi.group(3), clean)
+            cur.instrs.append(ins)
+            cur.defs[ins.name] = ins.result
+    return comps
+
+
+def _operand_bytes(ins: Instr, comp: Computation) -> int:
+    tot = 0
+    for name in ins.operands():
+        shp = comp.defs.get(name)
+        if shp:
+            tot += _shape_bytes(shp)
+    return tot
+
+
+def _dot_flops(ins: Instr, comp: Computation) -> Tuple[float, bool]:
+    shapes = _shape_list(ins.result)
+    if not shapes:
+        return 0.0, False
+    _, rdims = shapes[0]
+    n_res = 1
+    for d in rdims:
+        n_res *= d
+    ops = ins.operands()
+    lhs_shape = comp.defs.get(ops[0], "") if ops else ""
+    lhs_shapes = _shape_list(lhs_shape)
+    contraction = 1
+    is_int8 = False
+    if lhs_shapes:
+        lhs_dt, lhs_dims = lhs_shapes[0]
+        is_int8 = lhs_dt in ("s8", "u8", "s4", "u4")
+        mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.line)
+        if mc:
+            for idx in [int(i) for i in mc.group(1).split(",") if i]:
+                if idx < len(lhs_dims):
+                    contraction *= lhs_dims[idx]
+    return 2.0 * n_res * contraction, is_int8
+
+
+def _conv_flops(ins: Instr, comp: Computation) -> float:
+    shapes = _shape_list(ins.result)
+    if not shapes:
+        return 0.0
+    _, rdims = shapes[0]
+    n_res = 1
+    for d in rdims:
+        n_res *= d
+    ops = ins.operands()
+    if len(ops) < 2:
+        return 0.0
+    kshape = _shape_list(comp.defs.get(ops[1], ""))
+    if not kshape:
+        return 0.0
+    _, kdims = kshape[0]
+    k = 1
+    for d in kdims:
+        k *= d
+    if rdims:
+        k = max(k // max(rdims[-1], 1), 1)
+    return 2.0 * n_res * k
+
+
+def _trip_count(cond: Computation) -> int:
+    best = None
+    for ins in cond.instrs:
+        for m in _TRIP_RE.finditer(ins.line):
+            v = int(m.group(1))
+            best = v if best is None else max(best, v)
+    return best if best and best > 0 else 1
+
+
+@dataclasses.dataclass
+class WalkResult:
+    flops: float = 0.0
+    int8_flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in _COLLECTIVES})
+    collective_counts: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in _COLLECTIVES})
+    while_trips: List[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+_SKIP_BYTES_OPS = {"parameter", "constant", "get-tuple-element", "tuple",
+                   "bitcast", "after-all", "iota", "partition-id",
+                   "replica-id"}
+
+_CALLER_OPS = {"fusion", "call", "custom-call", "reduce", "sort", "scatter",
+               "select-and-scatter", "map", "reduce-window", "all-reduce",
+               "reduce-scatter"}
+
+
+def _accumulate(dst: WalkResult, src: WalkResult, times: float):
+    dst.flops += src.flops * times
+    dst.int8_flops += src.int8_flops * times
+    dst.hbm_bytes += src.hbm_bytes * times
+    for k in dst.collective_bytes:
+        dst.collective_bytes[k] += src.collective_bytes.get(k, 0.0) * times
+        dst.collective_counts[k] += src.collective_counts.get(k, 0.0) * times
+    dst.while_trips.extend(src.while_trips)
+
+
+def walk(text: str) -> WalkResult:
+    comps = parse_hlo(text)
+    memo: Dict[str, WalkResult] = {}
+
+    def instr_bytes(ins: Instr, comp: Computation) -> float:
+        return _shape_bytes(ins.result) + _operand_bytes(ins, comp)
+
+    def comp_cost(name: str) -> WalkResult:
+        if name in memo:
+            return memo[name]
+        out = WalkResult()
+        memo[name] = out
+        comp = comps.get(name)
+        if comp is None:
+            return out
+        for ins in comp.instrs:
+            op = ins.opcode
+            base_coll = None
+            for c in _COLLECTIVES:
+                if op == c or op.startswith(c + "-"):
+                    base_coll = c
+                    break
+            if op == "dot":
+                f, i8 = _dot_flops(ins, comp)
+                out.flops += f
+                if i8:
+                    out.int8_flops += f
+                out.hbm_bytes += instr_bytes(ins, comp)
+            elif op == "convolution":
+                out.flops += _conv_flops(ins, comp)
+                out.hbm_bytes += instr_bytes(ins, comp)
+            elif op == "while":
+                mb = re.search(r"body=%?([\w.\-]+)", ins.line)
+                mcnd = re.search(r"condition=%?([\w.\-]+)", ins.line)
+                trips = 1
+                if mcnd and mcnd.group(1) in comps:
+                    trips = _trip_count(comps[mcnd.group(1)])
+                out.while_trips.append(trips)
+                if mb:
+                    _accumulate(out, comp_cost(mb.group(1)), trips)
+            elif base_coll is not None:
+                nbytes = _shape_bytes(ins.result)
+                if base_coll == "reduce-scatter":
+                    ob = _operand_bytes(ins, comp)
+                    nbytes = ob or nbytes
+                out.collective_bytes[base_coll] += nbytes
+                out.collective_counts[base_coll] += 1
+                out.hbm_bytes += instr_bytes(ins, comp)
+            elif op == "conditional":
+                subs = [comp_cost(s) for s in _called_comps(ins)]
+                if subs:
+                    worst = max(subs, key=lambda s: s.flops + s.hbm_bytes)
+                    _accumulate(out, worst, 1)
+                out.hbm_bytes += instr_bytes(ins, comp)
+            elif op in _CALLER_OPS:
+                for sub_name in _called_comps(ins):
+                    sub = comp_cost(sub_name)
+                    out.flops += sub.flops
+                    out.int8_flops += sub.int8_flops
+                out.hbm_bytes += instr_bytes(ins, comp)
+            elif op not in _SKIP_BYTES_OPS:
+                out.hbm_bytes += instr_bytes(ins, comp)
+        return out
+
+    def _called_comps(ins: Instr) -> List[str]:
+        out = [m.group(1) for m in _CALL_SINGLE_RE.finditer(ins.line)]
+        for m in _CALL_BRANCH_RE.finditer(ins.line):
+            for nm in m.group(1).split(","):
+                nm = nm.strip().lstrip("%")
+                if nm:
+                    out.append(nm)
+        return out
+
+    called = set()
+    for comp in comps.values():
+        for ins in comp.instrs:
+            called.update(_called_comps(ins))
+    entries = [n for n in comps if n not in called]
+    total = WalkResult()
+    for e in entries:
+        _accumulate(total, comp_cost(e), 1)
+    return total
+
+
+def top_contributors(text: str, k: int = 15):
+    """Per-instruction (bytes, flops) x trip-multiplier attribution — the
+    §Perf profiling view. Returns two lists of dicts sorted desc."""
+    comps = parse_hlo(text)
+    by_bytes: Dict[str, float] = {}
+    by_flops: Dict[str, float] = {}
+
+    def _called(ins):
+        out = [m.group(1) for m in _CALL_SINGLE_RE.finditer(ins.line)]
+        for m in _CALL_BRANCH_RE.finditer(ins.line):
+            out += [x.strip().lstrip("%") for x in m.group(1).split(",") if x]
+        return out
+
+    def visit(name: str, mult: float, depth: int):
+        comp = comps.get(name)
+        if comp is None or depth > 12:
+            return
+        for ins in comp.instrs:
+            op = ins.opcode
+            if op == "while":
+                mb = re.search(r"body=%?([\w.\-]+)", ins.line)
+                mcnd = re.search(r"condition=%?([\w.\-]+)", ins.line)
+                trips = _trip_count(comps[mcnd.group(1)]) \
+                    if mcnd and mcnd.group(1) in comps else 1
+                if mb:
+                    visit(mb.group(1), mult * trips, depth + 1)
+                continue
+            key = (f"{name}/{ins.name}:{op} {ins.result[:48]}")
+            if op == "dot":
+                f, _ = _dot_flops(ins, comp)
+                by_flops[key] = by_flops.get(key, 0.0) + f * mult
+            if op in _CALLER_OPS:
+                for sub in _called(ins):
+                    sc = comps.get(sub)
+                    if sc:
+                        for si in sc.instrs:
+                            if si.opcode == "dot":
+                                f, _ = _dot_flops(si, sc)
+                                kk = f"{sub}/{si.name}:dot(fused)"
+                                by_flops[kk] = by_flops.get(kk, 0) + f * mult
+            if op not in _SKIP_BYTES_OPS:
+                b = _shape_bytes(ins.result) + _operand_bytes(ins, comp)
+                by_bytes[key] = by_bytes.get(key, 0.0) + b * mult
+
+    called = set()
+    for comp in comps.values():
+        for ins in comp.instrs:
+            called.update(_called(ins))
+    for e in [n for n in comps if n not in called]:
+        visit(e, 1.0, 0)
+    top_b = sorted(by_bytes.items(), key=lambda x: -x[1])[:k]
+    top_f = sorted(by_flops.items(), key=lambda x: -x[1])[:k]
+    return ([{"instr": a, "bytes": b} for a, b in top_b],
+            [{"instr": a, "flops": f} for a, f in top_f])

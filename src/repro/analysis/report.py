@@ -1,0 +1,102 @@
+"""Aggregate dry-run JSONs into the EXPERIMENTS.md §Dry-run / §Roofline
+tables. ``python -m repro.analysis.report results/dryrun``"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+
+def load(dirname: str):
+    cells = {}
+    for f in sorted(os.listdir(dirname)):
+        if not f.endswith(".json"):
+            continue
+        d = json.load(open(os.path.join(dirname, f)))
+        cells[(d["arch"], d["shape"], d["mesh"])] = d
+    return cells
+
+
+def fmt_bytes(b):
+    if b >= 1e12:
+        return f"{b / 1e12:.2f}T"
+    if b >= 1e9:
+        return f"{b / 1e9:.2f}G"
+    return f"{b / 1e6:.1f}M"
+
+
+def dryrun_table(cells) -> str:
+    rows = ["| arch | shape | mesh | status | compile_s | args/dev | temp/dev"
+            " | collectives (AR/AG/RS/A2A/CP) |",
+            "|---|---|---|---|---|---|---|---|"]
+    for (a, s, m), d in sorted(cells.items()):
+        if d["status"] != "ok":
+            rows.append(f"| {a} | {s} | {m} | {d['status']}: "
+                        f"{d.get('reason', d.get('error', ''))[:60]} | | | | |")
+            continue
+        ma = d.get("memory_analysis", {})
+        c = d["collectives"]["count_by_kind"]
+        cc = "/".join(str(int(c.get(k, 0))) for k in
+                      ("all-reduce", "all-gather", "reduce-scatter",
+                       "all-to-all", "collective-permute"))
+        rows.append(
+            f"| {a} | {s} | {m} | ok | {d['compile_s']} | "
+            f"{fmt_bytes(ma.get('argument_size_in_bytes', 0))} | "
+            f"{fmt_bytes(ma.get('temp_size_in_bytes', 0))} | {cc} |")
+    return "\n".join(rows)
+
+
+def roofline_table(cells, mesh="single") -> str:
+    rows = ["| arch | shape | compute_s | memory_s | collective_s | "
+            "dominant | MODEL_FLOPs | useful_ratio | roofline_frac |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for (a, s, m), d in sorted(cells.items()):
+        if m != mesh or d["status"] != "ok":
+            continue
+        r = d["roofline"]
+        rows.append(
+            f"| {a} | {s} | {r['compute_s']:.3e} | {r['memory_s']:.3e} | "
+            f"{r['collective_s']:.3e} | **{r['dominant']}** | "
+            f"{r['model_flops_global']:.2e} | "
+            f"{r['useful_flops_ratio']:.3f} | "
+            f"{r['roofline_fraction']:.4f} |")
+    return "\n".join(rows)
+
+
+def pick_hillclimb(cells):
+    """worst roofline fraction / most collective-bound / most
+    paper-representative among single-mesh train cells."""
+    singles = {k: v for k, v in cells.items()
+               if k[2] == "single" and v["status"] == "ok"}
+    worst = min(singles.items(),
+                key=lambda kv: kv[1]["roofline"]["roofline_fraction"])
+    coll = max(singles.items(),
+               key=lambda kv: (kv[1]["roofline"]["collective_s"]
+                               / max(kv[1]["roofline"]["bound_s"]
+                                     if "bound_s" in kv[1]["roofline"]
+                                     else max(kv[1]["roofline"]["compute_s"],
+                                              kv[1]["roofline"]["memory_s"],
+                                              kv[1]["roofline"]
+                                              ["collective_s"]), 1e-30)))
+    return worst[0], coll[0]
+
+
+def main():
+    d = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun"
+    cells = load(d)
+    ok = sum(1 for c in cells.values() if c["status"] == "ok")
+    sk = sum(1 for c in cells.values() if c["status"] == "skipped")
+    print(f"cells: {len(cells)} ok={ok} skipped={sk} "
+          f"err={len(cells) - ok - sk}\n")
+    print("## Dry-run\n")
+    print(dryrun_table(cells))
+    print("\n## Roofline (single-pod 16x16)\n")
+    print(roofline_table(cells, "single"))
+    print("\n## Roofline (multi-pod 2x16x16)\n")
+    print(roofline_table(cells, "multi"))
+    w, c = pick_hillclimb(cells)
+    print(f"\nworst-fraction cell: {w}\nmost-collective-bound: {c}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,223 @@
+"""Roofline-term derivation from a compiled dry-run artifact.
+
+    compute term    = HLO_FLOPs / (chips * peak_FLOP/s)
+    memory term     = HLO_bytes / (chips * HBM_bw)
+    collective term = collective_bytes / (chips * link_bw)
+
+FLOPs / bytes come from ``compiled.cost_analysis()``. Collective bytes are
+parsed from the post-SPMD optimized HLO (``compiled.as_text()``): for each
+all-reduce / all-gather / reduce-scatter / all-to-all / collective-permute we
+sum the payload (result-shape bytes; for reduce-scatter the operand shape),
+which approximates per-device wire bytes of one ring pass.
+
+Hardware model (TPU v5e target): 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI. INT8 MXU peak is 2x bf16 (394 TOPS) — the GSE int8 path
+uses ``int8_fraction`` to credit it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Optional
+
+PEAK_BF16 = 197e12          # FLOP/s per chip
+PEAK_INT8 = 394e12          # int8 MAC ops/s per chip
+HBM_BW = 819e9              # bytes/s per chip
+LINK_BW = 50e9              # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "tuple": 0, "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Total bytes of an HLO shape string like 'f32[128,1024]' or a tuple."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: dict
+    count_by_kind: dict
+    total_bytes: int
+
+    def to_dict(self):
+        return {"bytes_by_kind": self.bytes_by_kind,
+                "count_by_kind": self.count_by_kind,
+                "total_bytes": self.total_bytes}
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum payload bytes of every collective op in optimized HLO text."""
+    bytes_by = {k: 0 for k in _COLLECTIVES}
+    count_by = {k: 0 for k in _COLLECTIVES}
+    # one instruction per line in HLO text: "%name = <shape> opcode(...)"
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(\([^)]*\)|[\w\[\],{}\s]+?)\s+"
+                     r"([\w-]+)\(", s)
+        if not m:
+            continue
+        shape_str, opcode = m.group(1), m.group(2)
+        # normalize: 'all-reduce-start' etc count as their base op
+        base = None
+        for c in _COLLECTIVES:
+            if opcode == c or opcode.startswith(c + "-"):
+                base = c
+                break
+        if base is None:
+            continue
+        nbytes = _shape_bytes(shape_str)
+        bytes_by[base] += nbytes
+        count_by[base] += 1
+    total = sum(bytes_by.values())
+    return CollectiveStats(bytes_by, count_by, total)
+
+
+@dataclasses.dataclass
+class Roofline:
+    """All HLO-derived quantities are PER DEVICE — the post-SPMD optimized
+    module is the per-device program. ``model_flops`` is GLOBAL (6·N·D·tokens
+    over the whole batch) and is divided by ``chips`` where compared."""
+    flops: float                # per-device HLO FLOPs
+    hbm_bytes: float            # per-device HLO bytes accessed
+    collective_bytes: float     # per-device wire bytes (summed payloads)
+    chips: int
+    model_flops: float = 0.0    # GLOBAL 6*N*D (or 6*N_active*D)
+    int8_fraction: float = 0.0  # fraction of FLOPs on the int8 MXU path
+    xla_cost_flops: float = 0.0     # XLA's own (while-body-once) numbers,
+    xla_cost_bytes: float = 0.0     # kept for cross-checking
+    while_trips: list = dataclasses.field(default_factory=list)
+
+    @property
+    def compute_s(self) -> float:
+        peak = PEAK_BF16 * (1 - self.int8_fraction) \
+            + PEAK_INT8 * self.int8_fraction
+        return self.flops / peak
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes / LINK_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """(global model flops / chips) / per-device HLO flops — how much of
+        compiled compute is useful model math (catches remat/redundancy)."""
+        if not self.flops:
+            return 0.0
+        return (self.model_flops / self.chips) / self.flops
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Score axis: time the ideal machine needs for the useful model
+        FLOPs vs the time the compiled program is bound by — i.e. achieved
+        fraction of bf16 roofline."""
+        if not self.model_flops or not self.bound_s:
+            return 0.0
+        ideal = self.model_flops / (self.chips * PEAK_BF16)
+        return ideal / self.bound_s
+
+    def to_dict(self):
+        return {
+            "flops_per_device": self.flops, "hbm_bytes_per_device":
+            self.hbm_bytes, "collective_bytes_per_device":
+            self.collective_bytes, "chips": self.chips,
+            "model_flops_global": self.model_flops,
+            "int8_fraction": self.int8_fraction,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "xla_cost_flops": self.xla_cost_flops,
+            "xla_cost_bytes": self.xla_cost_bytes,
+            "n_while_loops": len(self.while_trips),
+        }
+
+
+def from_compiled(compiled, chips: int, model_flops: float = 0.0,
+                  int8_fraction: float = 0.0,
+                  hlo_text: Optional[str] = None) -> Roofline:
+    """Preferred path: trip-count-aware HLO walk (hlo_walk). XLA's own
+    cost_analysis counts while bodies once — useless under scan-over-layers
+    — but is retained in the result dict for cross-checking."""
+    from repro.analysis import hlo_walk
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):         # older API returns [dict]
+        cost = cost[0]
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    w = hlo_walk.walk(text)
+    coll = CollectiveStats(
+        {k: float(v) for k, v in w.collective_bytes.items()},
+        {k: float(v) for k, v in w.collective_counts.items()},
+        float(w.total_collective_bytes))
+    if int8_fraction == 0.0 and w.flops > 0:
+        int8_fraction = w.int8_flops / w.flops
+    roof = Roofline(flops=float(w.flops), hbm_bytes=float(w.hbm_bytes),
+                    collective_bytes=float(w.total_collective_bytes),
+                    chips=chips, model_flops=model_flops,
+                    int8_fraction=int8_fraction)
+    roof.xla_cost_flops = float(cost.get("flops", 0.0))
+    roof.xla_cost_bytes = float(cost.get("bytes accessed", 0.0))
+    roof.while_trips = list(w.while_trips)
+    return roof, coll
+
+
+def model_flops_train(cfg, tokens: int) -> float:
+    """6*N*D with N = active params (MoE-aware)."""
+    return 6.0 * cfg.active_param_count() * tokens
+
+
+def model_flops_decode(cfg, batch: int, context: int) -> float:
+    """Per decode step: 2*N_active*B (GEMMs) + attention KV reads are
+    memory-side; compute credit = 2*N_active*B."""
+    return 2.0 * cfg.active_param_count() * batch
+
+
+def memory_analysis_dict(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    if ma is None:
+        return {}
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out

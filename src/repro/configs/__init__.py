@@ -1,0 +1,34 @@
+"""Architecture registry: one module per assigned architecture (exact public
+configs) + the paper's own LLaMA-2-7B-like default. ``get_config(name)``
+returns the full ModelConfig; ``reduced_config(name)`` returns the same
+family scaled down for CPU smoke tests."""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+ARCHS = [
+    "whisper_small", "llava_next_34b", "granite_3_2b", "qwen2_1_5b",
+    "gemma_7b", "qwen3_14b", "mamba2_2_7b", "granite_moe_1b_a400m",
+    "arctic_480b", "hymba_1_5b", "llama2_7b",
+]
+
+_ALIAS = {a.replace("_", "-"): a for a in ARCHS}
+
+
+def get_config(name: str):
+    mod = importlib.import_module(
+        f"repro.configs.{_ALIAS.get(name, name)}")
+    return mod.config()
+
+
+def reduced_config(name: str):
+    """CPU-scale config of the same family (smoke tests)."""
+    mod = importlib.import_module(
+        f"repro.configs.{_ALIAS.get(name, name)}")
+    return mod.reduced()
+
+
+def all_arch_names(include_paper_default: bool = False):
+    out = [a for a in ARCHS if a != "llama2_7b"]
+    return out + (["llama2_7b"] if include_paper_default else [])

@@ -1,0 +1,18 @@
+"""arctic-480b [moe]: 35L d_model=7168 56H (GQA kv=8) d_ff=4864 vocab=32000,
+MoE 128e top-2 + dense residual. [hf:Snowflake/snowflake-arctic-base]"""
+import dataclasses
+from repro.models.config import ModelConfig
+
+
+def config():
+    return ModelConfig(
+        name="arctic-480b", family="moe", n_layers=35, d_model=7168,
+        n_heads=56, n_kv_heads=8, d_ff=4864, vocab=32000, act="silu",
+        n_experts=128, top_k=2, moe_d_ff=4864, dense_residual=True,
+        vocab_pad_multiple=2048)
+
+
+def reduced():
+    return dataclasses.replace(
+        config(), n_layers=2, d_model=64, n_heads=8, n_kv_heads=2, d_ff=64,
+        moe_d_ff=64, n_experts=8, top_k=2, vocab=211, vocab_pad_multiple=64)

@@ -1,0 +1,18 @@
+"""gemma-7b [dense]: 28L d_model=3072 16H (GQA kv=16) d_ff=24576
+vocab=256000 — GeGLU, head_dim=256, tied embeddings. [arXiv:2403.08295]"""
+import dataclasses
+from repro.models.config import ModelConfig
+
+
+def config():
+    return ModelConfig(
+        name="gemma-7b", family="dense", n_layers=28, d_model=3072,
+        n_heads=16, n_kv_heads=16, head_dim=256, d_ff=24576, vocab=256000,
+        act="gelu", tie_embeddings=True, rope_theta=10000.0,
+        vocab_pad_multiple=2048)
+
+
+def reduced():
+    return dataclasses.replace(
+        config(), n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+        head_dim=32, d_ff=128, vocab=211, vocab_pad_multiple=64)

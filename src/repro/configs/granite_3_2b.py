@@ -1,0 +1,17 @@
+"""granite-3-2b [dense]: 40L d_model=2048 32H (GQA kv=8) d_ff=8192
+vocab=49155 — GQA, tied embeddings. [hf:ibm-granite/granite-3.0-2b-base]"""
+import dataclasses
+from repro.models.config import ModelConfig
+
+
+def config():
+    return ModelConfig(
+        name="granite-3-2b", family="dense", n_layers=40, d_model=2048,
+        n_heads=32, n_kv_heads=8, d_ff=8192, vocab=49155, act="silu",
+        tie_embeddings=True, rope_theta=10000.0, vocab_pad_multiple=2048)
+
+
+def reduced():
+    return dataclasses.replace(
+        config(), n_layers=2, d_model=64, n_heads=8, n_kv_heads=2, d_ff=128,
+        vocab=211, vocab_pad_multiple=64)

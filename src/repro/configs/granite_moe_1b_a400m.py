@@ -1,0 +1,18 @@
+"""granite-moe-1b-a400m [moe]: 24L d_model=1024 16H (GQA kv=8) d_ff=512
+vocab=49155, MoE 32e top-8. [hf:ibm-granite/granite-3.0-1b-a400m-base]"""
+import dataclasses
+from repro.models.config import ModelConfig
+
+
+def config():
+    return ModelConfig(
+        name="granite-moe-1b-a400m", family="moe", n_layers=24, d_model=1024,
+        n_heads=16, n_kv_heads=8, d_ff=512, vocab=49155, act="silu",
+        n_experts=32, top_k=8, moe_d_ff=512, tie_embeddings=True,
+        vocab_pad_multiple=2048)
+
+
+def reduced():
+    return dataclasses.replace(
+        config(), n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=32,
+        moe_d_ff=32, n_experts=4, top_k=2, vocab=211, vocab_pad_multiple=64)

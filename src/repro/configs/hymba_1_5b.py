@@ -1,0 +1,22 @@
+"""hymba-1.5b [hybrid]: 32L d_model=1600 25H (GQA kv=5) d_ff=5504
+vocab=32001, ssm_state=16 — parallel attn+mamba heads; SWA everywhere except
+3 full-attention layers (first/middle/last). [arXiv:2411.13676]"""
+import dataclasses
+from repro.models.config import ModelConfig
+
+
+def config():
+    return ModelConfig(
+        name="hymba-1.5b", family="hybrid", hybrid=True, n_layers=32,
+        d_model=1600, n_heads=25, n_kv_heads=5, head_dim=64, d_ff=5504,
+        vocab=32001, act="silu", ssm_state=16, ssm_expand=2,
+        ssm_head_dim=64, ssm_groups=1, ssm_chunk=256, sliding_window=1024,
+        global_attn_layers=(0, 15, 31), vocab_pad_multiple=2048)
+
+
+def reduced():
+    return dataclasses.replace(
+        config(), n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+        head_dim=16, d_ff=128, ssm_state=16, ssm_head_dim=16, ssm_chunk=16,
+        sliding_window=8, global_attn_layers=(0,), vocab=211,
+        vocab_pad_multiple=64)

@@ -1,0 +1,18 @@
+"""LLaMA-2-7B — the paper's own primary subject (Tab. 1/8): 32L d_model=4096
+32H MHA d_ff=11008 vocab=32000. Used by the paper-validation benchmarks and
+as the memory-model reference."""
+import dataclasses
+from repro.models.config import ModelConfig
+
+
+def config():
+    return ModelConfig(
+        name="llama2-7b", family="dense", n_layers=32, d_model=4096,
+        n_heads=32, n_kv_heads=32, d_ff=11008, vocab=32000, act="silu",
+        vocab_pad_multiple=2048)
+
+
+def reduced():
+    return dataclasses.replace(
+        config(), n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
+        vocab=211, vocab_pad_multiple=64)

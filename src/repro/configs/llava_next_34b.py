@@ -1,0 +1,18 @@
+"""llava-next-34b [vlm]: 60L d_model=7168 56H (GQA kv=8) d_ff=20480
+vocab=64000 — anyres tiling (frontend stub feeds merged text+patch
+embeddings). [hf:llava-hf/llava-v1.6-*]"""
+import dataclasses
+from repro.models.config import ModelConfig
+
+
+def config():
+    return ModelConfig(
+        name="llava-next-34b", family="vlm", n_layers=60, d_model=7168,
+        n_heads=56, n_kv_heads=8, d_ff=20480, vocab=64000, act="silu",
+        rope_theta=5_000_000.0, frontend="vlm", vocab_pad_multiple=2048)
+
+
+def reduced():
+    return dataclasses.replace(
+        config(), n_layers=2, d_model=64, n_heads=8, n_kv_heads=2, d_ff=128,
+        vocab=211, vocab_pad_multiple=64)

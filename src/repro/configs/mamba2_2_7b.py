@@ -1,0 +1,18 @@
+"""mamba2-2.7b [ssm]: 64L d_model=2560 (attn-free) vocab=50280,
+ssm_state=128 — SSD. [arXiv:2405.21060]"""
+import dataclasses
+from repro.models.config import ModelConfig
+
+
+def config():
+    return ModelConfig(
+        name="mamba2-2.7b", family="ssm", n_layers=64, d_model=2560,
+        n_heads=1, n_kv_heads=1, d_ff=0, vocab=50280, ssm_state=128,
+        ssm_expand=2, ssm_head_dim=64, ssm_groups=1, ssm_chunk=256,
+        tie_embeddings=False, vocab_pad_multiple=2048)
+
+
+def reduced():
+    return dataclasses.replace(
+        config(), n_layers=2, d_model=64, ssm_state=16, ssm_head_dim=16,
+        ssm_chunk=16, vocab=211, vocab_pad_multiple=64)

@@ -1,0 +1,18 @@
+"""qwen2-1.5b [dense]: 28L d_model=1536 12H (GQA kv=2) d_ff=8960
+vocab=151936 — GQA, QKV bias, tied embeddings. [arXiv:2407.10671]"""
+import dataclasses
+from repro.models.config import ModelConfig
+
+
+def config():
+    return ModelConfig(
+        name="qwen2-1.5b", family="dense", n_layers=28, d_model=1536,
+        n_heads=12, n_kv_heads=2, d_ff=8960, vocab=151936, act="silu",
+        qkv_bias=True, tie_embeddings=True, rope_theta=1_000_000.0,
+        vocab_pad_multiple=2048)
+
+
+def reduced():
+    return dataclasses.replace(
+        config(), n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+        vocab=211, vocab_pad_multiple=64)

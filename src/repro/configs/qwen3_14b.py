@@ -1,0 +1,18 @@
+"""qwen3-14b [dense]: 40L d_model=5120 40H (GQA kv=8) d_ff=17408
+vocab=151936 — qk_norm, GQA. [hf:Qwen/Qwen3-*]"""
+import dataclasses
+from repro.models.config import ModelConfig
+
+
+def config():
+    return ModelConfig(
+        name="qwen3-14b", family="dense", n_layers=40, d_model=5120,
+        n_heads=40, n_kv_heads=8, head_dim=128, d_ff=17408, vocab=151936,
+        act="silu", qk_norm=True, rope_theta=1_000_000.0,
+        vocab_pad_multiple=2048)
+
+
+def reduced():
+    return dataclasses.replace(
+        config(), n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+        head_dim=16, d_ff=128, vocab=211, vocab_pad_multiple=64)

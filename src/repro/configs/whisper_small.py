@@ -1,0 +1,20 @@
+"""whisper-small [audio]: 12L d_model=768 12H (GQA kv=12) d_ff=3072
+vocab=51865 — enc-dec, conv frontend (stub). [arXiv:2212.04356]"""
+import dataclasses
+from repro.models.config import ModelConfig
+
+
+def config():
+    return ModelConfig(
+        name="whisper-small", family="encdec", is_encoder_decoder=True,
+        n_layers=12, n_encoder_layers=12, d_model=768, n_heads=12,
+        n_kv_heads=12, d_ff=3072, vocab=51865, act="gelu_mlp",
+        norm_eps=1e-5, causal=True, encoder_len=1500, frontend="audio",
+        vocab_pad_multiple=2048)
+
+
+def reduced():
+    return dataclasses.replace(
+        config(), n_layers=2, n_encoder_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=4, d_ff=128, vocab=211, encoder_len=16,
+        vocab_pad_multiple=64)

@@ -1,0 +1,22 @@
+"""Core GSQ-Tuning primitives: GSE format, NF4, FP8 baseline, QCD matmul,
+quantization policy, and the GSQ LoRA linear layer."""
+from repro.core.gse import (GSETensor, gse_quantize, gse_dequantize,
+                            gse_fake_quant, gse_matmul_reference,
+                            gse_bits_per_value, quantization_error,
+                            DEFAULT_GROUP, EXP_BITS, EXP_BIAS)
+from repro.core.nf4 import NF4Tensor, nf4_quantize, nf4_dequantize, nf4_fake_quant
+from repro.core.fp8 import fp8_fake_quant, fp8_quantization_error
+from repro.core.qcd import quantized_matmul, effective_group_size
+from repro.core.policy import QuantPolicy
+from repro.core.lora import (init_gsq_linear, apply_gsq_linear, merge_lora,
+                             gsq_param_count)
+
+__all__ = [
+    "GSETensor", "gse_quantize", "gse_dequantize", "gse_fake_quant",
+    "gse_matmul_reference", "gse_bits_per_value", "quantization_error",
+    "DEFAULT_GROUP", "EXP_BITS", "EXP_BIAS",
+    "NF4Tensor", "nf4_quantize", "nf4_dequantize", "nf4_fake_quant",
+    "fp8_fake_quant", "fp8_quantization_error",
+    "quantized_matmul", "effective_group_size", "QuantPolicy",
+    "init_gsq_linear", "apply_gsq_linear", "merge_lora", "gsq_param_count",
+]

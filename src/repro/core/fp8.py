@@ -1,0 +1,50 @@
+"""FP8 (E4M3 / E5M2) simulated quantization — the paper's Table 2/13 baseline.
+
+Uses ml_dtypes' float8 types (bit-exact casts) with per-group absmax scaling
+to the format's max-normal, mirroring how FP8 training frameworks scale
+tensors (per-tensor or per-group delayed scaling). Grouped scaling makes the
+comparison to GSE apples-to-apples at equal metadata overhead.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import ml_dtypes
+
+_FMT = {
+    "e4m3": (jnp.float8_e4m3fn, 448.0),
+    "e5m2": (jnp.float8_e5m2, 57344.0),
+}
+
+
+@partial(jax.jit, static_argnames=("fmt", "group_size"))
+def fp8_fake_quant(x: jax.Array, fmt: str = "e4m3",
+                   group_size: int = 32) -> jax.Array:
+    """Quantize-dequantize ``x`` to FP8 along its last axis with per-group
+    absmax scaling (group_size=None/0 for per-tensor)."""
+    dt, fmax = _FMT[fmt]
+    xf = jnp.asarray(x, jnp.float32)
+    if group_size:
+        k = xf.shape[-1]
+        g = group_size if k % group_size == 0 else 1
+        xg = xf.reshape(*xf.shape[:-1], k // g, g)
+        amax = jnp.max(jnp.abs(xg), axis=-1, keepdims=True)
+        scale = jnp.where(amax > 0, amax / fmax, 1.0)
+        y = (xg / scale).astype(dt).astype(jnp.float32) * scale
+        return y.reshape(xf.shape).astype(x.dtype)
+    amax = jnp.max(jnp.abs(xf))
+    scale = jnp.where(amax > 0, amax / fmax, 1.0)
+    return ((xf / scale).astype(dt).astype(jnp.float32) * scale).astype(x.dtype)
+
+
+def fp8_quantization_error(x: jax.Array, fmt: str = "e4m3",
+                           group_size: int = 32) -> dict:
+    xf = jnp.asarray(x, jnp.float32)
+    xq = fp8_fake_quant(xf, fmt, group_size)
+    err = xf - xq
+    mse = jnp.mean(err ** 2)
+    sig = jnp.mean(xf ** 2)
+    return {"mse": mse,
+            "sqnr_db": 10.0 * jnp.log10(jnp.where(mse > 0, sig / mse, jnp.inf))}

@@ -1,0 +1,249 @@
+"""Group-Shared Exponents Integer (GSE) format.
+
+The paper's core numeric format: a group of ``group_size`` contiguous values
+along the matmul contraction axis shares one 5-bit exponent; each value keeps
+a signed integer mantissa of ``bits`` total bits (symmetric range, no implicit
+leading one):
+
+    x_i ~= m_i * 2^(e_g)          m_i in [-(2^(b-1)-1), 2^(b-1)-1]
+
+Storage is ``N*b + E`` bits per group versus ``N*(E+M+1)`` for FP — the
+shared exponent amortizes to ~0.16 bits/value at N=32.
+
+This module is the *value-space* reference implementation used throughout the
+framework (models, QCD matmul, gradient compression). The Pallas kernels in
+``repro.kernels`` implement the same math with explicit VMEM tiling and are
+validated against this module.
+
+Conventions
+-----------
+* Quantization always happens along the **last** axis of the tensor handed in
+  (callers transpose so the contraction axis is last).
+* The exponent is stored as int8 holding the *unbiased* exponent value in
+  [-EXP_BIAS, EXP_BIAS - 1] (5-bit field, bias 16).
+* Mantissas are stored in int8 regardless of ``bits`` (5..8); values are
+  clamped to the b-bit symmetric range. True b-bit packing is accounted for
+  analytically by :func:`gse_bits_per_value` (used by the memory model).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+EXP_BITS = 5                 # fixed by the paper (Sec. 2.2)
+EXP_BIAS = 16                # unbiased exponent range [-16, 15]
+EXP_MIN = -EXP_BIAS
+EXP_MAX = EXP_BIAS - 1
+DEFAULT_GROUP = 32           # paper's default group size (Tab. 6)
+
+
+def qmax_for_bits(bits: int) -> int:
+    """Largest mantissa magnitude for a b-bit symmetric signed integer."""
+    if not 2 <= bits <= 8:
+        raise ValueError(f"GSE bits must be in [2, 8], got {bits}")
+    return (1 << (bits - 1)) - 1
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class GSETensor:
+    """A tensor held in GSE format.
+
+    Attributes:
+      mantissa: int8, same shape as the source tensor.
+      exponent: int8, shape = source shape with last dim ``// group_size``.
+      bits: mantissa bit-width (metadata).
+      group_size: values per shared exponent (metadata).
+    """
+    mantissa: jax.Array
+    exponent: jax.Array
+    bits: int
+    group_size: int
+
+    @property
+    def shape(self):
+        return self.mantissa.shape
+
+    @property
+    def dtype(self):
+        return jnp.int8
+
+    def tree_flatten(self):
+        return (self.mantissa, self.exponent), (self.bits, self.group_size)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], aux[0], aux[1])
+
+    def dequantize(self, dtype=jnp.float32) -> jax.Array:
+        return gse_dequantize(self, dtype)
+
+    def nbytes_packed(self) -> int:
+        """True packed size in bytes (b-bit mantissas + 5-bit exponents)."""
+        n = int(np.prod(self.mantissa.shape))
+        g = int(np.prod(self.exponent.shape))
+        return (n * self.bits + g * EXP_BITS + 7) // 8
+
+
+def _group_reshape(x: jax.Array, group_size: int) -> jax.Array:
+    """(..., K) -> (..., K // g, g). K must be divisible by g."""
+    k = x.shape[-1]
+    if k % group_size != 0:
+        raise ValueError(
+            f"last dim {k} not divisible by group_size {group_size}")
+    return x.reshape(*x.shape[:-1], k // group_size, group_size)
+
+
+def compute_group_exponent(x: jax.Array, bits: int, group_size: int) -> jax.Array:
+    """Per-group shared exponent e_g = ceil(log2(amax / qmax)), clamped to 5 bits.
+
+    Returns int8 of shape (..., K // group_size).
+    """
+    qmax = qmax_for_bits(bits)
+    xg = _group_reshape(jnp.asarray(x, jnp.float32), group_size)
+    amax = jnp.max(jnp.abs(xg), axis=-1)
+    # ceil(log2(amax/qmax)); zero groups pinned to EXP_MIN.
+    safe = jnp.where(amax > 0, amax, 1.0)
+    e = jnp.ceil(jnp.log2(safe / qmax))
+    e = jnp.where(amax > 0, e, float(EXP_MIN))
+    e = jnp.clip(e, EXP_MIN, EXP_MAX)
+    return e.astype(jnp.int8)
+
+
+def _round_to_nearest_even(x: jax.Array) -> jax.Array:
+    return jnp.round(x)  # jnp.round is round-half-to-even, matching RTN HW.
+
+
+def _stochastic_round(x: jax.Array, key: jax.Array) -> jax.Array:
+    floor = jnp.floor(x)
+    frac = x - floor
+    return floor + (jax.random.uniform(key, x.shape) < frac).astype(x.dtype)
+
+
+@partial(jax.jit, static_argnames=("bits", "group_size", "stochastic"))
+def gse_quantize(
+    x: jax.Array,
+    bits: int = 6,
+    group_size: int = DEFAULT_GROUP,
+    *,
+    stochastic: bool = False,
+    key: jax.Array | None = None,
+) -> GSETensor:
+    """Quantize ``x`` to GSE along its last axis.
+
+    Round-to-nearest by default (the paper's choice); stochastic rounding is
+    exposed for the gradient-compression path.
+    """
+    qmax = qmax_for_bits(bits)
+    xf = jnp.asarray(x, jnp.float32)
+    e = compute_group_exponent(xf, bits, group_size)
+    xg = _group_reshape(xf, group_size)
+    scale = jnp.exp2(e.astype(jnp.float32))[..., None]
+    y = xg / scale
+    if stochastic:
+        if key is None:
+            raise ValueError("stochastic rounding requires a PRNG key")
+        m = _stochastic_round(y, key)
+    else:
+        m = _round_to_nearest_even(y)
+    m = jnp.clip(m, -qmax, qmax).astype(jnp.int8)
+    m = m.reshape(x.shape)
+    return GSETensor(m, e, bits, group_size)
+
+
+@partial(jax.jit, static_argnames=("dtype",))
+def gse_dequantize(t: GSETensor, dtype=jnp.float32) -> jax.Array:
+    mg = _group_reshape(t.mantissa.astype(jnp.float32), t.group_size)
+    scale = jnp.exp2(t.exponent.astype(jnp.float32))[..., None]
+    return (mg * scale).reshape(t.mantissa.shape).astype(dtype)
+
+
+@partial(jax.jit, static_argnames=("bits", "group_size"))
+def gse_fake_quant(x: jax.Array, bits: int = 6,
+                   group_size: int = DEFAULT_GROUP) -> jax.Array:
+    """Quantize-dequantize in one shot (same dtype in/out).
+
+    This is the simulation primitive used inside QCD matmuls. The fat
+    tensor math stays in the INPUT dtype (bf16 on the training path —
+    §Perf iteration 5): dividing by a power-of-two scale is exact in any
+    binary float, ``round`` of values <= qmax <= 127 is exact in bf16, and
+    only the per-group amax/exponent stats (tiny) run in fp32.
+    """
+    dtype = x.dtype
+    qmax = qmax_for_bits(bits)
+    xg = _group_reshape(x, group_size)
+    amax = jnp.max(jnp.abs(xg.astype(jnp.float32)), axis=-1, keepdims=True)
+    safe = jnp.where(amax > 0, amax, 1.0)
+    e = jnp.clip(jnp.ceil(jnp.log2(safe / qmax)), EXP_MIN, EXP_MAX)
+    inv = jnp.exp2(-e).astype(dtype)
+    # zero groups: scale = 0 folds the zeroing into the dequant multiply —
+    # one fat elementwise pass fewer than a separate where (§Perf iter 8)
+    scale = jnp.where(amax > 0, jnp.exp2(e), 0.0).astype(dtype)
+    m = jnp.clip(jnp.round(xg * inv), -qmax, qmax)
+    return (m * scale).reshape(x.shape).astype(dtype)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def gse_fake_quant_ste(x: jax.Array, bits: int = 6,
+                       group_size: int = DEFAULT_GROUP) -> jax.Array:
+    """Straight-through-estimator fake quant: forward = GSE round-trip,
+    backward = identity. For quantizing activation-activation GEMO operands
+    (e.g. SSD intra-chunk matmuls) where the plain ``round`` VJP would
+    zero the gradient."""
+    return gse_fake_quant(x, bits, group_size)
+
+
+def _ste_fwd(x, bits, group_size):
+    return gse_fake_quant(x, bits, group_size), None
+
+
+def _ste_bwd(bits, group_size, _, g):
+    return (g,)
+
+
+gse_fake_quant_ste.defvjp(_ste_fwd, _ste_bwd)
+
+
+def gse_matmul_reference(a: GSETensor, b: GSETensor) -> jax.Array:
+    """Reference GSE×GSE matmul: (M, K) @ (N, K)^T -> (M, N) in fp32.
+
+    Both operands are grouped along K. Computed exactly as the paper's
+    eq. for the dot product: per-group int MAC then scale by 2^(eA+eB).
+    """
+    if a.group_size != b.group_size:
+        raise ValueError("group_size mismatch")
+    g = a.group_size
+    m, k = a.mantissa.shape
+    n, k2 = b.mantissa.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch {k} vs {k2}")
+    ag = a.mantissa.reshape(m, k // g, g).astype(jnp.int32)
+    bg = b.mantissa.reshape(n, k // g, g).astype(jnp.int32)
+    # per-group integer dot: (M, N, K//g)
+    prod = jnp.einsum("mgk,ngk->mng", ag, bg)
+    scale = jnp.exp2(
+        (a.exponent[:, None, :].astype(jnp.float32)
+         + b.exponent[None, :, :].astype(jnp.float32)))
+    return jnp.sum(prod.astype(jnp.float32) * scale, axis=-1)
+
+
+def gse_bits_per_value(bits: int, group_size: int = DEFAULT_GROUP) -> float:
+    """Effective storage bits/value including amortized shared exponent."""
+    return bits + EXP_BITS / group_size
+
+
+def quantization_error(x: jax.Array, bits: int,
+                       group_size: int = DEFAULT_GROUP) -> dict:
+    """MSE / SQNR metrics of GSE round-trip on ``x`` (diagnostics/benchmarks)."""
+    xf = jnp.asarray(x, jnp.float32)
+    xq = gse_fake_quant(xf, bits, group_size)
+    err = xf - xq
+    mse = jnp.mean(err ** 2)
+    sig = jnp.mean(xf ** 2)
+    sqnr_db = 10.0 * jnp.log10(jnp.where(mse > 0, sig / mse, jnp.inf))
+    return {"mse": mse, "sqnr_db": sqnr_db}

@@ -1,0 +1,125 @@
+"""GSQ linear layer: frozen (NF4) base weight + GSE-quantized LoRA adapters,
+with fully quantized forward/backward GEMMs (paper Sec. 2.3, Fig. 3).
+
+    Y = Q^-1(Q(X) Q(DQ(W_nf4))^T) + s * Q^-1(Q(X) Q(A)^T Q(B)^T)
+
+Parameters live in two pytree buckets so the optimizer only touches adapters:
+
+    frozen = {"w": NF4Tensor | bf16 array, ...}
+    train  = {"lora_a": (r, ic) fp32, "lora_b": (oc, r) fp32}
+
+Module style: plain functions over pytrees (no flax dependency); every model
+in ``repro.models`` builds its projections through :func:`gsq_linear`.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.nf4 import NF4Tensor, nf4_quantize, nf4_fake_quant
+from repro.core.policy import QuantPolicy
+from repro.core.qcd import quantized_matmul
+from repro.core import fp8 as fp8mod
+
+
+def init_gsq_linear(key, in_dim: int, out_dim: int, policy: QuantPolicy,
+                    dtype=jnp.bfloat16, w_init_scale: Optional[float] = None):
+    """Returns (frozen, train) param trees for one linear layer."""
+    kw, ka = jax.random.split(key)
+    scale = w_init_scale if w_init_scale is not None else in_dim ** -0.5
+    w = jax.random.normal(kw, (in_dim, out_dim), jnp.float32) * scale
+    if policy.base_w_nf4:
+        frozen = {"w": nf4_quantize(w)}
+    else:
+        frozen = {"w": w.astype(dtype)}
+    train = {}
+    if policy.rank > 0:
+        r = policy.rank
+        # LoRA init: A ~ N(0, 1/in), B = 0 (adapter starts as identity).
+        train = {
+            "lora_a": jax.random.normal(ka, (in_dim, r), jnp.float32)
+                      * (in_dim ** -0.5),
+            "lora_b": jnp.zeros((r, out_dim), jnp.float32),
+        }
+    return frozen, train
+
+
+def _base_weight(frozen, dtype):
+    w = frozen["w"]
+    if isinstance(w, NF4Tensor):
+        return w.dequantize(dtype)
+    return w.astype(dtype)
+
+
+def _fp8_matmul(x, w, fmt, group):
+    @jax.custom_vjp
+    def mm(x, w):
+        return jnp.matmul(fp8mod.fp8_fake_quant(x, fmt, group),
+                          fp8mod.fp8_fake_quant(w.T, fmt, group).T)
+
+    def fwd(x, w):
+        return mm(x, w), (x, w)
+
+    def bwd(res, dy):
+        x, w = res
+        dyq = fp8mod.fp8_fake_quant(dy, fmt, group)
+        wq = fp8mod.fp8_fake_quant(w, fmt, group)          # along N
+        dx = jnp.matmul(dyq, wq.T)
+        x2 = x.reshape(-1, x.shape[-1])
+        dy2 = dy.reshape(-1, dy.shape[-1])
+        dw = jnp.matmul(fp8mod.fp8_fake_quant(x2.T, fmt, group),
+                        fp8mod.fp8_fake_quant(dy2.T, fmt, group).T)
+        return dx, dw.astype(w.dtype)
+
+    mm.defvjp(fwd, bwd)
+    return mm(x, w)
+
+
+def _qmm(x, w, a_bits, w_bits, g_bits, policy: QuantPolicy):
+    """Dispatch one GEMM through the policy's format."""
+    if policy.fmt == "none" or a_bits is None:
+        return jnp.matmul(x, w)
+    if policy.fmt.startswith("fp8"):
+        return _fp8_matmul(x, w, policy.fmt.split("_")[1], policy.group_size)
+    return quantized_matmul(x, w, a_bits, w_bits, g_bits, policy.group_size)
+
+
+def apply_gsq_linear(frozen, train, x: jax.Array, policy: QuantPolicy,
+                     dtype=jnp.bfloat16) -> jax.Array:
+    """Forward (and, under grad, the paper's quantized backward).
+
+    x: (..., in_dim) -> (..., out_dim). Leading dims are flattened for the
+    GEMMs and restored.
+    """
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1]).astype(dtype)
+    w = _base_weight(frozen, dtype)
+    # Frozen base branch: stop_gradient on W; dX still flows through the
+    # quantized GEMM's backward (paper's dL/dX includes the Q(W) term).
+    y = _qmm(x2, jax.lax.stop_gradient(w),
+             policy.a_bits, policy.w_bits, policy.g_bits, policy)
+    if train:
+        a = train["lora_a"].astype(dtype)
+        b = train["lora_b"].astype(dtype)
+        s = policy.lora_alpha / max(policy.rank, 1)
+        # low-rank branch: both GEMMs quantized at adapter_bits.
+        h = _qmm(x2, a, policy.adapter_bits, policy.adapter_bits,
+                 policy.adapter_bits, policy)
+        y = y + s * _qmm(h, b, policy.adapter_bits, policy.adapter_bits,
+                         policy.adapter_bits, policy)
+    return y.reshape(*lead, -1).astype(dtype)
+
+
+def merge_lora(frozen, train, policy: QuantPolicy, dtype=jnp.bfloat16):
+    """W_eff = W + s·A@B — for export / serving without adapter GEMMs."""
+    w = _base_weight(frozen, jnp.float32)
+    if train:
+        s = policy.lora_alpha / max(policy.rank, 1)
+        w = w + s * (train["lora_a"] @ train["lora_b"])
+    return w.astype(dtype)
+
+
+def gsq_param_count(in_dim: int, out_dim: int, rank: int) -> dict:
+    return {"base": in_dim * out_dim, "adapter": rank * (in_dim + out_dim)}

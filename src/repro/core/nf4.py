@@ -1,0 +1,136 @@
+"""NF4 (4-bit NormalFloat) + Double Quantization, per QLoRA.
+
+GSQ-Tuning stores the frozen base-model weights in NF4 (the paper builds on
+QLoRA: "all weights are quantized as NF4 firstly", Tab. 1 caption) and
+dequantizes them blockwise before the GSE-quantized GEMM.
+
+NF4 codebook: 16 quantiles of N(0,1) normalized to [-1, 1] with an exact zero
+(Dettmers et al. 2023, App. E). Per-block absmax scales (block=64); Double
+Quantization stores the fp32 absmax scales themselves quantized to int8 with
+one fp32 scale per 256 blocks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Exact NF4 codebook from the QLoRA reference implementation.
+NF4_CODE = np.array([
+    -1.0, -0.6961928009986877, -0.5250730514526367, -0.39491748809814453,
+    -0.28444138169288635, -0.18477343022823334, -0.09105003625154495, 0.0,
+    0.07958029955625534, 0.16093020141124725, 0.24611230194568634,
+    0.33791524171829224, 0.44070982933044434, 0.5626170039176941,
+    0.7229568362236023, 1.0,
+], dtype=np.float32)
+
+BLOCK = 64            # QLoRA first-level block size
+DQ_BLOCK = 256        # second-level (double-quant) block of scales
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class NF4Tensor:
+    """Frozen base weight in NF4 with double-quantized scales.
+
+    codes: uint8 (one code per value, 4 significant bits), flat (n,).
+    qscale: int8 quantized absmax per block, (n // BLOCK,).
+    qscale_scale: fp32 scale of the scales, (n // BLOCK // DQ_BLOCK,).
+    qscale_mean: fp32 scalar mean subtracted before scale quantization.
+    shape: original weight shape.
+    """
+    codes: jax.Array
+    qscale: jax.Array
+    qscale_scale: jax.Array
+    qscale_mean: jax.Array
+    shape: tuple
+
+    def tree_flatten(self):
+        return ((self.codes, self.qscale, self.qscale_scale,
+                 self.qscale_mean), (self.shape,))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, aux[0])
+
+    def dequantize(self, dtype=jnp.bfloat16) -> jax.Array:
+        return nf4_dequantize(self, dtype)
+
+    def nbytes_packed(self) -> int:
+        n = int(np.prod(self.shape))
+        nb = n // BLOCK
+        return n // 2 + nb + 4 * (max(nb // DQ_BLOCK, 1)) + 4
+
+
+def _pad_to(x: jax.Array, mult: int) -> jax.Array:
+    n = x.shape[0]
+    pad = (-n) % mult
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad,), x.dtype)])
+    return x
+
+
+@partial(jax.jit, static_argnames=())
+def _quantize_flat(w: jax.Array):
+    wf = _pad_to(jnp.asarray(w, jnp.float32).reshape(-1), BLOCK)
+    blocks = wf.reshape(-1, BLOCK)
+    absmax = jnp.max(jnp.abs(blocks), axis=-1)                    # (nb,)
+    safe = jnp.where(absmax > 0, absmax, 1.0)
+    normed = blocks / safe[:, None]
+    # nearest codebook entry
+    code = jnp.asarray(NF4_CODE)
+    idx = jnp.argmin(jnp.abs(normed[..., None] - code), axis=-1).astype(jnp.uint8)
+    # Double quantization of absmax: subtract mean, int8 absmax-quant per 256.
+    mean = jnp.mean(absmax)
+    centered = absmax - mean
+    cpad = _pad_to(centered, DQ_BLOCK).reshape(-1, DQ_BLOCK)
+    smax = jnp.max(jnp.abs(cpad), axis=-1)
+    ssafe = jnp.where(smax > 0, smax, 1.0)
+    qs = jnp.clip(jnp.round(cpad / ssafe[:, None] * 127), -127, 127
+                  ).astype(jnp.int8).reshape(-1)[: absmax.shape[0]]
+    return idx.reshape(-1), qs, (ssafe / 127).astype(jnp.float32), mean
+
+
+def nf4_quantize(w: jax.Array) -> NF4Tensor:
+    codes, qs, ss, mean = _quantize_flat(w)
+    n = int(np.prod(w.shape))
+    if n % BLOCK == 0:
+        # keep the weight's own shape so TP/FSDP sharding rules for the
+        # weight apply verbatim to its codes (no flat-layout reshard).
+        codes = codes.reshape(w.shape)
+    return NF4Tensor(codes, qs, ss, mean, tuple(w.shape))
+
+
+@partial(jax.jit, static_argnames=("dtype",))
+def nf4_dequantize(t: NF4Tensor, dtype=jnp.bfloat16) -> jax.Array:
+    n = int(np.prod(t.shape))
+    code = jnp.asarray(NF4_CODE)
+    nb = t.qscale.shape[0]
+    qs = _pad_to(t.qscale.astype(jnp.float32), DQ_BLOCK).reshape(-1, DQ_BLOCK)
+    absmax = (qs * t.qscale_scale[:, None]).reshape(-1)[:nb] + t.qscale_mean
+    import os as _os
+    if (t.codes.shape == t.shape and t.shape
+            and t.shape[-1] % BLOCK == 0
+            and not _os.environ.get("REPRO_NF4_FLAT_DEQUANT")):
+        # Shape-preserving path: split only the minor-most dim into 64-value
+        # blocks (row-major flat blocks == contiguous row spans). A flat
+        # (-1, 64) reshape of a TP-sharded weight defeats GSPMD and costs a
+        # full-weight all-gather per dequant (§Perf iteration 4). The fat
+        # LUT/scale chain runs in the target dtype (bf16) — the codebook is
+        # exactly representable to bf16 rounding and absmax carries the
+        # dynamic range (§Perf iteration 9).
+        vals = code.astype(dtype)[t.codes]
+        blocks = vals.reshape(*t.shape[:-1], t.shape[-1] // BLOCK, BLOCK)
+        am = absmax.reshape(*t.shape[:-1], t.shape[-1] // BLOCK)
+        return (blocks * am[..., None].astype(dtype)).reshape(t.shape)
+    vals = code[t.codes].reshape(-1)                               # (npad,)
+    out = (vals.reshape(-1, BLOCK) * absmax[:, None]).reshape(-1)[:n]
+    return out.reshape(t.shape).astype(dtype)
+
+
+def nf4_fake_quant(w: jax.Array, dtype=None) -> jax.Array:
+    """Round-trip NF4 quantization (simulation primitive for model init)."""
+    return nf4_dequantize(nf4_quantize(w), dtype or w.dtype)

@@ -1,0 +1,80 @@
+"""Quantization policy — the "W-A-G" bit configuration of the paper.
+
+Paper notation "4-6-6 / 6-6-6" means: base branch W=NF4, activations=6,
+gradients=6; low-rank branch adapters/acts/grads = 6. ``QuantPolicy``
+captures one branch-pair configuration plus format knobs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core.gse import DEFAULT_GROUP, gse_bits_per_value
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantPolicy:
+    """Bit-widths for the fully-quantized fine-tuning pipeline.
+
+    ``None`` for any field disables quantization of that tensor class
+    (e.g. the QLoRA BF16 baseline is ``QuantPolicy.qlora_bf16()``).
+    """
+    # base (frozen) branch
+    base_w_nf4: bool = True           # store base W as NF4 (QLoRA substrate)
+    a_bits: Optional[int] = 6         # activation bits (GSE)
+    w_bits: Optional[int] = 6         # GSE bits for the (dequantized) base W
+    g_bits: Optional[int] = 6         # gradient bits (GSE)
+    # low-rank branch
+    adapter_bits: Optional[int] = 6   # GSE bits for A/B and their acts/grads
+    # format
+    group_size: int = DEFAULT_GROUP
+    fmt: str = "gse"                  # "gse" | "fp8_e4m3" | "fp8_e5m2" | "none"
+    stochastic_grad: bool = False
+    # rank of LoRA adapters (co-optimized with bits; Sec. 2.4)
+    rank: int = 64
+    lora_alpha: float = 16.0
+
+    # ---- paper presets -------------------------------------------------
+    @classmethod
+    def gsq(cls, bits: int, rank: int = 64, group_size: int = DEFAULT_GROUP):
+        """GSQ-Tuning ' 4-b-b / b-b-b ' row of Tab. 1/8."""
+        return cls(a_bits=bits, w_bits=bits, g_bits=bits, adapter_bits=bits,
+                   rank=rank, group_size=group_size)
+
+    @classmethod
+    def qlora_bf16(cls, rank: int = 64):
+        """QLoRA baseline: NF4 base, everything else BF16 (4-16-16)."""
+        return cls(a_bits=None, w_bits=None, g_bits=None, adapter_bits=None,
+                   rank=rank, fmt="none")
+
+    @classmethod
+    def fp8(cls, fmt: str = "e4m3", rank: int = 64):
+        """FP8 FQT baseline of Tab. 2 (4-8-8 with FP8 data format)."""
+        return cls(a_bits=8, w_bits=8, g_bits=8, adapter_bits=8,
+                   rank=rank, fmt=f"fp8_{fmt}")
+
+    @classmethod
+    def full_bf16(cls):
+        """16-16-16 full fine-tuning baseline (no adapters, no quant)."""
+        return cls(base_w_nf4=False, a_bits=None, w_bits=None, g_bits=None,
+                   adapter_bits=None, rank=0, fmt="none")
+
+    # ---- derived -------------------------------------------------------
+    @property
+    def quantized(self) -> bool:
+        return self.fmt != "none"
+
+    def label(self) -> str:
+        if self.fmt == "none":
+            base = "4-16-16" if self.base_w_nf4 else "16-16-16"
+            lr = "16-16-16" if self.rank else "w/o"
+            return f"{base} / {lr}"
+        b = self.a_bits
+        return f"4-{b}-{b} / {b}-{b}-{b} ({self.fmt}, g{self.group_size}, r{self.rank})"
+
+    def act_bits_per_value(self) -> float:
+        if self.a_bits is None:
+            return 16.0
+        if self.fmt.startswith("fp8"):
+            return 8.0
+        return gse_bits_per_value(self.a_bits, self.group_size)

@@ -1,0 +1,136 @@
+"""Quantize-Compute-Dequantize (QCD) matrix multiplication with fully
+quantized backward pass — the paper's Sec. 2.3.
+
+Every GEMM in the fine-tuning graph (forward *and* backward) runs on
+GSE-quantized operands:
+
+    fwd:  Y  = Q^-1( Q(X) @ Q(W) )
+    bwd:  dX = Q^-1( Q(dY) @ Q(W)^T )
+          dW = Q^-1( Q(X)^T @ Q(dY) )
+
+Each operand is quantized **along the contraction axis of that particular
+GEMM** (so W is grouped along K for the forward, along N for dX — this is the
+standard FQT convention, cf. Jetfire), with the group-shared 5-bit exponent
+of :mod:`repro.core.gse`.
+
+Simulation note: we compute with fake-quantized fp32/bf16 operands and let
+XLA run the GEMM. On TPU the same math lowers to the Pallas int8 MXU kernel
+(``repro.kernels.gse_matmul``); fp32 accumulation differs from exact int32
+accumulation by ~1e-7 relative — far below quantization noise. Tests compare
+both paths.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gse import gse_fake_quant, DEFAULT_GROUP
+
+
+def effective_group_size(k: int, group_size: int) -> int:
+    """Largest divisor of ``k`` that is <= group_size.
+
+    LoRA ranks (16, 32, ...) can be smaller than the group size; grouping then
+    degrades gracefully to per-``k`` granularity (more exponents, never less
+    precision).
+    """
+    g = min(group_size, k)
+    while k % g != 0:
+        g -= 1
+    return g
+
+
+def _fq(x: jax.Array, bits: Optional[int], group_size: int) -> jax.Array:
+    """Fake-quantize along the last (contraction) axis; bits=None = passthrough."""
+    if bits is None:
+        return x
+    g = effective_group_size(x.shape[-1], group_size)
+    return gse_fake_quant(x, bits, g)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
+def quantized_matmul(
+    x: jax.Array,
+    w: jax.Array,
+    a_bits: Optional[int] = 6,
+    w_bits: Optional[int] = 6,
+    g_bits: Optional[int] = 6,
+    group_size: int = DEFAULT_GROUP,
+) -> jax.Array:
+    """``x @ w`` with GSE-quantized operands and gradients.
+
+    Args:
+      x: (..., K) activations — quantized to ``a_bits`` along K.
+      w: (K, N) weights — quantized to ``w_bits`` along K (fwd) / N (bwd dX).
+      g_bits: gradient bit-width for dY in the backward GEMMs.
+      group_size: GSE group size (contrab-axis groups).
+
+    Any of the bit-widths may be None to keep that operand in full precision
+    (used for ablations and the QLoRA BF16 baseline).
+    """
+    y, _ = _qmm_fwd(x, w, a_bits, w_bits, g_bits, group_size)
+    return y
+
+
+def _qmm_fwd(x, w, a_bits, w_bits, g_bits, group_size):
+    xq = _fq(x, a_bits, group_size)
+    # w: (K, N); contraction axis K is first -> quantize along axis 0.
+    # Named so the remat policy can SAVE the quantized weight instead of
+    # re-running NF4-dequant + GSE-quant in the backward pass (§Perf iter 6).
+    from jax.ad_checkpoint import checkpoint_name
+    wq = checkpoint_name(_fq(w.T, w_bits, group_size).T, "qcd_wq")
+    # bf16 GEMM output: the MXU accumulates fp32 internally regardless; a
+    # bf16 result halves the all-reduce payload of row-parallel partials
+    # (§Perf iteration 1 — was preferred_element_type=f32).
+    import os as _os
+    if _os.environ.get("REPRO_QCD_F32_OUT"):
+        y = jnp.matmul(xq, wq, preferred_element_type=jnp.float32
+                       ).astype(x.dtype)
+    else:
+        y = jnp.matmul(xq, wq)
+    # Residuals: keep the *quantized* tensors — backward consumes Q(X), Q(W)
+    # exactly as stored (paper's backward eqs reuse the forward Q(·);
+    # re-quantizing per-use turned out to cost full-weight/activation
+    # all-gathers in SPMD — §Perf iteration 2/3).
+    return y, (xq, wq)
+
+
+def _qmm_bwd(a_bits, w_bits, g_bits, group_size, res, dy):
+    xq, wq = res
+    dyq = _fq(dy, g_bits, group_size)                        # grouped along N
+    # dX = Q(dY) @ Q(W)^T : contraction over N, reusing the forward-grouped
+    # Q(W) per the paper's dL/dX equation (no per-use re-grouping).
+    import os as _os
+    if _os.environ.get("REPRO_QCD_F32_OUT"):
+        dx = jnp.matmul(dyq, wq.T, preferred_element_type=jnp.float32
+                        ).astype(dy.dtype)
+    else:
+        dx = jnp.matmul(dyq, wq.T)
+    # dW = Q(X)^T @ Q(dY) : contraction over tokens, reusing forward Q(X)
+    # and the N-grouped Q(dY). Grouping does not align with the contraction
+    # axis here, so this GEMM runs as a bf16 MAC on hardware (dW is the
+    # cheapest of the three GEMMs; DESIGN §4 note).
+    x2 = xq.reshape(-1, xq.shape[-1])                         # (B, K)
+    dy2 = dyq.reshape(-1, dyq.shape[-1])                      # (B, N)
+    dw = jnp.matmul(x2.T, dy2, preferred_element_type=jnp.float32
+                    ).astype(dy.dtype)
+    return dx, dw
+
+
+def _qmm_bwd_wrap(a_bits, w_bits, g_bits, group_size, res, dy):
+    dx, dw = _qmm_bwd(a_bits, w_bits, g_bits, group_size, res, dy)
+    return (dx, dw)
+
+
+quantized_matmul.defvjp(_qmm_fwd, _qmm_bwd_wrap)
+
+
+def quantized_einsum_btd_dn(x, w, a_bits, w_bits, g_bits, group_size=DEFAULT_GROUP):
+    """Convenience: (B, T, D) @ (D, N) with QCD semantics."""
+    b, t, d = x.shape
+    y = quantized_matmul(x.reshape(b * t, d), w, a_bits, w_bits, g_bits,
+                         group_size)
+    return y.reshape(b, t, -1)

@@ -1,0 +1,91 @@
+"""GSE-compressed gradient synchronization with error feedback.
+
+Beyond-paper, but format-native (DESIGN §5): the paper quantizes gradients
+for *compute*; we reuse the exact same Group-Shared-Exponent format to cut
+*inter-pod* gradient bytes. Within a pod, XLA's data-parallel reduction runs
+at full precision over fast ICI; across the slow pod-to-pod (DCI) links,
+gradients travel as b-bit GSE mantissas + 5-bit/group shared exponents:
+
+    1. exponent agreement:   e* = pmax(e_local)      (tiny: K/32 int8)
+    2. mantissa exchange:    all_gather(int8 m)      (b/16 of bf16 bytes)
+    3. local reduce:         g = mean_i(m_i) * 2^e*
+    4. error feedback:       r <- g_local - dequant(quant(g_local)),
+                             added back before the next round's quantize.
+
+all_gather-of-int8 (rather than psum) keeps the on-wire payload genuinely
+8-bit — visible in the dry-run HLO as an s8 all-gather, which is how the
+roofline collective term credits the compression.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gse import (EXP_MIN, EXP_MAX, qmax_for_bits)
+
+
+def _group_quantize_shared(g: jax.Array, e_shared: jax.Array, bits: int,
+                           group: int):
+    """Quantize with an externally agreed exponent (post-pmax)."""
+    qmax = qmax_for_bits(bits)
+    gg = g.reshape(-1, group)
+    scale = jnp.exp2(e_shared.astype(jnp.float32))[:, None]
+    m = jnp.clip(jnp.round(gg / scale), -qmax, qmax).astype(jnp.int8)
+    return m
+
+
+def _local_exponent(g: jax.Array, bits: int, group: int):
+    qmax = qmax_for_bits(bits)
+    gg = g.reshape(-1, group)
+    amax = jnp.max(jnp.abs(gg), axis=-1)
+    safe = jnp.where(amax > 0, amax, 1.0)
+    e = jnp.ceil(jnp.log2(safe / qmax))
+    e = jnp.where(amax > 0, e, float(EXP_MIN))
+    return jnp.clip(e, EXP_MIN, EXP_MAX).astype(jnp.int8)
+
+
+def compressed_mean(g: jax.Array, residual: jax.Array, axis_name: str,
+                    bits: int = 8, group: int = 32
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Cross-``axis_name`` mean of ``g`` through the GSE wire format, with
+    error-feedback residual. Must run inside shard_map manual over
+    ``axis_name``. Returns (mean_grad, new_residual)."""
+    shape = g.shape
+    n = g.size
+    pad = (-n) % group
+    flat = jnp.pad(g.reshape(-1).astype(jnp.float32), (0, pad))
+    flat = flat + jnp.pad(residual.reshape(-1), (0, pad))
+
+    e_loc = _local_exponent(flat, bits, group)
+    e_star = jax.lax.pmax(e_loc, axis_name)                      # int8 agree
+    m = _group_quantize_shared(flat, e_star, bits, group)        # int8
+    # int8 on the wire; sum over the (small) pod axis locally after gather
+    m_all = jax.lax.all_gather(m, axis_name)                     # (P, n/g, g)
+    npods = m_all.shape[0]
+    msum = jnp.sum(m_all.astype(jnp.int32), axis=0)
+    mean = (msum.astype(jnp.float32)
+            * jnp.exp2(e_star.astype(jnp.float32))[:, None]) / npods
+    # error feedback: what this shard failed to transmit
+    sent = (m.astype(jnp.float32)
+            * jnp.exp2(e_star.astype(jnp.float32))[:, None])
+    new_res = (flat.reshape(-1, group) - sent).reshape(-1)[:n]
+    return mean.reshape(-1)[:n].reshape(shape), new_res.reshape(-1)[:n
+                                                                    ].reshape(shape)
+
+
+def compressed_tree_mean(grads: Any, residuals: Any, axis_name: str,
+                         bits: int = 8, group: int = 32):
+    """Tree-mapped :func:`compressed_mean`."""
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = treedef.flatten_up_to(residuals)
+    outs = [compressed_mean(g, r, axis_name, bits, group)
+            for g, r in zip(flat_g, flat_r)]
+    return (treedef.unflatten([o[0] for o in outs]),
+            treedef.unflatten([o[1] for o in outs]))
+
+
+def init_residuals(params: Any):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

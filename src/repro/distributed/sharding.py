@@ -1,0 +1,154 @@
+"""Logical-axis sharding rules (MaxText-style) with divisibility guards.
+
+Models annotate activations with *logical* axes ("batch", "heads", "ff", ...);
+a :class:`ShardingRules` table maps logical → mesh axes. A dim is sharded only
+if it divides evenly by the mesh-axis size — otherwise it is silently
+replicated (e.g. qwen2's 12 Q-heads on a 16-way model axis). This keeps every
+(arch × mesh) combination compile-clean while letting well-shaped archs get
+full TP.
+
+Usage:
+    with use_sharding(mesh, rules):
+        x = shard(x, "batch", "seq", None)      # inside jit-traced code
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisSpec = Union[None, str, Tuple[str, ...]]
+
+_CTX: contextvars.ContextVar = contextvars.ContextVar("repro_sharding", default=None)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Logical-axis → mesh-axis mapping.
+
+    Defaults implement DP over (pod, data) and TP/EP over model — the
+    production mesh of this framework. FSDP is expressed by pointing
+    ``embed``/``ff_weight_in`` at ("data",) (see fsdp() preset).
+    """
+    batch: AxisSpec = ("pod", "data")
+    seq: AxisSpec = None            # sequence parallelism off by default
+    embed: AxisSpec = None          # activation d_model axis
+    heads: AxisSpec = "model"
+    kv_heads: AxisSpec = "model"
+    head_dim: AxisSpec = None
+    ff: AxisSpec = "model"
+    vocab: AxisSpec = "model"
+    experts: AxisSpec = "model"
+    expert_cap: AxisSpec = None
+    ssm_heads: AxisSpec = "model"
+    ssm_state: AxisSpec = None
+    lora_rank: AxisSpec = None
+    # weight-only axes (FSDP-style sharding of replicated-in-TP weight dims)
+    w_embed: AxisSpec = None
+
+    @classmethod
+    def single_pod(cls):
+        return cls(batch=("data",))
+
+    @classmethod
+    def fsdp(cls, multi_pod: bool = True):
+        """Zero-3-ish: additionally shard weight d_model dims over data."""
+        return cls(batch=("pod", "data") if multi_pod else ("data",),
+                   w_embed=("data",))
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    mesh: Mesh
+    rules: ShardingRules
+
+
+def strip_axes(rules: ShardingRules, *axes: str) -> ShardingRules:
+    """Remove mesh axes from every rule (e.g. drop 'pod' inside a shard_map
+    region where 'pod' is Manual)."""
+    upd = {}
+    for f in dataclasses.fields(rules):
+        v = getattr(rules, f.name)
+        if v is None or not isinstance(v, (str, tuple)):
+            continue
+        t = (v,) if isinstance(v, str) else v
+        t2 = tuple(a for a in t if a not in axes)
+        if t2 != t:
+            upd[f.name] = (t2 if len(t2) > 1 else
+                           (t2[0] if t2 else None))
+    return dataclasses.replace(rules, **upd) if upd else rules
+
+
+@contextlib.contextmanager
+def use_sharding(mesh: Optional[Mesh], rules: Optional[ShardingRules] = None):
+    token = _CTX.set(ShardCtx(mesh, rules or ShardingRules()) if mesh else None)
+    try:
+        yield
+    finally:
+        _CTX.reset(token)
+
+
+def current_ctx() -> Optional[ShardCtx]:
+    return _CTX.get()
+
+
+def _mesh_axis_size(mesh: Mesh, spec: AxisSpec) -> int:
+    if spec is None:
+        return 1
+    axes = (spec,) if isinstance(spec, str) else spec
+    n = 1
+    for a in axes:
+        if a not in mesh.shape:
+            return 0      # axis not in this mesh -> treat as unshardable
+        n *= mesh.shape[a]
+    return n
+
+
+def resolve_pspec(shape: Sequence[int], logical: Sequence[Optional[str]],
+                  mesh: Mesh, rules: ShardingRules) -> P:
+    """Build a PartitionSpec, dropping any axis that does not divide."""
+    assert len(shape) == len(logical), (shape, logical)
+    parts = []
+    used: set = set()
+    for dim, name in zip(shape, logical):
+        if name is None:
+            parts.append(None)
+            continue
+        spec = getattr(rules, name, None)
+        if spec is None:
+            parts.append(None)
+            continue
+        axes = (spec,) if isinstance(spec, str) else tuple(spec)
+        if any(a in used for a in axes):
+            parts.append(None)          # a mesh axis may appear only once
+            continue
+        size = _mesh_axis_size(mesh, spec)
+        if size <= 1 or dim % size != 0:
+            parts.append(None)          # divisibility guard -> replicate
+            continue
+        used.update(axes)
+        parts.append(spec)
+    return P(*parts)
+
+
+def shard(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """Annotate ``x`` with a sharding constraint derived from logical axes.
+
+    No-op when no mesh context is active (single-device tests/benches).
+    """
+    ctx = _CTX.get()
+    if ctx is None:
+        return x
+    pspec = resolve_pspec(x.shape, logical, ctx.mesh, ctx.rules)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, pspec))
+
+
+def named_sharding(mesh: Mesh, rules: ShardingRules,
+                   shape: Sequence[int],
+                   logical: Sequence[Optional[str]]) -> NamedSharding:
+    return NamedSharding(mesh, resolve_pspec(shape, logical, mesh, rules))

@@ -1,0 +1,102 @@
+"""Pallas TPU kernel: flash attention forward (online softmax over KV
+blocks) — the attention hot path at 32k prefill. VMEM-resident running
+(max, sum, acc) scratch per query block; causal / sliding-window masks are
+computed from positions inside the kernel (no (T, S) mask in HBM).
+
+The jnp reference is ``repro.models.attention.flash_attention_ref`` /
+``direct_attention``; the training path uses the custom-VJP jnp
+implementation (backward kernel: recompute-based, see DESIGN §4 note).
+
+Layout: q (BH, T, D); k/v (BH, S, D) — GQA callers expand KV heads.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  bq: int, bk: int, k_steps: int, causal: bool,
+                  window: int, q_offset: int, scale: float):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)                     # (bq, D)
+    k = k_ref[0].astype(jnp.float32)                     # (bk, D)
+    v = v_ref[0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if causal or window:
+        qpos = q_offset + qi * bq + jax.lax.broadcasted_iota(
+            jnp.int32, (bq, bk), 0)
+        kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), jnp.bool_)
+        if causal:
+            mask = mask & (kpos <= qpos)
+        if window:
+            mask = mask & (kpos > qpos - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]                                   # (bq, 1)
+    l_prev = l_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + jnp.sum(p, axis=-1, keepdims=True)
+    pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_scr[...] = acc_scr[...] * corr + pv
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(ki == k_steps - 1)
+    def _store():
+        o_ref[0] = (acc_scr[...] /
+                    jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "q_offset",
+                                             "bq", "bk", "interpret"))
+def flash_attention_pallas(q, k, v, causal: bool = True, window: int = 0,
+                           q_offset: int = 0, bq: int = 256, bk: int = 512,
+                           interpret: bool = True):
+    """q (BH, T, D); k/v (BH, S, D) -> (BH, T, D)."""
+    bh, t, d = q.shape
+    s_len = k.shape[1]
+    bq = min(bq, t)
+    bk = min(bk, s_len)
+    assert t % bq == 0 and s_len % bk == 0, (t, bq, s_len, bk)
+    k_steps = s_len // bk
+    grid = (bh, t // bq, k_steps)
+    kernel = functools.partial(
+        _flash_kernel, bq=bq, bk=bk, k_steps=k_steps, causal=causal,
+        window=window, q_offset=q_offset, scale=d ** -0.5)
+    from jax.experimental.pallas import tpu as pltpu
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, t, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

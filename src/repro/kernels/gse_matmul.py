@@ -1,0 +1,94 @@
+"""Pallas TPU kernel: GSE integer matmul — the paper's core compute path
+(Sec. 2.2 "Matrix Multiplication using GSE") mapped onto the MXU.
+
+    y[m, n] = sum_g  2^(eA[m,g] + eB[n,g]) * sum_i mA[m,g,i] * mB[n,g,i]
+
+TPU mapping (DESIGN §4): the inner integer MAC runs as an int8 x int8 ->
+int32 ``dot_general`` with the group axis as a batch dimension (the MXU
+executes contraction-G batched matmuls); the per-(m, n, g) rescale
+``2^(eA+eB)`` is a rank-1 outer product applied to each group's int32 tile
+while it lives in VMEM, accumulated into an fp32 scratch tile across the K
+grid. This is bit-exact w.r.t. the value-space oracle
+(``repro.core.gse.gse_matmul_reference``) because int32 accumulates the
+group MAC exactly and fp32 holds each scaled group product.
+
+A (M, K) x B (N, K) -> (M, N); both operands pre-quantized to GSE along K.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 512
+
+
+def _gse_matmul_kernel(am_ref, ae_ref, bm_ref, be_ref, o_ref, acc_ref, *,
+                       group: int, k_steps: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    am = am_ref[...]                                  # (BM, BK) int8
+    bm = bm_ref[...]                                  # (BN, BK) int8
+    ae = ae_ref[...].astype(jnp.float32)              # (BM, BK/G)
+    be = be_ref[...].astype(jnp.float32)              # (BN, BK/G)
+    bm_sz, bk = am.shape
+    bn_sz = bm.shape[0]
+    ng = bk // group
+
+    # (G-batched) integer MAC on the MXU: (ng, BM, G) x (ng, BN, G) -> int32
+    ag = am.reshape(bm_sz, ng, group).transpose(1, 0, 2)
+    bg = bm.reshape(bn_sz, ng, group).transpose(1, 0, 2)
+    prod = jax.lax.dot_general(
+        ag, bg, (((2,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.int32)             # (ng, BM, BN)
+
+    # per-group rank-1 exponent rescale, accumulated in fp32
+    sa = jnp.exp2(ae).transpose(1, 0)                 # (ng, BM)
+    sb = jnp.exp2(be).transpose(1, 0)                 # (ng, BN)
+    scaled = prod.astype(jnp.float32) * sa[:, :, None] * sb[:, None, :]
+    acc_ref[...] += jnp.sum(scaled, axis=0)
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _store():
+        o_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("group", "bm", "bn", "bk", "interpret"))
+def gse_matmul_pallas(a_m, a_e, b_m, b_e, group: int = 32,
+                      bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
+                      bk: int = DEFAULT_BK, interpret: bool = True):
+    """a_m (M, K) int8, a_e (M, K//G) int8; b_m (N, K) int8, b_e likewise.
+    Returns (M, N) fp32."""
+    m_dim, k_dim = a_m.shape
+    n_dim = b_m.shape[0]
+    bm = min(bm, m_dim)
+    bn = min(bn, n_dim)
+    bk = min(bk, k_dim)
+    assert m_dim % bm == 0 and n_dim % bn == 0 and k_dim % bk == 0
+    assert bk % group == 0
+    k_steps = k_dim // bk
+    grid = (m_dim // bm, n_dim // bn, k_steps)
+    kernel = functools.partial(_gse_matmul_kernel, group=group,
+                               k_steps=k_steps)
+    from jax.experimental.pallas import tpu as pltpu
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bm, bk // group), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bn, bk), lambda i, j, k: (j, k)),
+            pl.BlockSpec((bn, bk // group), lambda i, j, k: (j, k)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m_dim, n_dim), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a_m, a_e, b_m, b_e)

@@ -1,0 +1,69 @@
+"""Pallas TPU kernel: GSE quantization (find shared group exponent, shift
+mantissas) — the paper's "Transform FP to GSE" (Sec. 2.2) as a tiled VMEM
+kernel.
+
+Layout: x (M, K) grouped along K (the contraction axis) with group size G.
+Grid tiles (BM, BK) with BK a multiple of G; the exponent tile is (BM, BK/G).
+Rounding is round-to-nearest-even, matching the jnp oracle bit-for-bit.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.gse import EXP_MIN, EXP_MAX, qmax_for_bits
+
+DEFAULT_BM = 256
+DEFAULT_BK = 512
+
+
+def _gse_quant_kernel(x_ref, m_ref, e_ref, *, bits: int, group: int):
+    x = x_ref[...].astype(jnp.float32)                    # (BM, BK)
+    bm, bk = x.shape
+    qmax = qmax_for_bits(bits)
+    xg = x.reshape(bm, bk // group, group)
+    amax = jnp.max(jnp.abs(xg), axis=-1)                  # (BM, BK/G)
+    safe = jnp.where(amax > 0, amax, 1.0)
+    e = jnp.ceil(jnp.log2(safe / qmax))
+    e = jnp.where(amax > 0, e, float(EXP_MIN))
+    e = jnp.clip(e, EXP_MIN, EXP_MAX)
+    scale = jnp.exp2(e)[..., None]                        # (BM, BK/G, 1)
+    m = jnp.clip(jnp.round(xg / scale), -qmax, qmax)
+    m_ref[...] = m.reshape(bm, bk).astype(jnp.int8)
+    e_ref[...] = e.astype(jnp.int8)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bits", "group", "bm", "bk",
+                                    "interpret"))
+def gse_quantize_pallas(x: jax.Array, bits: int = 6, group: int = 32,
+                        bm: int = DEFAULT_BM, bk: int = DEFAULT_BK,
+                        interpret: bool = True):
+    """x: (M, K) -> (mantissa int8 (M, K), exponent int8 (M, K//group)).
+
+    M % bm == 0 and K % bk == 0 required (callers pad); bk % group == 0.
+    """
+    m_dim, k_dim = x.shape
+    bm = min(bm, m_dim)
+    bk = min(bk, k_dim)
+    assert k_dim % bk == 0 and m_dim % bm == 0 and bk % group == 0, (
+        x.shape, bm, bk, group)
+    grid = (m_dim // bm, k_dim // bk)
+    kernel = functools.partial(_gse_quant_kernel, bits=bits, group=group)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, bk), lambda i, j: (i, j))],
+        out_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bk // group), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m_dim, k_dim), jnp.int8),
+            jax.ShapeDtypeStruct((m_dim, k_dim // group), jnp.int8),
+        ],
+        interpret=interpret,
+    )(x)

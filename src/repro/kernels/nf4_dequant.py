@@ -1,0 +1,66 @@
+"""Pallas TPU kernel: NF4 dequantization (codebook lookup + per-block absmax
+scale) — the QLoRA DQ(W^NF4) step on the frozen-base path of GSQ-Tuning.
+
+Layout: codes (M, K) uint8 holding NF4 indices (one per value; the 2x packed
+form is a storage concern — the kernel consumes the unpacked index plane).
+absmax is the first-level scale per 64-value block along flattened (M, K);
+we require K % 64 == 0 so blocks never straddle rows and the scale tile is
+(BM, BK/64).
+
+The 16-entry codebook lives in VMEM; the lookup is a one-hot (16-way)
+select — gather-free, VPU-friendly.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core.nf4 import NF4_CODE, BLOCK
+
+DEFAULT_BM = 256
+DEFAULT_BK = 512
+
+
+def _nf4_dequant_kernel(codes_ref, scale_ref, o_ref, *, out_dtype):
+    codes = codes_ref[...].astype(jnp.int32)               # (BM, BK)
+    scales = scale_ref[...].astype(jnp.float32)            # (BM, BK/64)
+    bm, bk = codes.shape
+    # gather-free LUT: sum_i (codes == i) * code[i]  (scalar immediates —
+    # no captured constants, VPU-friendly selects)
+    vals = jnp.zeros(codes.shape, jnp.float32)
+    for i in range(16):
+        vals = vals + jnp.where(codes == i, float(NF4_CODE[i]), 0.0)
+    vals = vals.reshape(bm, bk // BLOCK, BLOCK)
+    out = vals * scales[..., None]
+    o_ref[...] = out.reshape(bm, bk).astype(out_dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("out_dtype", "bm", "bk", "interpret"))
+def nf4_dequant_pallas(codes: jax.Array, absmax: jax.Array,
+                       out_dtype=jnp.bfloat16, bm: int = DEFAULT_BM,
+                       bk: int = DEFAULT_BK, interpret: bool = True):
+    """codes (M, K) uint8; absmax (M*K//64,) fp32 -> (M, K) out_dtype."""
+    m_dim, k_dim = codes.shape
+    assert k_dim % BLOCK == 0, k_dim
+    bm = min(bm, m_dim)
+    bk = min(bk, k_dim)
+    assert m_dim % bm == 0 and k_dim % bk == 0 and bk % BLOCK == 0
+    scales = absmax.reshape(m_dim, k_dim // BLOCK)
+    grid = (m_dim // bm, k_dim // bk)
+    kernel = functools.partial(_nf4_dequant_kernel, out_dtype=out_dtype)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bk // BLOCK), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bk), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m_dim, k_dim), out_dtype),
+        interpret=interpret,
+    )(codes, scales)

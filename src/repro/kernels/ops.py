@@ -1,0 +1,49 @@
+"""Jit'd public wrappers for the Pallas kernels with automatic
+interpret-mode fallback on CPU (the TPU path passes interpret=False).
+
+These are the entry points the framework would swap in on real TPU for the
+QCD hot loops; the jnp fake-quant path remains the simulation default (it
+fuses into the surrounding HLO for the dry-run analysis).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.gse_quant import gse_quantize_pallas
+from repro.kernels.gse_matmul import gse_matmul_pallas
+from repro.kernels.nf4_dequant import nf4_dequant_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def gse_quantize(x, bits: int = 6, group: int = 32, **block_kw):
+    """(M, K) -> (mantissa int8, exponent int8). Pads M/K to block shape."""
+    return gse_quantize_pallas(x, bits, group, interpret=not _on_tpu(),
+                               **block_kw)
+
+
+def gse_matmul(a_m, a_e, b_m, b_e, group: int = 32, **block_kw):
+    """GSE (M,K) x (N,K) -> fp32 (M,N) via int8 MXU MACs."""
+    return gse_matmul_pallas(a_m, a_e, b_m, b_e, group,
+                             interpret=not _on_tpu(), **block_kw)
+
+
+def nf4_dequant(codes, absmax, out_dtype=jnp.bfloat16, **block_kw):
+    return nf4_dequant_pallas(codes, absmax, out_dtype,
+                              interpret=not _on_tpu(), **block_kw)
+
+
+def gse_linear(x, w, bits: int = 6, group: int = 32):
+    """End-to-end quantized linear through the kernel path:
+    quantize x and w along K, integer matmul, fp32 out.
+
+    x: (B, K) float; w: (N, K) float -> (B, N) fp32.
+    """
+    xm, xe = gse_quantize(x, bits, group)
+    wm, we = gse_quantize(w, bits, group)
+    return gse_matmul(xm, xe, wm, we, group)

@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for every Pallas kernel in this package. Tests sweep
+shapes/dtypes and assert_allclose kernel-vs-oracle."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gse import (EXP_MIN, EXP_MAX, qmax_for_bits)
+from repro.core.nf4 import NF4_CODE, BLOCK
+
+
+def gse_quantize_ref(x: jax.Array, bits: int = 6, group: int = 32):
+    """(M, K) -> (mantissa int8, exponent int8 (M, K//G)). Mirrors
+    repro.core.gse.gse_quantize but returns raw arrays (kernel ABI)."""
+    m_dim, k_dim = x.shape
+    qmax = qmax_for_bits(bits)
+    xf = x.astype(jnp.float32).reshape(m_dim, k_dim // group, group)
+    amax = jnp.max(jnp.abs(xf), axis=-1)
+    safe = jnp.where(amax > 0, amax, 1.0)
+    e = jnp.ceil(jnp.log2(safe / qmax))
+    e = jnp.where(amax > 0, e, float(EXP_MIN))
+    e = jnp.clip(e, EXP_MIN, EXP_MAX)
+    m = jnp.clip(jnp.round(xf / jnp.exp2(e)[..., None]), -qmax, qmax)
+    return (m.reshape(m_dim, k_dim).astype(jnp.int8), e.astype(jnp.int8))
+
+
+def gse_matmul_ref(a_m, a_e, b_m, b_e, group: int = 32):
+    """Oracle for gse_matmul_pallas: exact per-group int MAC + 2^(eA+eB)."""
+    m_dim, k_dim = a_m.shape
+    n_dim = b_m.shape[0]
+    ng = k_dim // group
+    ag = a_m.reshape(m_dim, ng, group).astype(jnp.int32)
+    bg = b_m.reshape(n_dim, ng, group).astype(jnp.int32)
+    prod = jnp.einsum("mgk,ngk->mng", ag, bg)
+    scale = jnp.exp2(a_e.astype(jnp.float32))[:, None, :] \
+        * jnp.exp2(b_e.astype(jnp.float32))[None, :, :]
+    return jnp.sum(prod.astype(jnp.float32) * scale, axis=-1)
+
+
+def nf4_dequant_ref(codes, absmax, out_dtype=jnp.bfloat16):
+    """Oracle for nf4_dequant_pallas."""
+    m_dim, k_dim = codes.shape
+    code = jnp.asarray(NF4_CODE)
+    vals = code[codes.astype(jnp.int32)]
+    vals = vals.reshape(m_dim, k_dim // BLOCK, BLOCK)
+    scales = absmax.reshape(m_dim, k_dim // BLOCK)
+    return (vals * scales[..., None]).reshape(m_dim, k_dim).astype(out_dtype)
+
+
+def flash_attention_oracle(q, k, v, causal=True, window=0, q_offset=0):
+    """Materialized-scores oracle for the flash-attention kernel path."""
+    from repro.models.attention import direct_attention, MaskInfo
+    return direct_attention(q, k, v,
+                            MaskInfo(q_offset=q_offset, causal=causal,
+                                     window=window))

@@ -1,0 +1,145 @@
+"""The assigned (architecture x input-shape) grid: 10 archs x 4 shapes.
+
+Per cell this module provides:
+  * ``cell_plan(arch, shape)`` — mode (train/prefill/decode), grad-accum
+    target, skip status + reason (DESIGN §8),
+  * ``input_specs(cfg, shape, mesh)`` — ShapeDtypeStruct stand-ins for every
+    lowered input (weak-type-correct, shardable, no allocation),
+  * ``abstract_state(cfg, policy, shape, mesh, rules)`` — eval_shape'd
+    params / optimizer / cache trees with their shardings.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config, all_arch_names
+from repro.core.policy import QuantPolicy
+from repro.models.config import ModelConfig
+from repro.distributed.sharding import ShardingRules, resolve_pspec
+
+SHAPES = {
+    "train_4k": dict(seq_len=4096, global_batch=256, mode="train"),
+    "prefill_32k": dict(seq_len=32768, global_batch=32, mode="prefill"),
+    "decode_32k": dict(seq_len=32768, global_batch=128, mode="decode"),
+    "long_500k": dict(seq_len=524288, global_batch=1, mode="decode"),
+}
+
+# grad-accumulation targets per arch for train_4k (sized so per-device live
+# activations stay < ~4 GB with remat; DESIGN §5)
+ACCUM = {
+    "whisper_small": 4, "llava_next_34b": 16, "granite_3_2b": 4,
+    "qwen2_1_5b": 2, "gemma_7b": 4, "qwen3_14b": 8, "mamba2_2_7b": 8,
+    "granite_moe_1b_a400m": 2, "arctic_480b": 16, "hymba_1_5b": 4,
+    "llama2_7b": 8,
+}
+
+# archs that run long_500k (sub-quadratic decode state) — DESIGN §8
+LONG_OK = {"mamba2_2_7b", "hymba_1_5b"}
+
+# big archs use FSDP rules (weight d_model dims sharded over data)
+FSDP_ARCHS = {"llava_next_34b", "arctic_480b", "qwen3_14b"}
+
+
+@dataclasses.dataclass(frozen=True)
+class CellPlan:
+    arch: str
+    shape: str
+    mode: str                 # train | prefill | decode
+    seq_len: int
+    global_batch: int
+    accum: int
+    skip: bool = False
+    skip_reason: str = ""
+
+
+def cell_plan(arch: str, shape: str, mesh=None) -> CellPlan:
+    info = SHAPES[shape]
+    mode = info["mode"]
+    skip, reason = False, ""
+    if shape == "long_500k" and arch not in LONG_OK:
+        skip = True
+        reason = ("pure full-attention arch — long_500k assigned only to "
+                  "SSM/hybrid archs (DESIGN §8)")
+    accum = 1
+    if mode == "train":
+        dp = 1
+        if mesh is not None:
+            dp = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+        accum = min(ACCUM.get(arch, 4), max(info["global_batch"] // dp, 1))
+    return CellPlan(arch, shape, mode, info["seq_len"], info["global_batch"],
+                    accum, skip, reason)
+
+
+def rules_for(arch: str, mesh) -> ShardingRules:
+    multi = "pod" in getattr(mesh, "shape", {})
+    if arch in FSDP_ARCHS:
+        return ShardingRules.fsdp(multi_pod=multi)
+    return ShardingRules() if multi else ShardingRules.single_pod()
+
+
+def arch_cfg(arch: str, shape: Optional[str] = None) -> ModelConfig:
+    cfg = get_config(arch)
+    # big-head archs need smaller attention blocks (DESIGN §5 memory table)
+    if cfg.n_heads * cfg.resolved_head_dim >= 7168:
+        cfg = dataclasses.replace(cfg, attn_q_chunk=256, attn_k_chunk=512)
+    if cfg.is_encoder_decoder:
+        # pad whisper's 1500-frame grid to 1536 so flash chunking divides
+        cfg = dataclasses.replace(cfg, encoder_len=1536)
+    return cfg
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: str) -> dict:
+    """ShapeDtypeStructs for the *batch* argument of the lowered step."""
+    info = SHAPES[shape]
+    b, s = info["global_batch"], info["seq_len"]
+    mode = info["mode"]
+    if mode == "train":
+        batch = {
+            "labels": _sds((b, s), jnp.int32),
+            "loss_mask": _sds((b, s), jnp.float32),
+        }
+        if cfg.frontend == "vlm":
+            batch["inputs_embeds"] = _sds((b, s, cfg.d_model), jnp.bfloat16)
+        else:
+            batch["tokens"] = _sds((b, s), jnp.int32)
+        if cfg.is_encoder_decoder:
+            batch["frames"] = _sds((b, cfg.encoder_len, cfg.d_model),
+                                   jnp.bfloat16)
+        return batch
+    if mode == "prefill":
+        batch = {}
+        if cfg.frontend == "vlm":
+            batch["inputs_embeds"] = _sds((b, s, cfg.d_model), jnp.bfloat16)
+        else:
+            batch["tokens"] = _sds((b, s), jnp.int32)
+        if cfg.is_encoder_decoder:
+            batch["frames"] = _sds((b, cfg.encoder_len, cfg.d_model),
+                                   jnp.bfloat16)
+        return batch
+    # decode: one new token against a seq_len cache
+    return {"tokens": _sds((b, 1), jnp.int32)}
+
+
+def batch_shardings(batch_specs: dict, mesh, rules: ShardingRules):
+    out = {}
+    for k, v in batch_specs.items():
+        logical = ("batch",) + (None,) * (len(v.shape) - 1)
+        out[k] = NamedSharding(mesh,
+                               resolve_pspec(v.shape, logical, mesh, rules))
+    return out
+
+
+def all_cells():
+    for arch in all_arch_names():
+        for shape in SHAPES:
+            yield arch, shape

@@ -1,0 +1,219 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape) cell
+on the production mesh(es) and extract memory / cost / collective analysis.
+
+MUST be invoked as its own process (the XLA_FLAGS line above runs before any
+jax import — 512 placeholder CPU devices). Usage:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch granite_3_2b \
+        --shape train_4k --mesh single --out results/
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.analysis import roofline as R
+from repro.core.policy import QuantPolicy
+from repro.distributed.params import (infer_param_shardings,
+                                      opt_state_pspecs)
+from repro.distributed.sharding import use_sharding
+from repro.launch import cells as CELLS
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as M
+from repro.optim.adamw8bit import AdamW8bit
+from repro.serve import engine as E
+from repro.train import step as TS
+
+
+def _abstract(fn, *args, **kwargs):
+    return jax.eval_shape(fn, *args, **kwargs)
+
+
+def lower_cell(arch: str, shape: str, multi_pod: bool,
+               policy: QuantPolicy = None, compress: bool = None,
+               verbose: bool = True):
+    """Lower + compile one cell; returns a result dict."""
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    plan = CELLS.cell_plan(arch, shape, mesh)
+    if plan.skip:
+        return {"arch": arch, "shape": shape,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skipped", "reason": plan.skip_reason}
+    cfg = CELLS.arch_cfg(arch, shape)
+    rules = CELLS.rules_for(arch, mesh)
+    # FSDP archs keep the flat NF4 dequant: the per-layer weight gather IS
+    # the FSDP pattern, and the shape-preserving path regressed memory for
+    # them (§Perf llava iteration). TP archs use the sharded shaped path.
+    if arch in CELLS.FSDP_ARCHS:
+        os.environ["REPRO_NF4_FLAT_DEQUANT"] = "1"
+    else:
+        os.environ.pop("REPRO_NF4_FLAT_DEQUANT", None)
+    policy = policy or QuantPolicy.gsq(6, rank=64)
+    chips = int(np.prod(list(mesh.shape.values())))
+    t0 = time.time()
+
+    key = jax.random.PRNGKey(0)
+    fz_abs, tr_abs = _abstract(
+        partial(M.init_model, cfg=cfg, policy=policy), key)
+    fz_sh = infer_param_shardings(fz_abs, mesh, rules)
+    tr_sh = infer_param_shardings(tr_abs, mesh, rules)
+    batch_specs = CELLS.input_specs(cfg, shape)
+    batch_sh = CELLS.batch_shardings(batch_specs, mesh, rules)
+    info = CELLS.SHAPES[shape]
+    b, s = info["global_batch"], info["seq_len"]
+
+    with use_sharding(mesh, rules):
+        if plan.mode == "train":
+            opt = AdamW8bit(lr=1e-5)
+            opt_abs = _abstract(opt.init, tr_abs)
+            opt_sh = jax.tree.map(
+                lambda sp: NamedSharding(mesh, sp),
+                opt_state_pspecs(opt_abs, mesh, rules))
+            # XLA SPMD partitioner CHECK-fails partitioning the MoE
+            # dispatch gather/scatter inside a manual-pod shard_map
+            # (EXPERIMENTS §Dry-run note); cross-pod compression is
+            # disabled for the MoE archs and uses plain SPMD reduction.
+            default_comp = multi_pod and arch not in (
+                "arctic_480b", "granite_moe_1b_a400m")
+            use_comp = (compress if compress is not None else default_comp)
+            tcfg = TS.TrainConfig(accum_steps=plan.accum,
+                                  compress_pod_grads=use_comp)
+            n_pods = mesh.shape.get("pod", 1)
+            res_abs = _abstract(partial(TS.init_residuals, n_pods=n_pods),
+                                tr_abs) if use_comp else \
+                jax.tree.map(lambda p: jax.ShapeDtypeStruct((0,),
+                                                            jnp.float32),
+                             tr_abs)
+            res_sh = jax.tree.map(
+                lambda leaf: NamedSharding(
+                    mesh, P("pod") if (use_comp and len(leaf.shape) > 0)
+                    else P()),
+                res_abs)
+            step_fn = TS.make_train_step(cfg, policy, opt, tcfg, mesh)
+            jfn = jax.jit(step_fn,
+                          in_shardings=(fz_sh, tr_sh, opt_sh, res_sh,
+                                        batch_sh),
+                          donate_argnums=(1, 2, 3))
+            lowered = jfn.lower(fz_abs, tr_abs, opt_abs, res_abs,
+                                batch_specs)
+            tokens = b * s
+            # 6*N*D already covers fwd(2ND) + bwd(4ND)
+            mflops = R.model_flops_train(cfg, tokens)
+        elif plan.mode == "prefill":
+            cache_abs = _abstract(partial(
+                E.init_decode_cache, cfg, b, s,
+                enc_len=cfg.encoder_len if cfg.is_encoder_decoder else None))
+            cache_sh = E.cache_shardings(
+                cfg, b, s, mesh, rules,
+                enc_len=cfg.encoder_len if cfg.is_encoder_decoder else None)
+            cache_sh = {k: cache_sh.get(k, NamedSharding(mesh, P()))
+                        for k in cache_abs}
+            fn = partial(E.prefill, cfg=cfg, policy=policy)
+            jfn = jax.jit(fn, in_shardings=(fz_sh, tr_sh, batch_sh,
+                                            cache_sh),
+                          donate_argnums=(3,))
+            lowered = jfn.lower(fz_abs, tr_abs, batch_specs, cache_abs)
+            mflops = 2.0 * cfg.active_param_count() * b * s
+        else:  # decode
+            max_len = s
+            use_kv = cfg.uses_attention
+            cache_abs = _abstract(partial(
+                E.init_decode_cache, cfg, b, max_len,
+                enc_len=cfg.encoder_len if cfg.is_encoder_decoder else None))
+            cache_sh = E.cache_shardings(
+                cfg, b, max_len, mesh, rules,
+                enc_len=cfg.encoder_len if cfg.is_encoder_decoder else None)
+            cache_sh = {k: cache_sh.get(k, NamedSharding(mesh, P()))
+                        for k in cache_abs}
+            tok_abs = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+            tok_sh = CELLS.batch_shardings(
+                {"tokens": tok_abs}, mesh, rules)["tokens"]
+            fn = partial(E.decode_step, cfg=cfg, policy=policy)
+            jfn = jax.jit(fn, in_shardings=(fz_sh, tr_sh, tok_sh, cache_sh),
+                          donate_argnums=(3,))
+            lowered = jfn.lower(fz_abs, tr_abs, tok_abs, cache_abs)
+            mflops = R.model_flops_decode(cfg, b, s)
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    hlo = compiled.as_text()
+    roof, coll = R.from_compiled(compiled, chips, model_flops=mflops,
+                                 hlo_text=hlo)
+    mem = R.memory_analysis_dict(compiled)
+    result = {
+        "arch": arch, "shape": shape,
+        "mesh": "multi" if multi_pod else "single",
+        "status": "ok", "chips": chips, "mode": plan.mode,
+        "accum": plan.accum,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "roofline": roof.to_dict(),
+        "collectives": coll.to_dict(),
+        "memory_analysis": mem,
+        "policy": policy.label(),
+        "hlo_bytes": len(hlo),
+    }
+    if verbose:
+        print(json.dumps(result, indent=1))
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--bits", type=int, default=6)
+    ap.add_argument("--rank", type=int, default=64)
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    cells = list(CELLS.all_cells()) if args.all else [(args.arch,
+                                                       args.shape)]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    policy = QuantPolicy.gsq(args.bits, rank=args.rank)
+    for arch, shape in cells:
+        for multi in meshes:
+            tag = f"{arch}__{shape}__{'multi' if multi else 'single'}"
+            path = os.path.join(args.out, tag + ".json")
+            if os.path.exists(path):
+                print(f"skip existing {tag}")
+                continue
+            print(f"=== {tag} ===", flush=True)
+            try:
+                res = lower_cell(arch, shape, multi, policy=policy,
+                                 verbose=False)
+            except Exception as e:
+                res = {"arch": arch, "shape": shape,
+                       "mesh": "multi" if multi else "single",
+                       "status": "error", "error": str(e)[-2000:],
+                       "traceback": traceback.format_exc()[-4000:]}
+            with open(path, "w") as f:
+                json.dump(res, f, indent=1)
+            print(f"  -> {res['status']}"
+                  + (f" compile={res.get('compile_s')}s dominant="
+                     f"{res.get('roofline', {}).get('dominant')}"
+                     if res["status"] == "ok" else
+                     f" {res.get('reason', res.get('error', ''))[:200]}"),
+                  flush=True)
+
+
+if __name__ == "__main__":
+    main()

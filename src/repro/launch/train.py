@@ -1,0 +1,65 @@
+"""Training launcher CLI — the entry point a cluster scheduler invokes.
+
+    PYTHONPATH=src python -m repro.launch.train --arch granite_3_2b \
+        --bits 6 --rank 64 --steps 100 --reduced
+
+``--reduced`` runs the CPU-scale config; without it the full config is
+built (requires real accelerators). Handles resume-from-checkpoint and
+preemption automatically via TrainingRunner.
+"""
+from __future__ import annotations
+
+import argparse
+import logging
+
+import jax
+
+from repro.configs import get_config, reduced_config
+from repro.core.policy import QuantPolicy
+from repro.data.pipeline import DataConfig
+from repro.models import model as M
+from repro.optim.adamw8bit import AdamW8bit
+from repro.train.runner import RunnerConfig, TrainingRunner
+from repro.train.step import TrainConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite_3_2b")
+    ap.add_argument("--bits", type=int, default=6)
+    ap.add_argument("--rank", type=int, default=64)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--lr", type=float, default=1e-5)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    logging.basicConfig(level=logging.INFO)
+    cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
+    policy = QuantPolicy.gsq(args.bits, rank=args.rank)
+    frozen, train = M.init_model(jax.random.PRNGKey(args.seed), cfg, policy)
+    runner = TrainingRunner(
+        cfg, policy,
+        DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                   global_batch=args.batch),
+        AdamW8bit(lr=args.lr),
+        TrainConfig(accum_steps=args.accum),
+        RunnerConfig(total_steps=args.steps,
+                     checkpoint_every=args.ckpt_every,
+                     checkpoint_dir=args.ckpt_dir),
+        frozen=frozen, train=train)
+    runner.install_signal_handlers()
+    if runner.maybe_resume():
+        logging.info("resumed at step %d", runner.step)
+    hist = runner.run()
+    if hist:
+        print(f"final loss {hist[-1]['loss']:.4f} at step {runner.step}")
+
+
+if __name__ == "__main__":
+    main()

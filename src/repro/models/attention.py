@@ -1,0 +1,311 @@
+"""Memory-efficient (flash-style) attention in pure JAX: online softmax over
+double-chunked (query x key) blocks. This is the reference implementation for
+the Pallas TPU kernel in ``repro.kernels.flash_attention`` and the execution
+path for every large (T x S) attention in the framework — full-score
+materialization at 32k prefill would need ~PB of HBM.
+
+Masking is *structural* (offset / causal / sliding-window / traced
+``is_global``): blocks build their own (qc, kc) masks from positions, so no
+(T, S) mask is ever materialized.
+
+Softmax runs in fp32 (paper: non-linear ops stay high precision); the
+block GEMMs run in the input dtype (bf16 on TPU) with fp32 accumulation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class MaskInfo:
+    """Structural attention mask. All fields trace-safe.
+
+    q_offset: absolute position of query row 0 (0 train, cache index decode).
+    causal:   static bool.
+    window:   static int (0 = none) — sliding window size.
+    is_global: traced bool or None — hymba per-layer override of window.
+    """
+    q_offset: object = 0
+    causal: bool = True
+    window: int = 0
+    is_global: Optional[object] = None
+
+
+def block_mask(qpos: jax.Array, kpos: jax.Array, info: MaskInfo):
+    """(qc, kc) bool mask for one block, or None if unmasked."""
+    if not info.causal and not info.window:
+        return None
+    m = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    if info.causal:
+        m = m & (kpos[None, :] <= qpos[:, None])
+    if info.window:
+        local = kpos[None, :] > (qpos[:, None] - info.window)
+        if info.is_global is not None:
+            m = m & (local | info.is_global)
+        else:
+            m = m & local
+    return m
+
+
+def _block_scores(q, k, qpos, kpos, info: MaskInfo, scale):
+    """One (qc x kc) block of masked fp32 scores.
+
+    q: (B, qc, KV, G, D); k: (B, kc, KV, D) -> (B, KV, G, qc, kc).
+    """
+    s = jnp.einsum("bqkgd,bskd->bkgqs", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    m = block_mask(qpos, kpos, info)
+    if m is not None:
+        s = jnp.where(m[None, None, None], s, NEG_INF)
+    return s
+
+
+def flash_attention_ref(q, k, v, info: MaskInfo, *,
+                        q_chunk: int = 512, k_chunk: int = 1024):
+    """q: (B, T, H, D); k/v: (B, S, KV, D) -> (B, T, H, D).
+
+    Online-softmax over k chunks (inner scan) per q chunk (outer scan).
+    """
+    b, t, h, d = q.shape
+    s_len, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    qc = min(q_chunk, t)
+    kc = min(k_chunk, s_len)
+    assert t % qc == 0 and s_len % kc == 0, (t, qc, s_len, kc)
+    nq, nk = t // qc, s_len // kc
+    scale = d ** -0.5
+
+    # chunk axes lead so scans consume them as xs (no dynamic gathers)
+    qr = q.reshape(b, nq, qc, kv, g, d).transpose(1, 0, 2, 3, 4, 5)
+    kr = k.reshape(b, nk, kc, kv, d).transpose(1, 0, 2, 3, 4)
+    vr = v.reshape(b, nk, kc, kv, d).transpose(1, 0, 2, 3, 4)
+    kidx = jnp.arange(nk)
+    qidx = jnp.arange(nq)
+
+    def q_step(_, q_in):
+        qblk, qi = q_in                               # (B,qc,KV,G,D)
+        qpos = info.q_offset + qi * qc + jnp.arange(qc)
+
+        def k_step(carry, k_in):
+            kblk, vblk, ki = k_in
+            m_prev, l_prev, acc = carry
+            kpos = ki * kc + jnp.arange(kc)
+            sblk = _block_scores(qblk, kblk, qpos, kpos, info, scale)
+            m_new = jnp.maximum(m_prev, jnp.max(sblk, axis=-1))
+            p = jnp.exp(sblk - m_new[..., None])
+            corr = jnp.exp(m_prev - m_new)
+            l_new = l_prev * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(v.dtype), vblk,
+                            preferred_element_type=jnp.float32)
+            acc = acc * corr[..., None] + pv
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((b, kv, g, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kv, g, qc), jnp.float32)
+        a0 = jnp.zeros((b, kv, g, qc, d), jnp.float32)
+        (m_f, l_f, acc), _ = jax.lax.scan(k_step, (m0, l0, a0),
+                                          (kr, vr, kidx))
+        out = acc / jnp.maximum(l_f, 1e-30)[..., None]
+        # (B,KV,G,qc,D) -> (B,qc,KV,G,D)
+        return None, out.transpose(0, 3, 1, 2, 4)
+
+    _, outs = jax.lax.scan(q_step, None, (qr, qidx))
+    # outs: (nq, B, qc, KV, G, D)
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, t, h, d)
+    return out.astype(q.dtype)
+
+
+def direct_attention(q, k, v, info: MaskInfo, scale=None):
+    """Materialized-scores attention for small T x S (decode, tests)."""
+    b, t, h, d = q.shape
+    s_len, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    scale = scale or d ** -0.5
+    qg = q.reshape(b, t, kv, g, d)
+    scores = jnp.einsum("btkgd,bskd->bkgts", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    qpos = info.q_offset + jnp.arange(t)
+    kpos = jnp.arange(s_len)
+    m = block_mask(qpos, kpos, info)
+    if m is not None:
+        scores = jnp.where(m[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgts,bskd->btkgd", probs.astype(v.dtype), v)
+    return out.reshape(b, t, h, d)
+
+
+def _flash_fwd_lse(q, k, v, info: MaskInfo, q_chunk: int, k_chunk: int):
+    """Forward that also returns the per-row logsumexp (for the VJP).
+
+    Returns out (B,T,H,D) and lse (B,KV,G,T) fp32.
+    """
+    b, t, h, d = q.shape
+    s_len, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    qc, kc = min(q_chunk, t), min(k_chunk, s_len)
+    nq, nk = t // qc, s_len // kc
+    scale = d ** -0.5
+    qr = q.reshape(b, nq, qc, kv, g, d).transpose(1, 0, 2, 3, 4, 5)
+    kr = k.reshape(b, nk, kc, kv, d).transpose(1, 0, 2, 3, 4)
+    vr = v.reshape(b, nk, kc, kv, d).transpose(1, 0, 2, 3, 4)
+    kidx, qidx = jnp.arange(nk), jnp.arange(nq)
+
+    def q_step(_, q_in):
+        qblk, qi = q_in
+        qpos = info.q_offset + qi * qc + jnp.arange(qc)
+
+        def k_step(carry, k_in):
+            kblk, vblk, ki = k_in
+            m_prev, l_prev, acc = carry
+            kpos = ki * kc + jnp.arange(kc)
+            sblk = _block_scores(qblk, kblk, qpos, kpos, info, scale)
+            m_new = jnp.maximum(m_prev, jnp.max(sblk, axis=-1))
+            p = jnp.exp(sblk - m_new[..., None])
+            corr = jnp.exp(m_prev - m_new)
+            l_new = l_prev * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(v.dtype), vblk,
+                            preferred_element_type=jnp.float32)
+            acc = acc * corr[..., None] + pv
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((b, kv, g, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kv, g, qc), jnp.float32)
+        a0 = jnp.zeros((b, kv, g, qc, d), jnp.float32)
+        (m_f, l_f, acc), _ = jax.lax.scan(k_step, (m0, l0, a0),
+                                          (kr, vr, kidx))
+        out = acc / jnp.maximum(l_f, 1e-30)[..., None]
+        lse = m_f + jnp.log(jnp.maximum(l_f, 1e-30))
+        return None, (out.transpose(0, 3, 1, 2, 4), lse)
+
+    _, (outs, lses) = jax.lax.scan(q_step, None, (qr, qidx))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, t, h, d).astype(
+        q.dtype)
+    # lses: (nq, B, KV, G, qc) -> (B, KV, G, T)
+    lse = lses.transpose(1, 2, 3, 0, 4).reshape(b, kv, g, t)
+    return out, lse
+
+
+def _flash_bwd(info: MaskInfo, q_chunk: int, k_chunk: int, res, do):
+    """FlashAttention-2-style backward: per-block score recomputation from
+    (q, k, v, out, lse) — no stored probability blocks."""
+    q, k, v, out, lse = res
+    b, t, h, d = q.shape
+    s_len, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    qc, kc = min(q_chunk, t), min(k_chunk, s_len)
+    nq, nk = t // qc, s_len // kc
+    scale = d ** -0.5
+
+    # delta = rowsum(dO * O) : (B, KV, G, T)
+    delta = jnp.einsum("bthd,bthd->bth", do.astype(jnp.float32),
+                       out.astype(jnp.float32))
+    delta = delta.reshape(b, t, kv, g).transpose(0, 2, 3, 1)
+
+    qr = q.reshape(b, nq, qc, kv, g, d).transpose(1, 0, 2, 3, 4, 5)
+    dor = do.reshape(b, nq, qc, kv, g, d).transpose(1, 0, 2, 3, 4, 5)
+    lser = lse.reshape(b, kv, g, nq, qc).transpose(3, 0, 1, 2, 4)
+    deltar = delta.reshape(b, kv, g, nq, qc).transpose(3, 0, 1, 2, 4)
+    kr = k.reshape(b, nk, kc, kv, d).transpose(1, 0, 2, 3, 4)
+    vr = v.reshape(b, nk, kc, kv, d).transpose(1, 0, 2, 3, 4)
+    kidx, qidx = jnp.arange(nk), jnp.arange(nq)
+
+    def k_outer(_, k_in):
+        kblk, vblk, ki = k_in
+        kpos = ki * kc + jnp.arange(kc)
+
+        def q_inner(carry, q_in):
+            dk_acc, dv_acc = carry
+            qblk, doblk, lseblk, dblk, qi = q_in
+            qpos = info.q_offset + qi * qc + jnp.arange(qc)
+            sblk = _block_scores(qblk, kblk, qpos, kpos, info, scale)
+            p = jnp.exp(sblk - lseblk[..., None])          # (B,KV,G,qc,kc)
+            dv_acc = dv_acc + jnp.einsum(
+                "bkgqs,bqkgd->bskd", p.astype(do.dtype), doblk,
+                preferred_element_type=jnp.float32)
+            dp = jnp.einsum("bqkgd,bskd->bkgqs", doblk, vblk,
+                            preferred_element_type=jnp.float32)
+            ds = p * (dp - dblk[..., None]) * scale
+            dk_acc = dk_acc + jnp.einsum(
+                "bkgqs,bqkgd->bskd", ds.astype(q.dtype), qblk,
+                preferred_element_type=jnp.float32)
+            dq_blk = jnp.einsum("bkgqs,bskd->bqkgd", ds.astype(q.dtype),
+                                kblk, preferred_element_type=jnp.float32)
+            return (dk_acc, dv_acc), dq_blk
+
+        dk0 = jnp.zeros((b, kc, kv, d), jnp.float32)
+        dv0 = jnp.zeros((b, kc, kv, d), jnp.float32)
+        (dk_f, dv_f), dq_blocks = jax.lax.scan(
+            q_inner, (dk0, dv0), (qr, dor, lser, deltar, qidx))
+        return None, (dk_f, dv_f, dq_blocks)
+
+    _, (dks, dvs, dq_all) = jax.lax.scan(k_outer, None, (kr, vr, kidx))
+    # dq_all: (nk, nq, B, qc, KV, G, D) -> sum over nk
+    dq = jnp.sum(dq_all, axis=0).transpose(1, 0, 2, 3, 4, 5).reshape(
+        b, t, h, d).astype(q.dtype)
+    dk = dks.transpose(1, 0, 2, 3, 4).reshape(b, s_len, kv, d).astype(
+        k.dtype)
+    dv = dvs.transpose(1, 0, 2, 3, 4).reshape(b, s_len, kv, d).astype(
+        v.dtype)
+    return dq, dk, dv
+
+
+# custom_vjp static args must be hashable, but MaskInfo can carry tracers
+# (decode q_offset, hymba per-layer is_global). The traced parts travel as
+# f32 scalar arrays (zero cotangent in bwd); causal/window/chunks stay
+# static.
+
+def _mk_info(q_off_f, ig_f, causal, window):
+    ig = (ig_f > 0.5) if window else None
+    return MaskInfo(q_offset=q_off_f.astype(jnp.int32), causal=causal,
+                    window=window, is_global=ig)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8))
+def _flash_core(q, k, v, q_off_f, ig_f, causal, window, q_chunk, k_chunk):
+    out, _ = _flash_fwd_lse(q, k, v, _mk_info(q_off_f, ig_f, causal,
+                                              window), q_chunk, k_chunk)
+    return out
+
+
+def _fa_fwd(q, k, v, q_off_f, ig_f, causal, window, q_chunk, k_chunk):
+    out, lse = _flash_fwd_lse(q, k, v, _mk_info(q_off_f, ig_f, causal,
+                                                window), q_chunk, k_chunk)
+    return out, (q, k, v, out, lse, q_off_f, ig_f)
+
+
+def _fa_bwd(causal, window, q_chunk, k_chunk, res, do):
+    q, k, v, out, lse, q_off_f, ig_f = res
+    dq, dk, dv = _flash_bwd(_mk_info(q_off_f, ig_f, causal, window),
+                            q_chunk, k_chunk, (q, k, v, out, lse), do)
+    return dq, dk, dv, jnp.zeros_like(q_off_f), jnp.zeros_like(ig_f)
+
+
+_flash_core.defvjp(_fa_fwd, _fa_bwd)
+
+
+def flash_attention(q, k, v, info: MaskInfo, q_chunk: int = 512,
+                    k_chunk: int = 1024):
+    q_off_f = jnp.asarray(info.q_offset, jnp.float32)
+    ig = info.is_global
+    ig_f = jnp.asarray(False if ig is None else ig, jnp.float32)
+    return _flash_core(q, k, v, q_off_f, ig_f, info.causal, info.window,
+                       q_chunk, k_chunk)
+
+
+def attention(q, k, v, info: MaskInfo, *, q_chunk: int = 512,
+              k_chunk: int = 1024, force_direct: bool = False):
+    """Dispatch: direct for decode/small shapes, chunked otherwise."""
+    t, s_len = q.shape[1], k.shape[1]
+    if force_direct or t == 1 or (t * s_len <= 1024 * 1024
+                                  and t % q_chunk != 0):
+        return direct_attention(q, k, v, info)
+    if t % q_chunk != 0 or s_len % k_chunk != 0:
+        return direct_attention(q, k, v, info)
+    return flash_attention(q, k, v, info, q_chunk, k_chunk)

@@ -1,0 +1,137 @@
+"""Unified model configuration covering every assigned architecture family:
+dense GQA transformers, MoE, SSM (Mamba-2 SSD), hybrid (Hymba), and
+encoder-decoder (Whisper). One dataclass; family-specific fields default off.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+def pad_to_multiple(n: int, mult: int) -> int:
+    return ((n + mult - 1) // mult) * mult
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    family: str = "dense"            # dense | moe | ssm | hybrid | encdec | vlm | audio
+    n_layers: int = 2
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    head_dim: Optional[int] = None   # default d_model // n_heads
+    d_ff: int = 1024
+    vocab: int = 1000
+    act: str = "silu"                # silu(SwiGLU) | gelu(GeGLU) | gelu_mlp
+    # attention details
+    qkv_bias: bool = False           # qwen2 has QKV bias
+    qk_norm: bool = False            # qwen3
+    rope_theta: float = 10000.0
+    causal: bool = True
+    sliding_window: Optional[int] = None   # hymba SWA layers
+    global_attn_layers: tuple = ()         # layer idxs with full attn (hymba)
+    # norm
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: Optional[int] = None        # per-expert hidden (d_ff if None)
+    dense_residual: bool = False          # arctic: dense FFN in parallel w/ MoE
+    capacity_factor: float = 1.25
+    # SSM (Mamba-2 SSD)
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_groups: int = 1
+    ssm_chunk: int = 128
+    ssm_conv: int = 4
+    # hybrid (hymba): parallel attn + ssm heads in each block
+    hybrid: bool = False
+    # encoder-decoder
+    is_encoder_decoder: bool = False
+    n_encoder_layers: int = 0
+    encoder_len: int = 1500               # whisper fixed 30s encoder grid
+    # modality frontend stub ("none" | "audio" | "vlm")
+    frontend: str = "none"
+    # attention execution (flash-style chunking)
+    attn_q_chunk: int = 512
+    attn_k_chunk: int = 1024
+    # training-time knobs
+    remat: bool = True
+    vocab_pad_multiple: int = 2048
+
+    # ---- derived --------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim if self.head_dim else self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        return pad_to_multiple(self.vocab, self.vocab_pad_multiple)
+
+    @property
+    def d_inner(self) -> int:           # SSM inner width
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    @property
+    def attn_dim(self) -> int:
+        return self.n_heads * self.resolved_head_dim
+
+    @property
+    def uses_attention(self) -> bool:
+        return self.family != "ssm"
+
+    @property
+    def uses_ssm(self) -> bool:
+        return self.family in ("ssm", "hybrid")
+
+    def param_count(self) -> int:
+        """Approximate dense parameter count (for 6·N·D roofline math)."""
+        d, hd = self.d_model, self.resolved_head_dim
+        attn = d * (self.n_heads + 2 * self.n_kv_heads) * hd \
+            + self.n_heads * hd * d
+        if self.act in ("silu", "gelu"):   # gated: 3 mats
+            ff_dense = 3 * d * self.d_ff
+        else:
+            ff_dense = 2 * d * self.d_ff
+        per_layer = 0
+        if self.uses_attention and not self.hybrid:
+            per_layer += attn
+        if self.hybrid:
+            per_layer += attn
+        if self.uses_ssm:
+            di, ng, ns = self.d_inner, self.ssm_groups, self.ssm_state
+            per_layer += d * (2 * di + 2 * ng * ns + self.ssm_heads) + di * d
+        if self.n_experts:
+            eff = self.moe_d_ff or self.d_ff
+            per_layer += self.n_experts * 3 * d * eff + d * self.n_experts
+            if self.dense_residual:
+                per_layer += ff_dense
+        else:
+            if self.family != "ssm":
+                per_layer += ff_dense
+        total = self.n_layers * per_layer
+        if self.is_encoder_decoder:
+            # encoder layers: self-attn + ff; decoder already counted has
+            # cross-attn extra
+            total += self.n_encoder_layers * (attn + ff_dense)
+            total += self.n_layers * attn          # cross attention
+        total += self.padded_vocab * d * (1 if self.tie_embeddings else 2)
+        return total
+
+    def active_param_count(self) -> int:
+        """MoE: active params per token (for 6·N_active·D)."""
+        if not self.n_experts:
+            return self.param_count()
+        d = self.d_model
+        eff = self.moe_d_ff or self.d_ff
+        full = self.param_count()
+        moe_all = self.n_layers * self.n_experts * 3 * d * eff
+        moe_active = self.n_layers * self.top_k * 3 * d * eff
+        return full - moe_all + moe_active

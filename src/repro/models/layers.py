@@ -1,0 +1,318 @@
+"""Composable transformer building blocks with GSQ-Tuning quantization.
+
+Every projection GEMM goes through :func:`repro.core.lora.apply_gsq_linear`
+(NF4 frozen base + GSE-QCD LoRA adapters). Non-linear ops (norms, softmax,
+rope, activations) stay in 16/32-bit per the paper's Sec. 6.
+
+Param convention: each module returns a *pair* of trees ``(frozen, train)``
+with mirrored structure; adapter leaves live only in ``train``. Layer stacks
+are built by vmapping the per-layer init (leaves gain a leading L axis) and
+consumed with ``jax.lax.scan``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lora import init_gsq_linear, apply_gsq_linear
+from repro.core.policy import QuantPolicy
+from repro.models.config import ModelConfig
+from repro.distributed.sharding import shard
+
+# --------------------------------------------------------------------------
+# Norms / positions
+# --------------------------------------------------------------------------
+
+def rmsnorm_init(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(p, x, eps: float = 1e-6):
+    # statistics in fp32 (cheap: reduce output is (..., 1)); the fat
+    # normalize/scale multiplies stay in the stream dtype — saves two
+    # full-width f32 passes per norm (§Perf iter 8). The rsqrt factor is
+    # exact-cast to bf16 (~0.4% relerr), well below GSE-6 quant noise.
+    xf32 = x.astype(jnp.float32)
+    var = jnp.mean(xf32 * xf32, axis=-1, keepdims=True)
+    r = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * r * p["scale"].astype(x.dtype)
+
+
+def layernorm_init(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32),
+            "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm(p, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"]
+            + p["bias"]).astype(x.dtype)
+
+
+def norm_init(cfg: ModelConfig, d: Optional[int] = None):
+    d = d or cfg.d_model
+    return layernorm_init(d) if cfg.family in ("encdec",) else rmsnorm_init(d)
+
+
+def norm_apply(cfg: ModelConfig, p, x):
+    if cfg.family in ("encdec",):
+        return layernorm(p, x, cfg.norm_eps)
+    return rmsnorm(p, x, cfg.norm_eps)
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, T, H, D); positions: (B, T) int32."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                              # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs    # (B, T, D/2)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(length: int, d: int) -> jax.Array:
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# --------------------------------------------------------------------------
+# Attention (GQA, optional qk-norm / qkv-bias / sliding window / KV cache)
+# --------------------------------------------------------------------------
+
+def attn_init(key, cfg: ModelConfig, policy: QuantPolicy, cross: bool = False):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    fz, tr = {}, {}
+    fz["wq"], tr["wq"] = init_gsq_linear(kq, d, cfg.n_heads * hd, policy)
+    fz["wk"], tr["wk"] = init_gsq_linear(kk, d, cfg.n_kv_heads * hd, policy)
+    fz["wv"], tr["wv"] = init_gsq_linear(kv, d, cfg.n_kv_heads * hd, policy)
+    fz["wo"], tr["wo"] = init_gsq_linear(ko, cfg.n_heads * hd, d, policy)
+    if cfg.qkv_bias and not cross:
+        fz["bq"] = jnp.zeros((cfg.n_heads * hd,), jnp.float32)
+        fz["bk"] = jnp.zeros((cfg.n_kv_heads * hd,), jnp.float32)
+        fz["bv"] = jnp.zeros((cfg.n_kv_heads * hd,), jnp.float32)
+    if cfg.qk_norm:
+        fz["q_norm"] = rmsnorm_init(hd)
+        fz["k_norm"] = rmsnorm_init(hd)
+    return fz, tr
+
+
+def _project_qkv(fz, tr, x, cfg: ModelConfig, policy):
+    hd = cfg.resolved_head_dim
+    b, t, _ = x.shape
+    q = apply_gsq_linear(fz["wq"], tr["wq"], x, policy)
+    k = apply_gsq_linear(fz["wk"], tr["wk"], x, policy)
+    v = apply_gsq_linear(fz["wv"], tr["wv"], x, policy)
+    if "bq" in fz:
+        q = q + fz["bq"].astype(q.dtype)
+        k = k + fz["bk"].astype(k.dtype)
+        v = v + fz["bv"].astype(v.dtype)
+    q = q.reshape(b, t, cfg.n_heads, hd)
+    k = k.reshape(b, t, cfg.n_kv_heads, hd)
+    v = v.reshape(b, t, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(fz["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(fz["k_norm"], k, cfg.norm_eps)
+    return q, k, v
+
+
+def attn_apply(fz, tr, x, cfg: ModelConfig, policy: QuantPolicy, *,
+               positions: jax.Array, mask_info,
+               layer_cache: Optional[dict] = None,
+               ring_buffer: bool = False,
+               use_rope: bool = True) -> Tuple[jax.Array, Optional[dict]]:
+    """Self-attention. ``mask_info`` is an attention.MaskInfo (structural
+    mask — no (T,S) materialization). ``layer_cache`` (decode): dict with
+    k/v (B,S,Kv,D) and index scalar; returns updated cache."""
+    from repro.models.attention import attention
+    b, t, _ = x.shape
+    q, k, v = _project_qkv(fz, tr, x, cfg, policy)
+    if use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    new_cache = None
+    if layer_cache is not None:
+        ck, cv, idx = layer_cache["k"], layer_cache["v"], layer_cache["index"]
+        s_max = ck.shape[1]
+        write = (idx % s_max) if ring_buffer else idx
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, write, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, write, 0, 0))
+        k, v = ck, cv
+        new_cache = dict(layer_cache, k=ck, v=cv, index=idx + t)
+    o = attention(q, k, v, mask_info,
+                  q_chunk=cfg.attn_q_chunk, k_chunk=cfg.attn_k_chunk)
+    o = shard(o, "batch", None, "heads", None)
+    y = apply_gsq_linear(fz["wo"], tr["wo"], o.reshape(b, t, -1), policy)
+    return y, new_cache
+
+
+def cross_attn_apply(fz, tr, x, enc_kv, cfg: ModelConfig,
+                     policy: QuantPolicy) -> jax.Array:
+    """Cross-attention (whisper decoder). enc_kv: precomputed (k, v) from the
+    encoder output — (B, S_enc, Kv, D) each."""
+    from repro.models.attention import attention, MaskInfo
+    b, t, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = apply_gsq_linear(fz["wq"], tr["wq"], x, policy).reshape(
+        b, t, cfg.n_heads, hd)
+    k, v = enc_kv
+    o = attention(q, k, v, MaskInfo(causal=False),
+                  q_chunk=cfg.attn_q_chunk, k_chunk=cfg.attn_k_chunk)
+    return apply_gsq_linear(fz["wo"], tr["wo"], o.reshape(b, t, -1), policy)
+
+
+def cross_kv(fz, tr, enc_out, cfg: ModelConfig, policy: QuantPolicy):
+    """Project encoder output to cross-attention k/v once per sequence."""
+    b, s, _ = enc_out.shape
+    hd = cfg.resolved_head_dim
+    k = apply_gsq_linear(fz["wk"], tr["wk"], enc_out, policy).reshape(
+        b, s, cfg.n_kv_heads, hd)
+    v = apply_gsq_linear(fz["wv"], tr["wv"], enc_out, policy).reshape(
+        b, s, cfg.n_kv_heads, hd)
+    return k, v
+
+
+# --------------------------------------------------------------------------
+# MLP (SwiGLU / GeGLU / plain GELU)
+# --------------------------------------------------------------------------
+
+def mlp_init(key, cfg: ModelConfig, policy: QuantPolicy,
+             d_ff: Optional[int] = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    fz, tr = {}, {}
+    if cfg.act in ("silu", "gelu"):          # gated
+        fz["w_gate"], tr["w_gate"] = init_gsq_linear(k1, d, f, policy)
+        fz["w_up"], tr["w_up"] = init_gsq_linear(k2, d, f, policy)
+    else:                                    # plain MLP (whisper)
+        fz["w_up"], tr["w_up"] = init_gsq_linear(k2, d, f, policy)
+    fz["w_down"], tr["w_down"] = init_gsq_linear(k3, f, d, policy)
+    return fz, tr
+
+
+def mlp_apply(fz, tr, x, cfg: ModelConfig, policy: QuantPolicy):
+    if cfg.act in ("silu", "gelu"):
+        g = apply_gsq_linear(fz["w_gate"], tr["w_gate"], x, policy)
+        u = apply_gsq_linear(fz["w_up"], tr["w_up"], x, policy)
+        act = jax.nn.silu if cfg.act == "silu" else partial(
+            jax.nn.gelu, approximate=True)
+        h = act(g.astype(jnp.float32)).astype(u.dtype) * u
+    else:
+        u = apply_gsq_linear(fz["w_up"], tr["w_up"], x, policy)
+        h = jax.nn.gelu(u.astype(jnp.float32), approximate=True).astype(u.dtype)
+    h = shard(h, "batch", None, "ff")
+    return apply_gsq_linear(fz["w_down"], tr["w_down"], h, policy)
+
+
+# --------------------------------------------------------------------------
+# MoE with sort-based (FLOPs-faithful) dispatch
+# --------------------------------------------------------------------------
+
+def moe_init(key, cfg: ModelConfig, policy: QuantPolicy):
+    """Experts: frozen NF4, GSE-QCD compute, no per-expert adapters (see
+    DESIGN §6 — adapter placement). Router: frozen bf16 (precision-sensitive,
+    negligible size)."""
+    from repro.core.nf4 import nf4_quantize
+    d = cfg.d_model
+    f = cfg.moe_d_ff or cfg.d_ff
+    e = cfg.n_experts
+    kr, k1, k2, k3 = jax.random.split(key, 4)
+    scale = d ** -0.5
+    fz = {
+        "router": (jax.random.normal(kr, (d, e), jnp.float32) * scale
+                   ).astype(jnp.float32),
+        "w_gate": nf4_quantize(jax.random.normal(k1, (e, d, f)) * scale),
+        "w_up": nf4_quantize(jax.random.normal(k2, (e, d, f)) * scale),
+        "w_down": nf4_quantize(jax.random.normal(k3, (e, f, d)) * (f ** -0.5)),
+    }
+    return fz, {}
+
+
+def _quantized_bmm(x, w, policy: QuantPolicy):
+    """(E, C, K) @ (E, K, N) with QCD semantics per expert."""
+    if policy.fmt == "none":
+        return jnp.einsum("eck,ekn->ecn", x, w)
+    from repro.core.qcd import quantized_matmul
+    f = partial(quantized_matmul, a_bits=policy.a_bits, w_bits=policy.w_bits,
+                g_bits=policy.g_bits, group_size=policy.group_size)
+    return jax.vmap(lambda a, b: f(a, b))(x, w)
+
+
+def moe_apply(fz, tr, x, cfg: ModelConfig, policy: QuantPolicy):
+    """Top-k routed MoE via sort-based capacity dispatch.
+
+    Dispatch/combine are gathers/scatters (memory ops, no FLOPs inflation);
+    the expert GEMMs are grouped (E, C, d) x (E, d, f) batched matmuls that
+    shard over the `experts` logical axis (EP on the model mesh axis).
+    """
+    b, t, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    f = cfg.moe_d_ff or cfg.d_ff
+    n_tok = b * t
+    xf = x.reshape(n_tok, d)
+
+    logits = (xf.astype(jnp.float32) @ fz["router"])            # (N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eidx = jax.lax.top_k(probs, k)                        # (N, k)
+    gate = gate / jnp.sum(gate, axis=-1, keepdims=True)
+
+    # capacity floor covers the decode regime (few tokens, every copy must
+    # land) without inflating the training buffers
+    cap = int(max(round(n_tok * k / e * cfg.capacity_factor),
+                  min(n_tok, 16), 1))
+    flat_e = eidx.reshape(-1)                                   # (N*k,)
+    # Rank each (token, slot) within its expert via a one-hot cumsum in
+    # token order — equivalent to the stable-argsort rank but with NO
+    # global sort (a multi-device sort is an all-to-all storm; §Perf MoE
+    # iteration 1). The cumsum shards cleanly along the token axis.
+    onehot = (flat_e[:, None] == jnp.arange(e)[None, :]).astype(jnp.int32)
+    pos_all = jnp.cumsum(onehot, axis=0)                        # (N*k, E)
+    pos = jnp.take_along_axis(pos_all, flat_e[:, None], axis=1)[:, 0] - 1
+    keep = pos < cap
+    # overflow copies clamp to slot 0 with a zero contribution (scatter-ADD
+    # keeps slot 0 exact); buffer stays (E, C, ...) divisible so the expert
+    # axis shards instead of replicating a flat (E*C+1,) scratch
+    # (§Perf MoE iteration 2)
+    buf_slot = jnp.where(keep, flat_e * cap + pos, 0)
+    tok_of_slot = jnp.arange(n_tok * k) // k                    # token index
+
+    contrib = xf[tok_of_slot] * keep[:, None].astype(xf.dtype)
+    xb = jnp.zeros((e * cap, d), x.dtype).at[buf_slot].add(contrib)
+    xe = xb.reshape(e, cap, d)
+    xe = shard(xe, "experts", None, None)
+
+    wg = fz["w_gate"].dequantize(x.dtype)
+    wu = fz["w_up"].dequantize(x.dtype)
+    wd = fz["w_down"].dequantize(x.dtype)
+    wg = shard(wg, "experts", "w_embed", None)
+    wu = shard(wu, "experts", "w_embed", None)
+    wd = shard(wd, "experts", None, "w_embed")
+    act = jax.nn.silu if cfg.act == "silu" else partial(jax.nn.gelu,
+                                                        approximate=True)
+    g = _quantized_bmm(xe, wg, policy)
+    u = _quantized_bmm(xe, wu, policy)
+    h = act(g.astype(jnp.float32)).astype(u.dtype) * u
+    h = shard(h, "experts", None, "ff")
+    ye = _quantized_bmm(h, wd, policy)                          # (E, C, d)
+
+    # combine: gather each kept (token, expert) copy, weight, scatter-add
+    yb = ye.reshape(e * cap, d)
+    # buf_slot/tok_of_slot are already in token order under the cumsum rank;
+    # dropped copies gather slot 0 but are masked to zero weight
+    w_copy = (gate.reshape(-1) * keep.astype(gate.dtype))[:, None]
+    per_copy = yb[buf_slot] * w_copy.astype(ye.dtype)
+    y = jnp.zeros((n_tok, d), ye.dtype).at[tok_of_slot].add(per_copy)
+    return y.reshape(b, t, d)

@@ -1,0 +1,387 @@
+"""Unified language model over all assigned families (dense / moe / ssm /
+hybrid / encdec / vlm / audio) with GSQ-Tuning quantization throughout.
+
+The layer stack is a ``jax.lax.scan`` over vmap-stacked per-layer params
+(keeps HLO size O(1) in depth — essential for 512-device dry-run compiles)
+with optional rematerialization.
+
+Public entry points:
+  init_model(key, cfg, policy)            -> (frozen, train)
+  forward(frozen, train, batch, cfg, pol) -> logits     (teacher forcing)
+  decode_step(...)                        -> logits, cache (one token)
+  init_decode_cache(...)
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import QuantPolicy
+from repro.distributed.sharding import shard
+from repro.models.config import ModelConfig
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models.attention import MaskInfo
+
+_MASK_BIDIR = MaskInfo(causal=False)
+
+
+# --------------------------------------------------------------------------
+# Per-layer init / apply by family
+# --------------------------------------------------------------------------
+
+def _layer_init(key, cfg: ModelConfig, policy: QuantPolicy,
+                cross: bool = False):
+    """One block. ``cross=True`` adds cross-attention (whisper decoder)."""
+    keys = jax.random.split(key, 8)
+    fz, tr = {}, {}
+    fam = cfg.family
+    fz["ln1"] = L.norm_init(cfg)
+    if fam == "ssm":
+        fz["ssm"], tr["ssm"] = S.ssm_init(keys[0], cfg, policy)
+        return fz, tr
+    fz["attn"], tr["attn"] = L.attn_init(keys[0], cfg, policy)
+    if cfg.hybrid:
+        fz["ssm"], tr["ssm"] = S.ssm_init(keys[1], cfg, policy)
+        fz["attn_out_norm"] = L.rmsnorm_init(cfg.d_model)
+        fz["ssm_out_norm"] = L.rmsnorm_init(cfg.d_model)
+    if cross:
+        fz["ln_cross"] = L.norm_init(cfg)
+        fz["cross"], tr["cross"] = L.attn_init(keys[2], cfg, policy,
+                                               cross=True)
+    fz["ln2"] = L.norm_init(cfg)
+    if cfg.n_experts:
+        fz["moe"], tr["moe"] = L.moe_init(keys[3], cfg, policy)
+        if cfg.dense_residual:
+            fz["mlp"], tr["mlp"] = L.mlp_init(keys[4], cfg, policy)
+    else:
+        fz["mlp"], tr["mlp"] = L.mlp_init(keys[4], cfg, policy)
+    return fz, tr
+
+
+def _mixer(fz, tr, h, cfg, policy, *, positions, mask_info, layer_cache,
+           ring_buffer, use_rope, is_global=None, enc_kv=None):
+    """Token mixer of a block: attention / ssm / both (hybrid)."""
+    new_cache = {}
+    if cfg.family == "ssm":
+        y, sc = S.ssm_apply(fz["ssm"], tr["ssm"], h, cfg, policy,
+                            cache=layer_cache)
+        return y, (sc if sc is not None else {})
+    if cfg.hybrid:
+        attn_cache = {k: layer_cache[k] for k in ("k", "v", "index")} \
+            if layer_cache else None
+        ssm_cache = {k: layer_cache[k] for k in ("state", "conv")} \
+            if layer_cache else None
+        ya, ac = L.attn_apply(fz["attn"], tr["attn"], h, cfg, policy,
+                              positions=positions, mask_info=mask_info,
+                              layer_cache=attn_cache,
+                              ring_buffer=ring_buffer, use_rope=use_rope)
+        ys, sc = S.ssm_apply(fz["ssm"], tr["ssm"], h, cfg, policy,
+                             cache=ssm_cache)
+        # Hymba: normalize each head-type output, then average
+        y = 0.5 * (L.rmsnorm(fz["attn_out_norm"], ya, cfg.norm_eps)
+                   + L.rmsnorm(fz["ssm_out_norm"], ys, cfg.norm_eps))
+        if ac is not None:
+            new_cache.update({k: ac[k] for k in ("k", "v", "index")})
+        if sc is not None:
+            new_cache.update(sc)
+        return y, new_cache
+    y, ac = L.attn_apply(fz["attn"], tr["attn"], h, cfg, policy,
+                         positions=positions, mask_info=mask_info,
+                         layer_cache=layer_cache, ring_buffer=ring_buffer,
+                         use_rope=use_rope)
+    return y, (ac if ac is not None else {})
+
+
+def _block_apply(fz, tr, x, cfg: ModelConfig, policy: QuantPolicy, *,
+                 positions, mask_info=None, layer_cache=None,
+                 ring_buffer=False, use_rope=True, is_global=None,
+                 enc_kv=None):
+    """Pre-norm residual block; returns (x_out, new_layer_cache)."""
+    h = L.norm_apply(cfg, fz["ln1"], x)
+    t = x.shape[1]
+    if layer_cache is not None and "k" in layer_cache:
+        # Decode/prefill: positions and mask derive from the cache index.
+        idx = layer_cache["index"]
+        qpos = idx + jnp.arange(t)
+        mask_info = MaskInfo(q_offset=idx, causal=True,
+                             window=cfg.sliding_window or 0,
+                             is_global=is_global if cfg.sliding_window
+                             else None)
+        positions = jnp.broadcast_to(qpos[None], (x.shape[0], t))
+    elif mask_info is None:
+        mask_info = MaskInfo(q_offset=0, causal=cfg.causal,
+                             window=cfg.sliding_window or 0,
+                             is_global=is_global if cfg.sliding_window
+                             else None)
+    elif cfg.sliding_window and is_global is not None:
+        mask_info = MaskInfo(q_offset=mask_info.q_offset,
+                             causal=mask_info.causal,
+                             window=cfg.sliding_window,
+                             is_global=is_global)
+    y, new_cache = _mixer(fz, tr, h, cfg, policy, positions=positions,
+                          mask_info=mask_info, layer_cache=layer_cache,
+                          ring_buffer=ring_buffer, use_rope=use_rope,
+                          is_global=is_global, enc_kv=enc_kv)
+    x = x + y
+    if cfg.family == "ssm":
+        return x, new_cache
+    if enc_kv is not None:                       # whisper decoder cross-attn
+        h = L.norm_apply(cfg, fz["ln_cross"], x)
+        x = x + L.cross_attn_apply(fz["cross"], tr["cross"], h, enc_kv,
+                                   cfg, policy)
+    h = L.norm_apply(cfg, fz["ln2"], x)
+    if cfg.n_experts:
+        y = L.moe_apply(fz["moe"], tr["moe"], h, cfg, policy)
+        if cfg.dense_residual:
+            y = y + L.mlp_apply(fz["mlp"], tr["mlp"], h, cfg, policy)
+    else:
+        y = L.mlp_apply(fz["mlp"], tr["mlp"], h, cfg, policy)
+    x = x + y
+    x = shard(x, "batch", None, "embed")
+    return x, new_cache
+
+
+# --------------------------------------------------------------------------
+# Model init
+# --------------------------------------------------------------------------
+
+def init_model(key, cfg: ModelConfig, policy: QuantPolicy):
+    """Returns (frozen, train). Layer params are stacked along a leading L
+    axis via vmap so the stack can be scanned."""
+    k_emb, k_layers, k_enc, k_unemb = jax.random.split(key, 4)
+    vp, d = cfg.padded_vocab, cfg.d_model
+    fz, tr = {}, {}
+    fz["embed"] = (jax.random.normal(k_emb, (vp, d), jnp.float32)
+                   * (d ** -0.5)).astype(jnp.bfloat16)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    cross = cfg.is_encoder_decoder
+    init_fn = partial(_layer_init, cfg=cfg, policy=policy, cross=cross)
+    fz["layers"], tr["layers"] = jax.vmap(init_fn)(layer_keys)
+    fz["final_norm"] = L.norm_init(cfg)
+    if not cfg.tie_embeddings:
+        fz["unembed"] = (jax.random.normal(k_unemb, (d, vp), jnp.float32)
+                         * (d ** -0.5)).astype(jnp.bfloat16)
+    if cfg.is_encoder_decoder:
+        enc_keys = jax.random.split(k_enc, cfg.n_encoder_layers)
+        enc_init = partial(_layer_init, cfg=cfg, policy=policy, cross=False)
+        fz["enc_layers"], tr["enc_layers"] = jax.vmap(enc_init)(enc_keys)
+        fz["enc_final_norm"] = L.norm_init(cfg)
+    return fz, tr
+
+
+# --------------------------------------------------------------------------
+# Layer-stack scan
+# --------------------------------------------------------------------------
+
+def _scan_stack(fz_stack, tr_stack, x, cfg, policy, *, positions,
+                mask_info=None, use_rope=True, enc_kv=None,
+                is_global_flags=None, cache=None, ring_flags=None):
+    """Scan a stacked layer tree. cache (if given) is a stacked per-layer
+    dict; returns (x, new_cache)."""
+    remat = cfg.remat and cache is None
+
+    def body(carry, per_layer):
+        h = carry
+        fz_l, tr_l, ig, cache_l = per_layer
+
+        def run(h, fz_l, tr_l, cache_l):
+            return _block_apply(
+                fz_l, tr_l, h, cfg, policy, positions=positions,
+                mask_info=mask_info, layer_cache=cache_l, ring_buffer=False,
+                use_rope=use_rope, is_global=ig, enc_kv=enc_kv)
+
+        if remat:
+            # (§Perf iter 6 tried save_only_these_names("qcd_wq") to keep
+            # quantized weights across the bwd replay — measured WORSE on
+            # the HLO-walk memory term; reverted to full remat.)
+            run = jax.checkpoint(
+                run, policy=jax.checkpoint_policies.nothing_saveable)
+        h, new_cache_l = run(h, fz_l, tr_l, cache_l)
+        return h, new_cache_l
+
+    n = cfg.n_layers if is_global_flags is None else len(is_global_flags)
+    ig = (jnp.zeros((n,), bool) if is_global_flags is None
+          else jnp.asarray(is_global_flags))
+    xs = (fz_stack, tr_stack, ig, cache)
+    x, new_cache = jax.lax.scan(body, x, xs)
+    return x, (new_cache if cache is not None else None)
+
+
+# --------------------------------------------------------------------------
+# Forward (teacher forcing) — training/prefill path
+# --------------------------------------------------------------------------
+
+def embed_inputs(fz, batch, cfg: ModelConfig, pos_offset=0):
+    """tokens -> embeddings, or pass through precomputed frontend
+    embeddings (vlm/audio stubs). ``pos_offset`` (traced ok) shifts the
+    absolute-position embedding during decode."""
+    if "inputs_embeds" in batch:
+        x = batch["inputs_embeds"].astype(jnp.bfloat16)
+    else:
+        tok = batch["tokens"]
+        x = fz["embed"][tok]
+    if cfg.family == "encdec":                   # whisper: sinusoidal pos
+        t = x.shape[1]
+        pos = jnp.arange(t) + pos_offset
+        d = cfg.d_model
+        dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+        ang = pos.astype(jnp.float32)[:, None] / jnp.power(10000.0, dim / d)
+        pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+        x = x + pe.astype(x.dtype)[None]
+    return shard(x, "batch", None, "embed")
+
+
+def norm_apply_final(fz, x, cfg: ModelConfig):
+    return L.norm_apply(cfg, fz["final_norm"], x)
+
+
+def forward_hidden(fz, tr, batch, cfg: ModelConfig, policy: QuantPolicy):
+    """forward() up to (and including) the final norm — (B, T, d). The
+    training loss fuses unembedding+CE per T-chunk on top of this so the
+    (B, T, V) logits of big-vocab archs are never materialized."""
+    x = embed_inputs(fz, batch, cfg)
+    b, t, _ = x.shape
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+    flags = None
+    if cfg.global_attn_layers:
+        flags = [i in cfg.global_attn_layers for i in range(cfg.n_layers)]
+    if cfg.is_encoder_decoder:
+        enc_out = encode(fz, tr, batch, cfg, policy)
+        x, _ = _scan_stack_encdec(fz, tr, x, enc_out, cfg, policy,
+                                  positions=positions)
+    else:
+        x, _ = _scan_stack(fz["layers"], tr["layers"], x, cfg, policy,
+                           positions=positions,
+                           use_rope=cfg.family != "encdec",
+                           is_global_flags=flags)
+    return norm_apply_final(fz, x, cfg)
+
+
+def fused_ce_loss(fz, x, labels, loss_mask, cfg: ModelConfig,
+                  t_chunk: int = 512):
+    """sum-CE and token count, scanning T chunks of the unembed GEMM so only
+    (B, tc, V) logits are live at once (vocab stays model-sharded).
+    Backward recomputes each chunk's logits (checkpointed scan)."""
+    w = (fz["embed"].T if cfg.tie_embeddings else fz["unembed"])
+    b, t, d = x.shape
+    tc = min(t_chunk, t)
+    while t % tc != 0:
+        tc -= 1
+    nt = t // tc
+    xs = (x.reshape(b, nt, tc, d).transpose(1, 0, 2, 3),
+          labels.reshape(b, nt, tc).transpose(1, 0, 2),
+          loss_mask.reshape(b, nt, tc).transpose(1, 0, 2))
+
+    @partial(jax.checkpoint, policy=jax.checkpoint_policies.nothing_saveable)
+    def chunk_loss(xc, lc, mc):
+        logits = jnp.einsum("btd,dv->btv", xc, w.astype(xc.dtype),
+                            preferred_element_type=jnp.float32)
+        logits = shard(logits, "batch", None, "vocab")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        return jnp.sum((lse - ll) * mc), jnp.sum(mc)
+
+    def body(carry, inp):
+        ls, ns = carry
+        l, n = chunk_loss(*inp)
+        return (ls + l, ns + n), None
+
+    (loss_sum, n_tok), _ = jax.lax.scan(
+        body, (jnp.zeros(()), jnp.zeros(())), xs)
+    return loss_sum, n_tok
+
+
+def unembed(fz, x, cfg: ModelConfig):
+    w = (fz["embed"].T if cfg.tie_embeddings else fz["unembed"])
+    logits = jnp.einsum("btd,dv->btv", x, w.astype(x.dtype),
+                        preferred_element_type=jnp.float32)
+    return shard(logits, "batch", None, "vocab")
+
+
+def encode(fz, tr, batch, cfg: ModelConfig, policy: QuantPolicy):
+    """Whisper encoder over stub frame embeddings (B, S_enc, d)."""
+    x = batch["frames"].astype(jnp.bfloat16)
+    x = x + L.sinusoidal_positions(x.shape[1], cfg.d_model
+                                   ).astype(x.dtype)[None]
+    b, s, _ = x.shape
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    x, _ = _scan_stack(fz["enc_layers"], tr["enc_layers"], x, cfg, policy,
+                       positions=pos, mask_info=_MASK_BIDIR,
+                       use_rope=False)
+    return L.norm_apply(cfg, fz["enc_final_norm"], x)
+
+
+def forward(fz, tr, batch, cfg: ModelConfig, policy: QuantPolicy):
+    """Teacher-forcing forward -> logits (B, T, Vp)."""
+    x = embed_inputs(fz, batch, cfg)
+    b, t, _ = x.shape
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+    mask_info = None   # _block_apply builds the structural mask per layer
+    enc_kv = None
+    if cfg.is_encoder_decoder:
+        enc_out = encode(fz, tr, batch, cfg, policy)
+        # cross-attn k/v are computed per layer inside the block via the
+        # layer's own cross projections: pass the raw encoder output and
+        # project per layer (scan-invariant closure).
+        enc_kv = enc_out
+    flags = None
+    if cfg.global_attn_layers:
+        flags = [i in cfg.global_attn_layers for i in range(cfg.n_layers)]
+
+    if enc_kv is not None:
+        # For enc-dec we cannot close over per-layer cross projections in a
+        # plain scan xs-free way; _block_apply projects enc_out per layer.
+        x, _ = _scan_stack_encdec(fz, tr, x, enc_kv, cfg, policy,
+                                  positions=positions)
+    else:
+        x, _ = _scan_stack(fz["layers"], tr["layers"], x, cfg, policy,
+                           positions=positions,
+                           use_rope=cfg.family != "encdec",
+                           is_global_flags=flags)
+    x = L.norm_apply(cfg, fz["final_norm"], x)
+    return unembed(fz, x, cfg)
+
+
+def _scan_stack_encdec(fz, tr, x, enc_out, cfg, policy, *, positions,
+                       cache=None):
+    """Decoder stack for whisper: per-layer cross-attention against
+    ``enc_out`` (scan-invariant). During decode (cache given, enc_out=None)
+    the per-layer cross k/v come from the cache ("ck"/"cv"), projected once
+    at prefill."""
+    remat = cfg.remat and cache is None
+
+    def body(h, per_layer):
+        fz_l, tr_l, cache_l = per_layer
+
+        def run(h, fz_l, tr_l, cache_l):
+            if enc_out is not None:
+                ekv = L.cross_kv(fz_l["cross"], tr_l["cross"], enc_out, cfg,
+                                 policy)
+            else:
+                ekv = (cache_l["ck"], cache_l["cv"])
+            self_cache = None
+            if cache_l is not None:
+                self_cache = {k: cache_l[k] for k in ("k", "v", "index")}
+            h, nc = _block_apply(fz_l, tr_l, h, cfg, policy,
+                                 positions=positions,
+                                 layer_cache=self_cache, use_rope=False,
+                                 enc_kv=ekv)
+            if cache_l is not None:
+                nc = dict(nc, ck=cache_l["ck"], cv=cache_l["cv"])
+            return h, nc
+        if remat:
+            run = jax.checkpoint(
+                run, policy=jax.checkpoint_policies.nothing_saveable)
+        h, nc = run(h, fz_l, tr_l, cache_l)
+        return h, nc
+
+    x, new_cache = jax.lax.scan(body, x, (fz["layers"], tr["layers"], cache))
+    return x, (new_cache if cache is not None else None)

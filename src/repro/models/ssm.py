@@ -1,0 +1,240 @@
+"""Mamba-2 (SSD — state-space duality) layer, chunked training scan and O(1)
+recurrent decode. arXiv:2405.21060.
+
+GSQ integration (DESIGN §6): the in/out projections are GSQ linear layers
+(NF4 base + GSE-QCD adapters). The SSD intra-chunk matmuls are
+activation-activation GEMMs — their operands are GSE-quantized with a
+straight-through estimator when the policy is quantized; the recurrence
+itself (elementwise decays) stays 16/32-bit per the paper's non-linear-op
+exemption.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gse import gse_fake_quant_ste
+from repro.core.lora import init_gsq_linear, apply_gsq_linear
+from repro.core.policy import QuantPolicy
+from repro.models.config import ModelConfig
+from repro.distributed.sharding import shard
+
+
+def ssm_init(key, cfg: ModelConfig, policy: QuantPolicy):
+    d = cfg.d_model
+    di = cfg.d_inner
+    h = cfg.ssm_heads
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    conv_dim = di + 2 * g * n
+    k_in, k_out, k_conv, k_dt = jax.random.split(key, 4)
+    proj_out = 2 * di + 2 * g * n + h          # z, x, B, C, dt
+    fz, tr = {}, {}
+    fz["in_proj"], tr["in_proj"] = init_gsq_linear(k_in, d, proj_out, policy)
+    fz["out_proj"], tr["out_proj"] = init_gsq_linear(k_out, di, d, policy)
+    fz["conv_w"] = (jax.random.normal(k_conv, (cfg.ssm_conv, conv_dim),
+                                      jnp.float32) * (cfg.ssm_conv ** -0.5))
+    fz["conv_b"] = jnp.zeros((conv_dim,), jnp.float32)
+    # A in (-inf, 0): A = -exp(A_log); init A in [-1, ... ] standard
+    fz["A_log"] = jnp.log(jnp.arange(1, h + 1, dtype=jnp.float32))
+    fz["D"] = jnp.ones((h,), jnp.float32)
+    fz["dt_bias"] = jnp.log(jnp.expm1(
+        jnp.exp(jax.random.uniform(k_dt, (h,), jnp.float32,
+                                   jnp.log(1e-3), jnp.log(1e-1)))))
+    fz["gate_norm"] = {"scale": jnp.ones((di,), jnp.float32)}
+    return fz, tr
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x: (B, T, C); w: (K, C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(k):
+        out = out + xp[:, i: i + x.shape[1], :].astype(jnp.float32) * w[i]
+    return (out + b).astype(x.dtype)
+
+
+def _split_proj(p, cfg: ModelConfig):
+    di, g, n, h = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    z, xbc_dt = jnp.split(p, [di], axis=-1)
+    xbc, dt = jnp.split(xbc_dt, [di + 2 * g * n], axis=-1)
+    return z, xbc, dt
+
+
+def _gated_out(fz, tr, y, z, cfg, policy, eps):
+    """y * silu(z) -> RMSNorm -> out_proj."""
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    yf = y.astype(jnp.float32)
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    y = (yf * jax.lax.rsqrt(var + eps)
+         * fz["gate_norm"]["scale"]).astype(y.dtype)
+    return apply_gsq_linear(fz["out_proj"], tr["out_proj"], y, policy)
+
+
+def _maybe_q(x, policy: QuantPolicy):
+    if policy.fmt == "gse" and policy.a_bits is not None:
+        from repro.core.qcd import effective_group_size
+        gs = effective_group_size(x.shape[-1], policy.group_size)
+        return gse_fake_quant_ste(x, policy.a_bits, gs)
+    return x
+
+
+def ssd_chunked(xh, dt, A, B_mat, C_mat, D, cfg: ModelConfig,
+                policy: QuantPolicy,
+                init_state: Optional[jax.Array] = None):
+    """Chunked SSD. Shapes:
+      xh: (B, T, H, P)   dt: (B, T, H)   A: (H,) negative
+      B_mat/C_mat: (B, T, G, N)  (H/G heads share each group)
+    Returns y: (B, T, H, P) and final state (B, H, P, N).
+    """
+    b, t, h, p = xh.shape
+    g, n = B_mat.shape[2], B_mat.shape[3]
+    q = min(cfg.ssm_chunk, t)
+    assert t % q == 0, (t, q)
+    nc = t // q
+    rep = h // g
+
+    dtf = dt.astype(jnp.float32)
+    la = dtf * A                                           # log decay (B,T,H)
+    xw = xh * dtf[..., None].astype(xh.dtype)              # dt-weighted input
+
+    la_c = la.reshape(b, nc, q, h)
+    cum = jnp.cumsum(la_c, axis=2)                         # (B,Nc,Q,H)
+    total = cum[:, :, -1, :]                               # (B,Nc,H)
+    xw_c = xw.reshape(b, nc, q, h, p)
+    B_c = B_mat.reshape(b, nc, q, g, n)
+    C_c = C_mat.reshape(b, nc, q, g, n)
+    # broadcast groups to heads
+    B_h = jnp.repeat(B_c, rep, axis=3)                     # (B,Nc,Q,H,N)
+    C_h = jnp.repeat(C_c, rep, axis=3)
+
+    Bq = _maybe_q(B_h, policy)
+    Cq = _maybe_q(C_h, policy)
+    xq = _maybe_q(xw_c, policy)
+
+    # --- intra-chunk (quadratic within chunk) ---
+    scores = jnp.einsum("bcihn,bcjhn->bchij", Cq, Bq,
+                        preferred_element_type=jnp.float32)
+    cum_t = cum.transpose(0, 1, 3, 2)                      # (B,Nc,H,Q)
+    # decay[b,c,h,i,j] = cum_i - cum_j ; mask j<=i
+    decay = cum_t[:, :, :, :, None] - cum_t[:, :, :, None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    gmat = jnp.where(mask, jnp.exp(decay), 0.0)
+    y_intra = jnp.einsum("bchij,bcjhp->bcihp",
+                         (scores * gmat).astype(xh.dtype), xq)
+
+    # --- chunk boundary states ---
+    # S_c = sum_j exp(total - cum_j) * B_j ⊗ x_j  : (B,Nc,H,N,P)
+    w_state = jnp.exp(total[:, :, None, :] - cum)          # (B,Nc,Q,H)
+    S_loc = jnp.einsum("bcjhn,bcjhp->bchnp",
+                       (Bq.astype(jnp.float32)
+                        * w_state[..., None]).astype(xh.dtype), xq)
+
+    # --- inter-chunk recurrence over Nc ---
+    chunk_decay = jnp.exp(total)                           # (B,Nc,H)
+
+    def step(s, inp):
+        s_loc, dec = inp                                   # (B,H,N,P), (B,H)
+        s_new = s * dec[..., None, None] + s_loc.astype(jnp.float32)
+        return s_new, s
+
+    s0 = (jnp.zeros((b, h, n, p), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+    final_state, s_prevs = jax.lax.scan(
+        step, s0,
+        (S_loc.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    s_prev = s_prevs.transpose(1, 0, 2, 3, 4)              # (B,Nc,H,N,P)
+
+    y_inter = jnp.einsum("bcihn,bchnp->bcihp",
+                         (Cq.astype(jnp.float32)
+                          * jnp.exp(cum)[..., None]).astype(xh.dtype),
+                         s_prev.astype(xh.dtype))
+    y = (y_intra + y_inter).reshape(b, t, h, p)
+    y = y + xh * D[None, None, :, None].astype(xh.dtype)
+    return y, final_state
+
+
+def ssm_apply(fz, tr, x, cfg: ModelConfig, policy: QuantPolicy,
+              cache: Optional[dict] = None
+              ) -> Tuple[jax.Array, Optional[dict]]:
+    """Full Mamba-2 mixer. Training path (cache=None) uses chunked SSD;
+    decode path (cache: {"state": (B,H,N,P)?? , "conv": (B,K-1,C)}) does the
+    O(1) recurrent update. T must be 1 in decode."""
+    b, t, d = x.shape
+    h, p = cfg.ssm_heads, cfg.ssm_head_dim
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    di = cfg.d_inner
+    proj = apply_gsq_linear(fz["in_proj"], tr["in_proj"], x, policy)
+    z, xbc, dt = _split_proj(proj, cfg)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + fz["dt_bias"][None, None, :])
+    A = -jnp.exp(fz["A_log"].astype(jnp.float32))
+
+    if cache is None or t > 1:
+        # Training or prefill: chunked SSD over the whole sequence. When a
+        # cache is given (prefill), seed from / write back the SSM state and
+        # the conv ring tail.
+        xbc_raw = xbc
+        xbc = _causal_conv(xbc, fz["conv_w"], fz["conv_b"])
+        xbc = jax.nn.silu(xbc.astype(jnp.float32)).astype(x.dtype)
+        xh, Bm, Cm = jnp.split(xbc, [di, di + g * n], axis=-1)
+        xh = xh.reshape(b, t, h, p)
+        xh = shard(xh, "batch", None, "ssm_heads", None)
+        Bm = Bm.reshape(b, t, g, n)
+        Cm = Cm.reshape(b, t, g, n)
+        # pad T to a chunk multiple; padded steps get dt=0 (identity state
+        # transition, zero input) so they are exact no-ops.
+        q = min(cfg.ssm_chunk, t)
+        pad = (-t) % q
+        if pad:
+            padt = lambda v: jnp.pad(v, ((0, 0), (0, pad)) +
+                                     ((0, 0),) * (v.ndim - 2))
+            xh, Bm, Cm, dt = padt(xh), padt(Bm), padt(Cm), padt(dt)
+        init_state = None if cache is None else cache["state"]
+        y, final_state = ssd_chunked(xh, dt, A, Bm, Cm, fz["D"], cfg, policy,
+                                     init_state=init_state)
+        y = y[:, :t].reshape(b, t, di)
+        out = _gated_out(fz, tr, y, z, cfg, policy, cfg.norm_eps)
+        if cache is None:
+            return out, None
+        kc = cfg.ssm_conv - 1
+        new_cache = {"state": final_state.astype(cache["state"].dtype),
+                     "conv": xbc_raw[:, t - kc:, :].astype(cache["conv"].dtype)}
+        return out, new_cache
+
+    # ---- decode: recurrent update (T == 1) ----
+    conv_buf = cache["conv"]                               # (B, K-1, C)
+    xbc_t = xbc[:, 0]                                      # (B, C)
+    win = jnp.concatenate([conv_buf, xbc_t[:, None]], axis=1)  # (B,K,C)
+    w = fz["conv_w"]                                       # (K, C)
+    xbc_c = jnp.sum(win.astype(jnp.float32) * w[None], axis=1) + fz["conv_b"]
+    xbc_c = jax.nn.silu(xbc_c).astype(x.dtype)             # (B, C)
+    xh, Bm, Cm = jnp.split(xbc_c, [di, di + g * n], axis=-1)
+    xh = xh.reshape(b, h, p)
+    Bm = jnp.repeat(Bm.reshape(b, g, n), h // g, axis=1)   # (B,H,N)
+    Cm = jnp.repeat(Cm.reshape(b, g, n), h // g, axis=1)
+    dt1 = dt[:, 0]                                         # (B,H)
+    a = jnp.exp(dt1 * A[None])                             # (B,H)
+    state = cache["state"].astype(jnp.float32)             # (B,H,N,P)
+    upd = (Bm * dt1[..., None])[..., :, None] * xh[:, :, None, :]
+    state = state * a[..., None, None] + upd
+    y = jnp.einsum("bhn,bhnp->bhp", Cm.astype(jnp.float32), state)
+    y = (y + xh.astype(jnp.float32) * fz["D"][None, :, None]).astype(x.dtype)
+    y = y.reshape(b, 1, di)
+    out = _gated_out(fz, tr, y, z, cfg, policy, cfg.norm_eps)
+    new_cache = {"state": state.astype(cache["state"].dtype),
+                 "conv": win[:, 1:]}
+    return out, new_cache
+
+
+def ssm_cache_init(cfg: ModelConfig, batch: int, n_layers: int,
+                   dtype=jnp.float32):
+    h, p, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+    return {
+        "state": jnp.zeros((n_layers, batch, h, n, p), dtype),
+        "conv": jnp.zeros((n_layers, batch, cfg.ssm_conv - 1, conv_dim),
+                          dtype),
+    }

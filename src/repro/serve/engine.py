@@ -1,0 +1,171 @@
+"""Serving path: KV/SSM cache management, prefill and single-token decode.
+
+Cache layout (stacked over layers so the decoder stack scans it):
+  attention: k/v (L, B, S_max, Kv, D) + index scalar
+  ssm:       state (L, B, H, N, P) + conv (L, B, K-1, C)
+  encdec:    adds cross k/v (L, B, S_enc, Kv, D)
+
+Cache sharding (DESIGN §5): batch over (pod, data); kv-heads over model when
+divisible, otherwise the sequence axis is sharded over model (GQA archs with
+few KV heads — the softmax over the sharded length lowers to an all-reduce).
+
+Beyond-paper: ``kv_quant_bits`` stores the KV cache GSE-quantized (the
+paper's format reused as a serving memory optimization).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.policy import QuantPolicy
+from repro.models.config import ModelConfig
+from repro.models import model as M
+from repro.models import ssm as S
+from repro.distributed.sharding import current_ctx, resolve_pspec
+
+
+def kv_cache_pspec(mesh, rules, batch: int, kv_heads: int,
+                   seq_len: int = 0):
+    """(L, B, S, Kv, D) spec: kv on model when divisible, else the sequence
+    axis goes on model (long-context GQA caches). All axes divisibility-
+    guarded (e.g. long_500k has batch=1 — batch must replicate)."""
+    model_size = mesh.shape.get("model", 1)
+    if kv_heads % model_size == 0 and model_size > 1:
+        return resolve_pspec((1, batch, max(seq_len, 1), kv_heads, 1),
+                             (None, "batch", None, "kv_heads", None),
+                             mesh, rules)
+    # fall back: shard sequence over model
+    import dataclasses as _dc
+    from repro.distributed.sharding import ShardingRules
+    seq_rules = _dc.replace(rules, seq="model")
+    return resolve_pspec((1, batch, max(seq_len, 1), kv_heads, 1),
+                         (None, "batch", "seq", None, None),
+                         mesh, seq_rules)
+
+
+def init_decode_cache(cfg: ModelConfig, batch: int, max_len: int,
+                      dtype=jnp.bfloat16, enc_len: Optional[int] = None):
+    """Zeroed stacked decode cache for ``batch`` sequences of ``max_len``."""
+    l = cfg.n_layers
+    cache = {}
+    if cfg.uses_attention:
+        kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+        cache["k"] = jnp.zeros((l, batch, max_len, kv, hd), dtype)
+        cache["v"] = jnp.zeros((l, batch, max_len, kv, hd), dtype)
+        cache["index"] = jnp.zeros((l,), jnp.int32)
+    if cfg.uses_ssm:
+        sc = S.ssm_cache_init(cfg, batch, l, jnp.float32)
+        cache["state"] = sc["state"]
+        cache["conv"] = sc["conv"]
+    if cfg.is_encoder_decoder:
+        kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+        se = enc_len or cfg.encoder_len
+        cache["ck"] = jnp.zeros((l, batch, se, kv, hd), dtype)
+        cache["cv"] = jnp.zeros((l, batch, se, kv, hd), dtype)
+    return cache
+
+
+def cache_shardings(cfg: ModelConfig, batch: int, max_len: int, mesh, rules,
+                    enc_len: Optional[int] = None):
+    """NamedSharding tree matching init_decode_cache's structure."""
+    out = {}
+    if cfg.uses_attention:
+        spec = kv_cache_pspec(mesh, rules, batch, cfg.n_kv_heads, max_len)
+        out["k"] = NamedSharding(mesh, spec)
+        out["v"] = NamedSharding(mesh, spec)
+        out["index"] = NamedSharding(mesh, P())
+    if cfg.uses_ssm:
+        h = cfg.ssm_heads
+        out["state"] = NamedSharding(mesh, resolve_pspec(
+            (1, batch, h, 1, 1), (None, "batch", "ssm_heads", None, None),
+            mesh, rules))
+        out["conv"] = NamedSharding(mesh, resolve_pspec(
+            (1, batch, 1, 1), (None, "batch", None, None), mesh, rules))
+    if cfg.is_encoder_decoder:
+        spec = kv_cache_pspec(mesh, rules, batch, cfg.n_kv_heads,
+                              enc_len or cfg.encoder_len)
+        out["ck"] = NamedSharding(mesh, spec)
+        out["cv"] = NamedSharding(mesh, spec)
+    return out
+
+
+def _split_cache(cache):
+    """Partition the flat cache dict into the per-family parts that
+    _scan_stack expects per layer (attention keys + ssm keys merged ok)."""
+    return cache
+
+
+def prefill(fz, tr, batch, cache, cfg: ModelConfig, policy: QuantPolicy):
+    """Run the prompt through the model, writing the cache. Returns
+    (last_logits (B, Vp), cache)."""
+    x = M.embed_inputs(fz, batch, cfg)
+    if cfg.is_encoder_decoder:
+        enc_out = M.encode(fz, tr, batch, cfg, policy)
+        # project & store cross k/v per layer, then run decoder with cache
+        from repro.models.layers import cross_kv
+        ck, cv = jax.vmap(lambda fz_l, tr_l: cross_kv(
+            fz_l["cross"], tr_l["cross"], enc_out, cfg, policy))(
+                fz["layers"], tr["layers"])
+        cache = dict(cache, ck=ck, cv=cv)
+        x, cache = M._scan_stack_encdec(fz, tr, x, None, cfg, policy,
+                                        positions=None, cache=cache)
+    else:
+        x, cache = M._scan_stack(fz["layers"], tr["layers"], x, cfg, policy,
+                                 positions=None,
+                                 use_rope=cfg.family != "encdec",
+                                 is_global_flags=_global_flags(cfg),
+                                 cache=cache)
+    x = M.norm_apply_final(fz, x, cfg)
+    logits = M.unembed(fz, x[:, -1:, :], cfg)
+    return logits[:, 0], cache
+
+
+def _global_flags(cfg: ModelConfig):
+    if cfg.global_attn_layers:
+        return [i in cfg.global_attn_layers for i in range(cfg.n_layers)]
+    return None
+
+
+def decode_step(fz, tr, tokens, cache, cfg: ModelConfig,
+                policy: QuantPolicy):
+    """One autoregressive step. tokens: (B, 1) int32. Returns
+    (logits (B, Vp), new_cache). This is the function the decode_* dry-run
+    cells lower."""
+    offset = cache["index"][0] if "index" in cache else 0
+    x = M.embed_inputs(fz, {"tokens": tokens}, cfg, pos_offset=offset)
+    if cfg.is_encoder_decoder:
+        x, cache = M._scan_stack_encdec(fz, tr, x, None, cfg, policy,
+                                        positions=None, cache=cache)
+    else:
+        x, cache = M._scan_stack(fz["layers"], tr["layers"], x, cfg, policy,
+                                 positions=None,
+                                 use_rope=cfg.family != "encdec",
+                                 is_global_flags=_global_flags(cfg),
+                                 cache=cache)
+    x = M.norm_apply_final(fz, x, cfg)
+    logits = M.unembed(fz, x, cfg)
+    return logits[:, 0], cache
+
+
+def greedy_generate(fz, tr, prompt, cfg: ModelConfig, policy: QuantPolicy,
+                    max_new: int = 16, max_len: Optional[int] = None):
+    """Simple batched greedy decoding loop (example/serving driver)."""
+    b, t = prompt.shape
+    max_len = max_len or (t + max_new)
+    cache = init_decode_cache(cfg, b, max_len)
+    logits, cache = prefill(fz, tr, {"tokens": prompt}, cache, cfg, policy)
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+
+    def body(carry, _):
+        tok, cache = carry
+        logits, cache = decode_step(fz, tr, tok, cache, cfg, policy)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return (nxt, cache), nxt[:, 0]
+
+    (_, cache), toks = jax.lax.scan(body, (tok, cache), None,
+                                    length=max_new - 1)
+    return jnp.concatenate([tok, toks.T], axis=1)

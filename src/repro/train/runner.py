@@ -1,0 +1,139 @@
+"""Training runner: checkpoint-restart, preemption handling, straggler
+watchdog, elastic resume. The orchestration layer a cluster scheduler talks
+to.
+
+Fault-tolerance model (DESIGN §5):
+  * periodic checkpoints (atomic; keep-last-k) + step-exact data resume
+    (the synthetic pipeline is a pure function of (seed, step)),
+  * SIGTERM/SIGINT → finish the in-flight step, emergency-save, exit 0 so
+    the scheduler restarts us cleanly on preemption,
+  * straggler watchdog: EWMA of step wall-time; a step slower than
+    ``straggler_factor``× the EWMA is logged with its timing (on a real
+    cluster this feeds the reschedule signal; here it is observable state),
+  * elastic restart: checkpoints are mesh-agnostic, restore re-lays leaves
+    on whatever mesh the relaunched job builds (CheckpointManager.restore).
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import signal
+import time
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.data.pipeline import DataConfig, batch_at_step
+from repro.optim.adamw8bit import AdamW8bit
+from repro.train.step import TrainConfig, make_train_step, init_residuals
+
+log = logging.getLogger("repro.train")
+
+
+@dataclasses.dataclass
+class RunnerConfig:
+    total_steps: int = 100
+    checkpoint_every: int = 50
+    checkpoint_dir: str = "/tmp/repro_ckpt"
+    keep_checkpoints: int = 3
+    log_every: int = 10
+    straggler_factor: float = 3.0
+    ewma_alpha: float = 0.1
+
+
+class TrainingRunner:
+    def __init__(self, cfg, policy, data_cfg: DataConfig, opt: AdamW8bit,
+                 tcfg: TrainConfig, rcfg: RunnerConfig, mesh=None,
+                 frozen=None, train=None, donate: bool = True):
+        self.cfg, self.policy = cfg, policy
+        self.data_cfg, self.opt, self.tcfg, self.rcfg = \
+            data_cfg, opt, tcfg, rcfg
+        self.mesh = mesh
+        self.frozen, self.train = frozen, train
+        self.opt_state = opt.init(train)
+        n_pods = mesh.shape.get("pod", 1) if mesh else 1
+        self.residuals = init_residuals(train, n_pods) \
+            if tcfg.compress_pod_grads else jax.tree.map(
+                lambda p: np.zeros((0,), np.float32), train)
+        self.step = 0
+        self.ckpt = CheckpointManager(rcfg.checkpoint_dir,
+                                      rcfg.keep_checkpoints)
+        self._preempted = False
+        self._ewma = None
+        self.straggler_events = []
+        self.metrics_history = []
+        fn = make_train_step(cfg, policy, opt, tcfg, mesh)
+        self._step_fn = jax.jit(fn, donate_argnums=(1, 2, 3)) \
+            if donate else jax.jit(fn)
+
+    # ---- fault tolerance hooks ------------------------------------------
+    def install_signal_handlers(self):
+        def handler(signum, frame):
+            log.warning("preemption signal %s — will save and exit", signum)
+            self._preempted = True
+        signal.signal(signal.SIGTERM, handler)
+        signal.signal(signal.SIGINT, handler)
+
+    def maybe_resume(self) -> bool:
+        latest = self.ckpt.latest()
+        if latest is None:
+            return False
+        state_like = {"train": self.train, "opt": self.opt_state,
+                      "residuals": self.residuals}
+        state, meta, step = self.ckpt.restore(latest, state_like)
+        self.train = state["train"]
+        self.opt_state = state["opt"]
+        self.residuals = state["residuals"]
+        self.step = step
+        log.info("resumed from step %d", step)
+        return True
+
+    def save(self):
+        self.ckpt.save(self.step,
+                       {"train": self.train, "opt": self.opt_state,
+                        "residuals": self.residuals},
+                       metadata={"data_seed": self.data_cfg.seed,
+                                 "policy": self.policy.label()})
+
+    # ---- main loop --------------------------------------------------------
+    def run(self, until: Optional[int] = None,
+            on_metrics: Optional[Callable] = None):
+        until = until or self.rcfg.total_steps
+        while self.step < until and not self._preempted:
+            t0 = time.monotonic()
+            batch = batch_at_step(self.data_cfg, self.step)
+            batch = jax.tree.map(jax.numpy.asarray, batch)
+            self.train, self.opt_state, self.residuals, metrics = \
+                self._step_fn(self.frozen, self.train, self.opt_state,
+                              self.residuals, batch)
+            jax.block_until_ready(metrics["loss"])
+            dt = time.monotonic() - t0
+            self._watchdog(dt)
+            self.step += 1
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = self.step
+            m["step_time_s"] = dt
+            self.metrics_history.append(m)
+            if on_metrics:
+                on_metrics(m)
+            if self.step % self.rcfg.log_every == 0:
+                log.info("step %d loss %.4f (%.3fs)", self.step, m["loss"], dt)
+            if self.step % self.rcfg.checkpoint_every == 0:
+                self.save()
+        if self._preempted:
+            self.save()            # emergency checkpoint
+        return self.metrics_history
+
+    def _watchdog(self, dt: float):
+        if self._ewma is None:
+            self._ewma = dt
+            return
+        if dt > self.rcfg.straggler_factor * self._ewma and self.step > 2:
+            self.straggler_events.append({"step": self.step, "dt": dt,
+                                          "ewma": self._ewma})
+            log.warning("straggler step %d: %.3fs vs EWMA %.3fs",
+                        self.step, dt, self._ewma)
+        a = self.rcfg.ewma_alpha
+        self._ewma = (1 - a) * self._ewma + a * dt

@@ -1,0 +1,152 @@
+"""Training step: masked LM loss, microbatched gradient accumulation,
+optional GSE-compressed cross-pod gradient sync, 8-bit AdamW update.
+
+``train_step`` is the function the train_* dry-run cells lower: it takes
+(train_params, opt_state, residuals, batch) and returns updated state +
+metrics, with every GEMM inside running the paper's QCD pipeline.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import QuantPolicy
+from repro.models.config import ModelConfig
+from repro.models import model as M
+from repro.optim.adamw8bit import AdamW8bit, Adam8State
+from repro.distributed.sharding import shard
+from repro.distributed import compression as C
+
+
+def lm_loss(train, frozen, batch, cfg: ModelConfig, policy: QuantPolicy):
+    """Masked cross-entropy over next-token targets, fused per T-chunk so
+    (B, T, V) logits are never materialized (big-vocab archs). fp32 lse."""
+    x = M.forward_hidden(frozen, train, batch, cfg, policy)
+    labels = batch["labels"]
+    mask = batch.get("loss_mask")
+    if mask is None:
+        mask = jnp.ones(labels.shape, jnp.float32)
+    loss_sum, n_tok = M.fused_ce_loss(frozen, x, labels, mask, cfg)
+    denom = jnp.maximum(n_tok, 1.0)
+    loss = loss_sum / denom
+    return loss, {"loss": loss, "tokens": denom}
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    accum_steps: int = 1                  # microbatch count per step
+    compress_pod_grads: bool = False      # GSE cross-pod gradient sync
+    compress_bits: int = 8
+    max_grad_norm: float = 1.0
+
+
+def _microbatch(batch, i, n):
+    """Slice microbatch i of n along the batch axis."""
+    def sl(x):
+        mb = x.shape[0] // n
+        return jax.lax.dynamic_slice_in_dim(x, i * mb, mb, axis=0)
+    return jax.tree.map(sl, batch)
+
+
+def accumulate_grads(train, frozen, batch, cfg: ModelConfig,
+                     policy: QuantPolicy, accum_steps: int):
+    """Mean loss/grads over ``accum_steps`` microbatches via lax.scan —
+    activations live for one microbatch only (DESIGN §5 memory posture)."""
+    loss_grad = jax.value_and_grad(lm_loss, has_aux=True)
+    if accum_steps <= 1:
+        (loss, aux), grads = loss_grad(train, frozen, batch, cfg, policy)
+        return loss, aux, grads
+
+    def body(carry, i):
+        g_acc, l_acc = carry
+        mb = _microbatch(batch, i, accum_steps)
+        (loss, _), grads = loss_grad(train, frozen, mb, cfg, policy)
+        g_acc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32),
+                             g_acc, grads)
+        return (g_acc, l_acc + loss), None
+
+    g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), train)
+    (g_sum, l_sum), _ = jax.lax.scan(body, (g0, jnp.zeros(())),
+                                     jnp.arange(accum_steps))
+    inv = 1.0 / accum_steps
+    grads = jax.tree.map(lambda g: g * inv, g_sum)
+    loss = l_sum * inv
+    return loss, {"loss": loss}, grads
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), gn
+
+
+def make_train_step(cfg: ModelConfig, policy: QuantPolicy, opt: AdamW8bit,
+                    tcfg: TrainConfig, mesh=None):
+    """Build the jit-able train_step(frozen, train, opt_state, residuals,
+    batch) -> (train, opt_state, residuals, metrics).
+
+    When ``compress_pod_grads`` is on (and the mesh has a pod axis > 1), the
+    whole grad computation is shard_mapped *manually* over "pod": each pod
+    computes gradients for its local batch slice at full ICI precision, then
+    the pods exchange int8 GSE mantissas over the slow inter-pod links
+    (compression.compressed_mean) with per-pod error-feedback residuals.
+    Residual state is stored with a leading pod axis, sharded over "pod".
+    """
+    use_compress = (tcfg.compress_pod_grads and mesh is not None
+                    and "pod" in mesh.shape and mesh.shape["pod"] > 1)
+
+    def _grads(train, frozen, batch):
+        return accumulate_grads(train, frozen, batch, cfg, policy,
+                                tcfg.accum_steps)
+
+    def train_step(frozen, train, opt_state: Adam8State, residuals, batch):
+        if use_compress:
+            from jax.sharding import PartitionSpec as P
+            rep = jax.tree.map(lambda _: P(), (train, frozen))
+            batch_specs = jax.tree.map(lambda _: P("pod"), batch)
+            res_specs = jax.tree.map(lambda _: P("pod"), residuals)
+
+            def per_pod(train, frozen, batch, res):
+                from repro.distributed.sharding import (current_ctx,
+                                                        strip_axes,
+                                                        use_sharding)
+                res = jax.tree.map(lambda r: r[0], res)      # drop pod dim
+                ctx = current_ctx()
+                # inside the manual-pod region, inner constraints must not
+                # reference the (now Manual) pod axis
+                inner_rules = strip_axes(ctx.rules, "pod") if ctx else None
+                with use_sharding(ctx.mesh if ctx else None, inner_rules):
+                    loss, aux, grads = _grads(train, frozen, batch)
+                grads, res = C.compressed_tree_mean(
+                    grads, res, "pod", tcfg.compress_bits)
+                loss = jax.lax.pmean(loss, "pod")
+                res = jax.tree.map(lambda r: r[None], res)
+                return loss, grads, res
+
+            loss, grads, residuals = jax.shard_map(
+                per_pod, mesh=mesh,
+                in_specs=(rep[0], rep[1], batch_specs, res_specs),
+                out_specs=(P(), jax.tree.map(lambda _: P(), train),
+                           res_specs),
+                check_vma=False,
+                axis_names={"pod"})(train, frozen, batch, residuals)
+        else:
+            loss, aux, grads = _grads(train, frozen, batch)
+        grads, gnorm = clip_by_global_norm(grads, tcfg.max_grad_norm)
+        train, opt_state = opt.update(grads, opt_state, train)
+        metrics = {"loss": loss, "grad_norm": gnorm,
+                   "lr": opt.current_lr(opt_state.step)}
+        return train, opt_state, residuals, metrics
+
+    return train_step
+
+
+def init_residuals(train, n_pods: int = 1):
+    """Per-pod error-feedback residual tree (leading pod axis)."""
+    return jax.tree.map(
+        lambda p: jnp.zeros((n_pods,) + p.shape, jnp.float32), train)

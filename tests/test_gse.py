@@ -1,0 +1,120 @@
+"""GSE format: unit + property tests (paper Sec. 2.2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.gse import (DEFAULT_GROUP, EXP_MAX, EXP_MIN, GSETensor,
+                            gse_dequantize, gse_fake_quant,
+                            gse_fake_quant_ste, gse_matmul_reference,
+                            gse_quantize, gse_bits_per_value,
+                            qmax_for_bits, quantization_error)
+
+
+def test_qmax():
+    assert qmax_for_bits(8) == 127
+    assert qmax_for_bits(5) == 15
+    with pytest.raises(ValueError):
+        qmax_for_bits(9)
+
+
+def test_roundtrip_error_bound():
+    """|x - Q(x)| <= 2^(e_g - 1) per element (half-ulp of the group scale)."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (64, 256)) * 2.0
+    t = gse_quantize(x, 6, 32)
+    xd = gse_dequantize(t)
+    scale = jnp.exp2(t.exponent.astype(jnp.float32))
+    bound = jnp.repeat(scale, 32, axis=-1) * 0.5 + 1e-9
+    assert bool(jnp.all(jnp.abs(x - xd) <= bound))
+
+
+def test_exponent_range_and_zero_groups():
+    x = jnp.zeros((4, 64))
+    t = gse_quantize(x, 6, 32)
+    assert bool(jnp.all(t.exponent == EXP_MIN))
+    assert bool(jnp.all(t.mantissa == 0))
+    big = jnp.full((4, 64), 1e30)
+    t2 = gse_quantize(big, 6, 32)
+    assert bool(jnp.all(t2.exponent <= EXP_MAX))
+
+
+def test_fake_quant_equals_quant_dequant():
+    x = jax.random.normal(jax.random.PRNGKey(1), (32, 128)) * 0.1
+    fq = gse_fake_quant(x, 5, 32)
+    qd = gse_dequantize(gse_quantize(x, 5, 32))
+    np.testing.assert_allclose(np.asarray(fq), np.asarray(qd), rtol=0,
+                               atol=0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(bits=st.integers(2, 8),
+       group=st.sampled_from([8, 16, 32, 64]),
+       scale=st.floats(1e-4, 1e3),
+       seed=st.integers(0, 2 ** 16))
+def test_property_idempotent_and_bounded(bits, group, scale, seed):
+    """Quantization is idempotent; mantissas respect the b-bit range."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (4, 64)) * scale
+    t = gse_quantize(x, bits, group)
+    qmax = qmax_for_bits(bits)
+    assert bool(jnp.all(jnp.abs(t.mantissa.astype(jnp.int32)) <= qmax))
+    once = gse_fake_quant(x, bits, group)
+    twice = gse_fake_quant(once, bits, group)
+    np.testing.assert_allclose(np.asarray(once), np.asarray(twice),
+                               rtol=0, atol=0)
+
+
+@settings(max_examples=15, deadline=None)
+@given(bits=st.integers(4, 8), seed=st.integers(0, 2 ** 16))
+def test_property_more_bits_less_error(bits, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (8, 128))
+    lo = float(quantization_error(x, bits)["mse"])
+    hi = float(quantization_error(x, min(bits + 2, 8))["mse"])
+    if bits + 2 <= 8:
+        assert hi <= lo * 1.01
+
+
+def test_matmul_reference_matches_dequant_matmul():
+    k = jax.random.PRNGKey(2)
+    a = gse_quantize(jax.random.normal(k, (16, 128)), 6, 32)
+    b = gse_quantize(jax.random.normal(jax.random.PRNGKey(3), (8, 128)),
+                     6, 32)
+    y1 = gse_matmul_reference(a, b)
+    y2 = a.dequantize() @ b.dequantize().T
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4)
+
+
+def test_ste_gradient_is_identity():
+    x = jax.random.normal(jax.random.PRNGKey(4), (4, 64))
+    g = jax.grad(lambda v: jnp.sum(gse_fake_quant_ste(v, 6, 32) * 3.0))(x)
+    np.testing.assert_allclose(np.asarray(g), 3.0 * np.ones_like(g))
+
+
+def test_stochastic_rounding_unbiased():
+    x = jnp.full((1, 32), 0.3)
+    t = gse_quantize(x, 8, 32)
+    scale = float(jnp.exp2(t.exponent.astype(jnp.float32))[0, 0])
+    keys = jax.random.split(jax.random.PRNGKey(5), 200)
+    vals = jnp.stack([
+        gse_dequantize(gse_quantize(x, 8, 32, stochastic=True, key=k))
+        for k in keys])
+    assert abs(float(vals.mean()) - 0.3) < scale  # near-unbiased
+
+
+def test_bits_per_value():
+    assert gse_bits_per_value(6, 32) == pytest.approx(6 + 5 / 32)
+    assert gse_bits_per_value(8, 64) == pytest.approx(8 + 5 / 64)
+
+
+def test_packed_bytes():
+    t = gse_quantize(jnp.ones((8, 64)), 6, 32)
+    # 512 values * 6 bits + 16 exps * 5 bits = 3152 bits -> 394 bytes
+    assert t.nbytes_packed() == (8 * 64 * 6 + 16 * 5 + 7) // 8
+
+
+def test_gse_tensor_is_pytree():
+    t = gse_quantize(jnp.ones((4, 32)), 6, 32)
+    leaves = jax.tree.leaves(t)
+    assert len(leaves) == 2
+    t2 = jax.tree.map(lambda x: x, t)
+    assert isinstance(t2, GSETensor) and t2.bits == 6

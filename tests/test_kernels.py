@@ -1,0 +1,108 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype/bits sweeps
+(interpret=True executes the kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.models.attention import MaskInfo, direct_attention
+
+SHAPES = [(64, 128), (128, 512), (256, 1024), (32, 64)]
+BITS = [5, 6, 8]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("bits", BITS)
+def test_gse_quant_kernel_exact(shape, bits):
+    x = jax.random.normal(jax.random.PRNGKey(0), shape) * 0.4
+    m1, e1 = ops.gse_quantize(x, bits, 32, bm=32, bk=64)
+    m2, e2 = ref.gse_quantize_ref(x, bits, 32)
+    assert bool(jnp.all(m1 == m2)) and bool(jnp.all(e1 == e2))
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_gse_quant_kernel_dtypes(dtype):
+    x = (jax.random.normal(jax.random.PRNGKey(1), (64, 128)) * 0.2
+         ).astype(dtype)
+    m1, e1 = ops.gse_quantize(x, 6, 32, bm=32, bk=64)
+    m2, e2 = ref.gse_quantize_ref(x, 6, 32)
+    assert bool(jnp.all(m1 == m2)) and bool(jnp.all(e1 == e2))
+
+
+@pytest.mark.parametrize("mkn", [(64, 128, 32), (128, 512, 64),
+                                 (32, 256, 128)])
+@pytest.mark.parametrize("bits", [5, 8])
+def test_gse_matmul_kernel_exact(mkn, bits):
+    m, k, n = mkn
+    a = jax.random.normal(jax.random.PRNGKey(2), (m, k)) * 0.3
+    b = jax.random.normal(jax.random.PRNGKey(3), (n, k)) * 0.3
+    am, ae = ops.gse_quantize(a, bits, 32, bm=32, bk=64)
+    bm_, be = ops.gse_quantize(b, bits, 32, bm=32, bk=64)
+    y1 = ops.gse_matmul(am, ae, bm_, be, 32, bm=32, bn=32, bk=64)
+    y2 = ref.gse_matmul_ref(am, ae, bm_, be, 32)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=0,
+                               atol=0)
+
+
+def test_gse_linear_end_to_end_vs_fakequant():
+    from repro.core.gse import gse_fake_quant
+    x = jax.random.normal(jax.random.PRNGKey(4), (64, 256))
+    w = jax.random.normal(jax.random.PRNGKey(5), (128, 256)) * 0.1
+    y1 = ops.gse_linear(x, w, 6, 32)
+    y2 = gse_fake_quant(x, 6, 32) @ gse_fake_quant(w, 6, 32).T
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-6,
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("shape", [(64, 128), (128, 512)])
+def test_nf4_dequant_kernel_exact(shape, ):
+    from repro.core.nf4 import nf4_quantize, BLOCK
+    m, k = shape
+    w = jax.random.normal(jax.random.PRNGKey(6), (m, k)) * 0.05
+    t = nf4_quantize(w)
+    # reconstruct first-level absmax from double-quantized fields
+    qs = np.asarray(t.qscale, np.float32)
+    pad = (-qs.shape[0]) % 256
+    qsp = np.pad(qs, (0, pad)).reshape(-1, 256)
+    absmax = (qsp * np.asarray(t.qscale_scale)[:, None]
+              ).reshape(-1)[:qs.shape[0]] + float(t.qscale_mean)
+    codes = t.codes.reshape(m, k)
+    d1 = ops.nf4_dequant(codes, jnp.asarray(absmax), bm=32, bk=64)
+    d2 = ref.nf4_dequant_ref(codes, jnp.asarray(absmax))
+    assert bool(jnp.all(d1 == d2))
+
+
+@pytest.mark.parametrize("causal,window", [(True, 0), (False, 0),
+                                           (True, 32)])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_flash_kernel_vs_oracle(causal, window, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    bh, t, d = 4, 128, 64
+    q = (jax.random.normal(ks[0], (bh, t, d))).astype(dtype)
+    k = (jax.random.normal(ks[1], (bh, t, d))).astype(dtype)
+    v = (jax.random.normal(ks[2], (bh, t, d))).astype(dtype)
+    o1 = flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                bq=32, bk=32)
+    o2 = direct_attention(q[:, :, None, :], k[:, :, None, :],
+                          v[:, :, None, :],
+                          MaskInfo(causal=causal, window=window))[:, :, 0]
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-6
+    np.testing.assert_allclose(np.asarray(o1, np.float32),
+                               np.asarray(o2, np.float32), atol=tol)
+
+
+def test_flash_kernel_block_shape_sweep():
+    ks = jax.random.split(jax.random.PRNGKey(8), 3)
+    q = jax.random.normal(ks[0], (2, 256, 32))
+    k = jax.random.normal(ks[1], (2, 256, 32))
+    v = jax.random.normal(ks[2], (2, 256, 32))
+    base = None
+    for bq, bk in [(32, 32), (64, 128), (128, 64), (256, 256)]:
+        o = flash_attention_pallas(q, k, v, causal=True, bq=bq, bk=bk)
+        if base is None:
+            base = o
+        np.testing.assert_allclose(np.asarray(o), np.asarray(base),
+                                   atol=2e-5)

@@ -1,0 +1,141 @@
+"""Launch layer: cell plans, input specs, HLO walker, roofline math, and a
+multi-device lower+compile smoke (subprocess with 8 fake devices)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import hlo_walk
+from repro.analysis.roofline import Roofline
+from repro.launch import cells as C
+from repro.configs import all_arch_names
+
+
+def test_cell_grid_is_40():
+    assert len(list(C.all_cells())) == 40
+
+
+def test_long_500k_skips_match_design():
+    skipped = [a for a in all_arch_names()
+               if C.cell_plan(a, "long_500k").skip]
+    assert set(skipped) == set(all_arch_names()) - {"mamba2_2_7b",
+                                                    "hymba_1_5b"}
+
+
+def test_accum_respects_dp():
+    class M:
+        shape = {"pod": 2, "data": 16, "model": 16}
+    p = C.cell_plan("llava_next_34b", "train_4k", M())
+    assert p.accum * 32 <= 256 and p.accum >= 1
+
+
+def test_input_specs_modes():
+    cfg = C.arch_cfg("granite_3_2b")
+    tr = C.input_specs(cfg, "train_4k")
+    assert tr["tokens"].shape == (256, 4096)
+    pf = C.input_specs(cfg, "prefill_32k")
+    assert pf["tokens"].shape == (32, 32768)
+    dc = C.input_specs(cfg, "decode_32k")
+    assert dc["tokens"].shape == (128, 1)
+    vcfg = C.arch_cfg("llava_next_34b")
+    vtr = C.input_specs(vcfg, "train_4k")
+    assert vtr["inputs_embeds"].shape == (256, 4096, 7168)
+    wcfg = C.arch_cfg("whisper_small")
+    wtr = C.input_specs(wcfg, "train_4k")
+    assert wtr["frames"].shape == (256, 1536, 768)
+
+
+def test_hlo_walker_counts_while_trips():
+    hlo = textwrap.dedent("""\
+    HloModule test
+    %body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+      %p = (s32[], f32[8,8]) parameter(0)
+      %g0 = s32[] get-tuple-element(%p), index=0
+      %g1 = f32[8,8] get-tuple-element(%p), index=1
+      %d = f32[8,8] dot(%g1, %g1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      %ar = f32[8,8] all-reduce(%d), to_apply=%add
+      ROOT %t = (s32[], f32[8,8]) tuple(%g0, %ar)
+    }
+    %cond (p2: (s32[], f32[8,8])) -> pred[] {
+      %p2 = (s32[], f32[8,8]) parameter(0)
+      %i = s32[] get-tuple-element(%p2), index=0
+      %n = s32[] constant(5)
+      ROOT %lt = pred[] compare(%i, %n), direction=LT
+    }
+    %add (a: f32[], b: f32[]) -> f32[] {
+      %a = f32[] parameter(0)
+      %b = f32[] parameter(1)
+      ROOT %s = f32[] add(%a, %b)
+    }
+    ENTRY %main (x: f32[8,8]) -> f32[8,8] {
+      %x = f32[8,8] parameter(0)
+      %c = s32[] constant(0)
+      %tp = (s32[], f32[8,8]) tuple(%c, %x)
+      %w = (s32[], f32[8,8]) while(%tp), condition=%cond, body=%body
+      ROOT %o = f32[8,8] get-tuple-element(%w), index=1
+    }
+    """)
+    res = hlo_walk.walk(hlo)
+    # dot: 2*8*8*8 = 1024 flops x 5 trips
+    assert res.flops == 1024 * 5
+    assert res.while_trips == [5]
+    assert res.collective_counts["all-reduce"] == 5
+    assert res.collective_bytes["all-reduce"] == 8 * 8 * 4 * 5
+
+
+def test_roofline_terms_and_dominance():
+    r = Roofline(flops=197e12, hbm_bytes=819e9, collective_bytes=0.0,
+                 chips=256, model_flops=197e12 * 256)
+    assert r.compute_s == pytest.approx(1.0)
+    assert r.memory_s == pytest.approx(1.0)
+    assert r.dominant in ("compute", "memory")
+    assert r.roofline_fraction == pytest.approx(1.0)
+
+
+def test_int8_fraction_raises_compute_roof():
+    r8 = Roofline(flops=1e15, hbm_bytes=0, collective_bytes=0, chips=1,
+                  int8_fraction=1.0)
+    rb = Roofline(flops=1e15, hbm_bytes=0, collective_bytes=0, chips=1,
+                  int8_fraction=0.0)
+    assert r8.compute_s == pytest.approx(rb.compute_s / 2)
+
+
+SMOKE = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, "src")
+import jax
+from repro.launch import mesh as MESH
+MESH.make_production_mesh = lambda multi_pod=False: jax.make_mesh(
+    (2, 2, 2) if multi_pod else (2, 4),
+    ("pod", "data", "model") if multi_pod else ("data", "model"))
+from repro.launch import dryrun as DR
+DR.make_production_mesh = MESH.make_production_mesh
+import repro.launch.cells as C
+import dataclasses, json
+# shrink the cell to a reduced config for the smoke
+from repro.configs import reduced_config
+C.arch_cfg = lambda arch, shape=None: reduced_config(arch)
+C.SHAPES = {"train_4k": dict(seq_len=64, global_batch=8, mode="train"),
+            "decode_32k": dict(seq_len=128, global_batch=8, mode="decode")}
+res = DR.lower_cell("granite_3_2b", "train_4k", False, verbose=False)
+res2 = DR.lower_cell("granite_3_2b", "decode_32k", True, verbose=False)
+print(json.dumps({"a": res["status"], "b": res2["status"]}))
+"""
+
+
+@pytest.mark.slow
+def test_multidevice_lower_compile_subprocess():
+    """8 fake devices, reduced config: the full dryrun path (shardings,
+    lower, compile, roofline extraction) must succeed for single+multi."""
+    out = subprocess.run([sys.executable, "-c", SMOKE], cwd="/root/repo",
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    line = [l for l in out.stdout.splitlines() if l.startswith("{")][-1]
+    d = json.loads(line)
+    assert d == {"a": "ok", "b": "ok"}

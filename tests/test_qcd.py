@@ -1,0 +1,91 @@
+"""QCD fully-quantized matmul (paper Sec. 2.3): forward/backward fidelity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.qcd import effective_group_size, quantized_matmul
+from repro.core.gse import gse_fake_quant
+
+
+@settings(max_examples=40, deadline=None)
+@given(k=st.integers(1, 512), g=st.integers(1, 64))
+def test_effective_group_size_properties(k, g):
+    eff = effective_group_size(k, g)
+    assert 1 <= eff <= min(g, k)
+    assert k % eff == 0
+
+
+def test_forward_matches_manual_fakequant():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (16, 128))
+    w = jax.random.normal(jax.random.PRNGKey(1), (128, 32)) * 0.1
+    y = quantized_matmul(x, w, 6, 6, 6, 32)
+    yref = gse_fake_quant(x, 6, 32) @ gse_fake_quant(w.T, 6, 32).T
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yref), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_backward_quantized_but_aligned():
+    """Quantized grads must stay directionally aligned with exact grads."""
+    key = jax.random.PRNGKey(2)
+    x = jax.random.normal(key, (64, 128))
+    w = jax.random.normal(jax.random.PRNGKey(3), (128, 32)) * 0.1
+
+    def fq(w):
+        return jnp.sum(quantized_matmul(x, w, 8, 8, 8, 32) ** 2)
+
+    def fe(w):
+        return jnp.sum((x @ w) ** 2)
+
+    gq = jax.grad(fq)(w)
+    ge = jax.grad(fe)(w)
+    cos = float(jnp.sum(gq * ge) /
+                (jnp.linalg.norm(gq) * jnp.linalg.norm(ge)))
+    assert cos > 0.99
+
+
+def test_bwd_dx_alignment():
+    key = jax.random.PRNGKey(4)
+    x = jax.random.normal(key, (64, 128))
+    w = jax.random.normal(jax.random.PRNGKey(5), (128, 32)) * 0.1
+    gq = jax.grad(lambda x: jnp.sum(
+        quantized_matmul(x, w, 8, 8, 8, 32) ** 2))(x)
+    ge = jax.grad(lambda x: jnp.sum((x @ w) ** 2))(x)
+    cos = float(jnp.sum(gq * ge) /
+                (jnp.linalg.norm(gq) * jnp.linalg.norm(ge)))
+    assert cos > 0.99
+
+
+def test_bits_none_is_exact():
+    x = jax.random.normal(jax.random.PRNGKey(6), (8, 64))
+    w = jax.random.normal(jax.random.PRNGKey(7), (64, 16))
+    y = quantized_matmul(x, w, None, None, None, 32)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w), rtol=2e-6,
+                               atol=2e-6)
+
+
+@settings(max_examples=12, deadline=None)
+@given(bits=st.integers(4, 8), seed=st.integers(0, 1000))
+def test_property_error_shrinks_with_bits(bits, seed):
+    if bits > 6:
+        return
+    x = jax.random.normal(jax.random.PRNGKey(seed), (32, 64))
+    w = jax.random.normal(jax.random.PRNGKey(seed + 1), (64, 16)) * 0.1
+    exact = x @ w
+    lo = quantized_matmul(x, w, bits, bits, bits, 32)
+    hi = quantized_matmul(x, w, bits + 2, bits + 2, bits + 2, 32)
+    el = float(jnp.mean((lo - exact) ** 2))
+    eh = float(jnp.mean((hi - exact) ** 2))
+    assert eh <= el * 1.05
+
+
+def test_3d_batched_input():
+    x = jax.random.normal(jax.random.PRNGKey(8), (2, 16, 64))
+    w = jax.random.normal(jax.random.PRNGKey(9), (64, 32)) * 0.1
+    y = quantized_matmul(x, w, 6, 6, 6, 32)
+    assert y.shape == (2, 16, 32)
+    g = jax.grad(lambda w: jnp.sum(
+        quantized_matmul(x, w, 6, 6, 6, 32)))(w)
+    assert g.shape == w.shape and bool(jnp.all(jnp.isfinite(g)))
