@@ -74,6 +74,31 @@ def run():
     us = _time(lambda v: ops.gse_quantize(v, 6, 32)[0], xs, iters=3)
     rows.append(csv_row("kernel/pallas_gse_quant_interpret", us,
                         "correctness-path-only"))
+
+    # packed storage: jnp pack/unpack wall time and realized bytes
+    from repro.core.gse import gse_pack, gse_quantize as gq, gse_unpack
+    t = gq(w.T, 6, 32)                            # (512, 2048) along K
+    us = _time(jax.jit(lambda v: gse_pack(v).mantissa_words), t)
+    p = gse_pack(t)
+    rows.append(csv_row(
+        "kernel/gse_pack_512x2048_b6", us,
+        f"GBps={t.mantissa.nbytes / us * 1e6 / 1e9:.2f} "
+        f"packed_bytes={p.nbytes} int8_bytes={t.mantissa.nbytes + t.exponent.nbytes}"))
+    us = _time(jax.jit(lambda v: gse_unpack(v).mantissa), p)
+    rows.append(csv_row("kernel/gse_unpack_512x2048_b6", us,
+                        f"GBps={t.mantissa.nbytes / us * 1e6 / 1e9:.2f}"))
+
+    # fused packed-dequant matmul, interpret mode (correctness path)
+    xa = jax.random.normal(key, (128, 512))
+    wq = gq(jax.random.normal(jax.random.PRNGKey(9), (256, 512)) * 0.05,
+            6, 32)
+    pw = gse_pack(wq)
+    qa = gq(xa, 6, 32)
+    us = _time(lambda m, e: ops.gse_matmul_packed(
+        m, e, pw.mantissa_words, wq.exponent, 6, 32,
+        bm=128, bn=128, bk=512), qa.mantissa, qa.exponent, iters=3)
+    rows.append(csv_row("kernel/pallas_gse_matmul_packed_interpret", us,
+                        "correctness-path-only"))
     return rows
 
 

@@ -14,6 +14,19 @@ On a real multi-host pod each host writes only its addressable shards
 (jax.experimental.multihost_utils); this container is single-process so the
 full value path is exercised, and the manifest format already records the
 logical→sharded mapping needed for the multi-host writer.
+
+Packed GSE support (two flavors):
+
+* Trees already containing :class:`~repro.core.gse.PackedGSETensor` leaves
+  round-trip losslessly — the pytree flattens to its uint32 word arrays
+  (``.../mantissa_words``, ``.../exponent_words``) and ``restore`` rebuilds
+  against the ``like`` structure. Checkpoint bytes on disk equal the live
+  packed bytes.
+* ``save(..., gse_bits=b)`` quantizes eligible float leaves to GSE and
+  stores the packed words (b + 5/group bits/value on disk instead of 32).
+  This is a **lossy** serving/deployment snapshot — restore transparently
+  dequantizes back to the ``like`` leaf dtype. Training state one will
+  resume from should keep the default lossless path.
 """
 from __future__ import annotations
 
@@ -25,7 +38,11 @@ import time
 from typing import Any, Optional
 
 import jax
+import jax.numpy as jnp
 import numpy as np
+
+from repro.core.gse import (DEFAULT_GROUP, PackedGSETensor, gse_pack,
+                            gse_quantize)
 
 
 def _flatten(tree) -> dict:
@@ -53,7 +70,14 @@ class CheckpointManager:
         os.makedirs(directory, exist_ok=True)
 
     # ---- save -----------------------------------------------------------
-    def save(self, step: int, tree: Any, metadata: Optional[dict] = None):
+    def save(self, step: int, tree: Any, metadata: Optional[dict] = None,
+             gse_bits: Optional[int] = None,
+             gse_group: int = DEFAULT_GROUP,
+             gse_min_size: int = 4096):
+        """Write a checkpoint. With ``gse_bits`` set, float leaves of at
+        least ``gse_min_size`` values whose last axis divides ``gse_group``
+        are stored GSE bit-packed (lossy serving snapshot); restore
+        dequantizes them transparently."""
         tmp = os.path.join(self.dir, f"step_{step:08d}.tmp")
         final = os.path.join(self.dir, f"step_{step:08d}")
         if os.path.exists(tmp):
@@ -64,6 +88,20 @@ class CheckpointManager:
         leaf_meta = {}
         for key, leaf in flat.items():
             arr = np.asarray(jax.device_get(leaf))
+            # jnp.issubdtype, not np: bf16 (ml_dtypes) is not an np.floating
+            if (gse_bits is not None and arr.ndim >= 1
+                    and jnp.issubdtype(arr.dtype, jnp.floating)
+                    and arr.size >= gse_min_size
+                    and arr.shape[-1] % gse_group == 0):
+                p = gse_pack(gse_quantize(
+                    jnp.asarray(arr, jnp.float32), gse_bits, gse_group))
+                arrays[key + "#gsem"] = np.asarray(p.mantissa_words)
+                arrays[key + "#gsee"] = np.asarray(p.exponent_words)
+                leaf_meta[key] = {"shape": list(arr.shape),
+                                  "dtype": str(arr.dtype),
+                                  "gse": {"bits": gse_bits,
+                                          "group": gse_group}}
+                continue
             arrays[key] = arr
             leaf_meta[key] = {"shape": list(arr.shape),
                               "dtype": str(arr.dtype)}
@@ -118,6 +156,19 @@ class CheckpointManager:
         for (pth, leaf), shd in zip(flat_like, shard_flat):
             slash_key = "/".join(_path_str(p) for p in pth)
             key = slash_key.replace("/", "__")
+            lmeta = manifest["leaves"].get(slash_key, {})
+            if "gse" in lmeta:          # stored bit-packed: dequantize back
+                p = PackedGSETensor(
+                    jnp.asarray(data[key + "#gsem"]),
+                    jnp.asarray(data[key + "#gsee"]),
+                    lmeta["gse"]["bits"], lmeta["gse"]["group"],
+                    tuple(lmeta["shape"]))
+                arr = np.asarray(p.dequantize(jnp.float32))
+                if hasattr(leaf, "dtype"):
+                    arr = arr.astype(leaf.dtype)
+                leaves.append(jax.device_put(arr, shd) if shd is not None
+                              else jax.device_put(arr))
+                continue
             arr = data[key]
             if arr.dtype.kind == "V":   # np roundtrips ml_dtypes as raw void
                 import ml_dtypes  # noqa: F401 (registers extension dtypes)

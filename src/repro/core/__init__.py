@@ -1,7 +1,8 @@
 """Core GSQ-Tuning primitives: GSE format, NF4, FP8 baseline, QCD matmul,
 quantization policy, and the GSQ LoRA linear layer."""
-from repro.core.gse import (GSETensor, gse_quantize, gse_dequantize,
-                            gse_fake_quant, gse_matmul_reference,
+from repro.core.gse import (GSETensor, PackedGSETensor, gse_quantize,
+                            gse_dequantize, gse_fake_quant, gse_pack,
+                            gse_unpack, gse_matmul_reference,
                             gse_bits_per_value, quantization_error,
                             DEFAULT_GROUP, EXP_BITS, EXP_BIAS)
 from repro.core.nf4 import NF4Tensor, nf4_quantize, nf4_dequantize, nf4_fake_quant
@@ -12,7 +13,8 @@ from repro.core.lora import (init_gsq_linear, apply_gsq_linear, merge_lora,
                              gsq_param_count)
 
 __all__ = [
-    "GSETensor", "gse_quantize", "gse_dequantize", "gse_fake_quant",
+    "GSETensor", "PackedGSETensor", "gse_quantize", "gse_dequantize",
+    "gse_fake_quant", "gse_pack", "gse_unpack",
     "gse_matmul_reference", "gse_bits_per_value", "quantization_error",
     "DEFAULT_GROUP", "EXP_BITS", "EXP_BIAS",
     "NF4Tensor", "nf4_quantize", "nf4_dequantize", "nf4_fake_quant",

@@ -21,9 +21,47 @@ Conventions
   (callers transpose so the contraction axis is last).
 * The exponent is stored as int8 holding the *unbiased* exponent value in
   [-EXP_BIAS, EXP_BIAS - 1] (5-bit field, bias 16).
-* Mantissas are stored in int8 regardless of ``bits`` (5..8); values are
-  clamped to the b-bit symmetric range. True b-bit packing is accounted for
-  analytically by :func:`gse_bits_per_value` (used by the memory model).
+* Mantissas are stored in int8 regardless of ``bits`` (2..8) in the
+  *working* representation (:class:`GSETensor`); values are clamped to the
+  b-bit symmetric range.
+* The *storage* representation (:class:`PackedGSETensor`) really packs the
+  b-bit mantissas and 5-bit exponents into uint32 words so live buffer
+  ``nbytes`` matches :func:`gse_bits_per_value` (the paper's memory claim as
+  observable bytes, not a spreadsheet).
+
+Packed wire/storage format
+--------------------------
+Mantissas are packed along the **last axis** in chunks of 32 values; every
+leading axis is preserved, so a ``(N, K)`` weight packs to a
+``(N, ceil(K/32) * bits)`` uint32 array that Pallas kernels can tile with
+ordinary BlockSpecs. When the last axis is *not* a multiple of 32 (e.g. a
+KV-cache head_dim of 8), the fully flattened value stream is packed into a
+1-D word array instead — at most 31 values of zero padding total, keeping
+storage at ~``bits`` bits/value for any shape. The choice is determined by
+the stored logical shape, so no extra metadata is needed to unpack.
+
+Within one 32-value chunk the layout is **bit-planar**: the chunk emits
+``bits`` uint32 words, ordered plane 0 (LSB) first; plane word ``j`` holds
+bit ``j`` of all 32 values, with value ``i`` of the chunk at bit position
+(lane) ``i`` of the word. Mantissas are stored offset-binary,
+``u = m + qmax`` in ``[0, 2*qmax]``, so no sign handling is needed in the
+shift/mask unpack. The planar layout keeps every b-bit field word-aligned
+(no field ever straddles a word), which is what makes the on-chip unpack a
+pure vectorized shift/mask — no gathers.
+
+Exponents are biased to ``[0, 31]`` (``u = e + EXP_BIAS``), flattened to
+1-D, and packed with the identical chunk-of-32 / 5-plane scheme.
+
+Word endianness: lane ``i`` is bit ``i`` counting from the LSB of the
+uint32 (little-endian within the word); words are stored in increasing
+plane order within a chunk and increasing chunk order along the axis. A
+serialized stream of the little-endian uint32 words is therefore fully
+specified and portable.
+
+Converters: :func:`gse_pack` / :func:`gse_unpack` (jnp, any backend) are
+bit-exact inverses; ``repro.kernels.gse_unpack`` and the fused
+``repro.kernels.gse_matmul.gse_matmul_packed_pallas`` implement the same
+shift/mask math in Pallas VMEM tiles.
 """
 from __future__ import annotations
 
@@ -47,6 +85,18 @@ def qmax_for_bits(bits: int) -> int:
     if not 2 <= bits <= 8:
         raise ValueError(f"GSE bits must be in [2, 8], got {bits}")
     return (1 << (bits - 1)) - 1
+
+
+def exp2_int(e: jax.Array) -> jax.Array:
+    """Exact fp32 ``2**e`` for integer ``e`` via IEEE-754 bit assembly.
+
+    XLA's ``exp2`` lowers through ``exp(x * ln2)`` on some backends and can
+    be an ulp off even for integer arguments — fatal for the bit-exact
+    matmul parity contract, where the scale must be an exact power of two.
+    Valid for ``e`` in [-126, 127] (normal range); GSE uses [-32, 30].
+    """
+    biased = (e.astype(jnp.int32) + 127) << 23
+    return jax.lax.bitcast_convert_type(biased, jnp.float32)
 
 
 @jax.tree_util.register_pytree_node_class
@@ -88,6 +138,164 @@ class GSETensor:
         n = int(np.prod(self.mantissa.shape))
         g = int(np.prod(self.exponent.shape))
         return (n * self.bits + g * EXP_BITS + 7) // 8
+
+
+# ---------------------------------------------------------------------------
+# Packed storage: real b-bit mantissas + 5-bit exponents in uint32 words.
+# ---------------------------------------------------------------------------
+
+_PACK_CHUNK = 32             # values per packed chunk == lanes per uint32
+
+
+def packed_words_per_axis(k: int, nbits: int) -> int:
+    """uint32 words needed to pack a length-``k`` axis at ``nbits`` bits."""
+    return -(-k // _PACK_CHUNK) * nbits
+
+
+def pack_unsigned(u: jax.Array, nbits: int) -> jax.Array:
+    """Bit-planar pack of the last axis of ``u`` (values must be < 2**nbits).
+
+    (..., K) uint32 -> (..., ceil(K/32) * nbits) uint32. See the module
+    docstring for the wire layout.
+    """
+    if not 1 <= nbits <= 16:
+        raise ValueError(f"nbits must be in [1, 16], got {nbits}")
+    u = jnp.asarray(u, jnp.uint32)
+    k = u.shape[-1]
+    pad = (-k) % _PACK_CHUNK
+    if pad:
+        u = jnp.pad(u, [(0, 0)] * (u.ndim - 1) + [(0, pad)])
+    chunks = u.shape[-1] // _PACK_CHUNK
+    ug = u.reshape(*u.shape[:-1], chunks, _PACK_CHUNK)
+    lanes = jnp.arange(_PACK_CHUNK, dtype=jnp.uint32)
+    planes = [jnp.sum(((ug >> jnp.uint32(j)) & jnp.uint32(1)) << lanes,
+                      axis=-1, dtype=jnp.uint32)
+              for j in range(nbits)]
+    words = jnp.stack(planes, axis=-1)            # (..., chunks, nbits)
+    return words.reshape(*u.shape[:-1], chunks * nbits)
+
+
+def unpack_unsigned(words: jax.Array, nbits: int, k: int) -> jax.Array:
+    """Inverse of :func:`pack_unsigned`: (..., ceil(k/32)*nbits) -> (..., k)."""
+    words = jnp.asarray(words, jnp.uint32)
+    chunks = words.shape[-1] // nbits
+    w = words.reshape(*words.shape[:-1], chunks, nbits)
+    lanes = jnp.arange(_PACK_CHUNK, dtype=jnp.uint32)
+    u = jnp.zeros((*words.shape[:-1], chunks, _PACK_CHUNK), jnp.uint32)
+    for j in range(nbits):
+        bits_j = (w[..., j][..., None] >> lanes) & jnp.uint32(1)
+        u = u | (bits_j << jnp.uint32(j))
+    u = u.reshape(*words.shape[:-1], chunks * _PACK_CHUNK)
+    return u[..., :k]
+
+
+def pack_mantissas(m: jax.Array, bits: int) -> jax.Array:
+    """int8 mantissas (..., K) -> offset-binary packed uint32 words."""
+    qmax = qmax_for_bits(bits)
+    u = (m.astype(jnp.int32) + qmax).astype(jnp.uint32)
+    return pack_unsigned(u, bits)
+
+
+def unpack_mantissas(words: jax.Array, bits: int, k: int) -> jax.Array:
+    """Packed words -> int8 mantissas (..., k)."""
+    qmax = qmax_for_bits(bits)
+    u = unpack_unsigned(words, bits, k)
+    return (u.astype(jnp.int32) - qmax).astype(jnp.int8)
+
+
+def pack_exponents(e: jax.Array) -> jax.Array:
+    """int8 unbiased exponents (any shape) -> flat packed uint32 words."""
+    u = (e.astype(jnp.int32) + EXP_BIAS).astype(jnp.uint32).reshape(-1)
+    return pack_unsigned(u, EXP_BITS)
+
+
+def unpack_exponents(words: jax.Array, shape: Tuple[int, ...]) -> jax.Array:
+    """Flat packed words -> int8 unbiased exponents of ``shape``."""
+    n = int(np.prod(shape)) if shape else 1
+    u = unpack_unsigned(words, EXP_BITS, n)
+    return (u.astype(jnp.int32) - EXP_BIAS).astype(jnp.int8).reshape(shape)
+
+
+@jax.tree_util.register_pytree_with_keys_class
+@dataclasses.dataclass(frozen=True)
+class PackedGSETensor:
+    """A tensor in *really packed* GSE storage.
+
+    Attributes:
+      mantissa_words: uint32, shape = source shape with last dim replaced by
+        ``ceil(K/32) * bits`` (bit-planar chunks, see module docstring).
+      exponent_words: uint32 1-D, ``ceil(n_groups/32) * 5`` words.
+      bits / group_size: format metadata (static).
+      shape: logical (unpacked) mantissa shape (static).
+    """
+    mantissa_words: jax.Array
+    exponent_words: jax.Array
+    bits: int
+    group_size: int
+    shape: Tuple[int, ...]
+
+    @property
+    def exponent_shape(self) -> Tuple[int, ...]:
+        return (*self.shape[:-1], self.shape[-1] // self.group_size)
+
+    @property
+    def nbytes(self) -> int:
+        """Live packed bytes — the quantity the paper's Tab. 1 claims."""
+        return int(self.mantissa_words.size) * 4 \
+            + int(self.exponent_words.size) * 4
+
+    def tree_flatten_with_keys(self):
+        return (
+            ((jax.tree_util.GetAttrKey("mantissa_words"), self.mantissa_words),
+             (jax.tree_util.GetAttrKey("exponent_words"), self.exponent_words)),
+            (self.bits, self.group_size, tuple(self.shape)),
+        )
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], aux[0], aux[1], aux[2])
+
+    def unpack(self) -> GSETensor:
+        return gse_unpack(self)
+
+    def dequantize(self, dtype=jnp.float32) -> jax.Array:
+        return gse_dequantize(self.unpack(), dtype)
+
+
+@jax.jit
+def gse_pack(t: GSETensor) -> PackedGSETensor:
+    """GSETensor (int8 working form) -> PackedGSETensor (uint32 storage).
+
+    Layout selection is a pure function of the logical shape (so unpack
+    needs no extra metadata): when the last axis is a multiple of 32 the
+    mantissas pack **per row** — leading axes preserved, directly tileable
+    by the Pallas kernels; otherwise the fully flattened value stream packs
+    into a 1-D word array (at most 31 values of padding total, so small
+    trailing axes — e.g. KV-cache head_dims — pay no per-row chunk waste).
+
+    Bit-exact: ``gse_unpack(gse_pack(t))`` reproduces mantissa and exponent
+    arrays exactly for any bits in [2, 8].
+    """
+    if t.mantissa.shape[-1] % _PACK_CHUNK == 0:
+        mw = pack_mantissas(t.mantissa, t.bits)
+    else:
+        mw = pack_mantissas(t.mantissa.reshape(-1), t.bits)
+    ew = pack_exponents(t.exponent)
+    return PackedGSETensor(mw, ew, t.bits, t.group_size,
+                           tuple(t.mantissa.shape))
+
+
+@jax.jit
+def gse_unpack(p: PackedGSETensor) -> GSETensor:
+    """PackedGSETensor -> GSETensor, inverse of :func:`gse_pack`."""
+    if p.shape[-1] % _PACK_CHUNK == 0:
+        m = unpack_mantissas(p.mantissa_words, p.bits, p.shape[-1])
+    else:
+        n = int(np.prod(p.shape))
+        m = unpack_mantissas(p.mantissa_words, p.bits, n)
+    m = m.reshape(p.shape)
+    e = unpack_exponents(p.exponent_words, p.exponent_shape)
+    return GSETensor(m, e, p.bits, p.group_size)
 
 
 def _group_reshape(x: jax.Array, group_size: int) -> jax.Array:
@@ -214,6 +422,13 @@ def gse_matmul_reference(a: GSETensor, b: GSETensor) -> jax.Array:
 
     Both operands are grouped along K. Computed exactly as the paper's
     eq. for the dot product: per-group int MAC then scale by 2^(eA+eB).
+
+    Accumulation contract: the per-group int32 MAC is exact, each scaled
+    group product is exact in fp32 (power-of-two scale), and the cross-group
+    fp32 accumulation happens **sequentially in ascending group order**.
+    The Pallas kernels implement the same ordered accumulation, which is
+    what makes kernel-vs-reference parity bit-exact for arbitrary inputs
+    (an unordered ``sum`` would differ by rounding at 8-bit magnitudes).
     """
     if a.group_size != b.group_size:
         raise ValueError("group_size mismatch")
@@ -226,10 +441,13 @@ def gse_matmul_reference(a: GSETensor, b: GSETensor) -> jax.Array:
     bg = b.mantissa.reshape(n, k // g, g).astype(jnp.int32)
     # per-group integer dot: (M, N, K//g)
     prod = jnp.einsum("mgk,ngk->mng", ag, bg)
-    scale = jnp.exp2(
-        (a.exponent[:, None, :].astype(jnp.float32)
-         + b.exponent[None, :, :].astype(jnp.float32)))
-    return jnp.sum(prod.astype(jnp.float32) * scale, axis=-1)
+    scale = exp2_int(a.exponent[:, None, :].astype(jnp.int32)
+                     + b.exponent[None, :, :].astype(jnp.int32))
+    terms = prod.astype(jnp.float32) * scale
+    acc = jnp.zeros((m, n), jnp.float32)
+    for gi in range(k // g):          # ordered fp32 accumulation (contract)
+        acc = acc + terms[:, :, gi]
+    return acc
 
 
 def gse_bits_per_value(bits: int, group_size: int = DEFAULT_GROUP) -> float:

@@ -67,6 +67,28 @@ class ShardCtx:
     rules: ShardingRules
 
 
+def shard_map_compat(f, mesh, in_specs, out_specs, axis_names=None):
+    """``jax.shard_map`` across jax versions.
+
+    Newer jax exposes ``jax.shard_map(..., check_vma=, axis_names=)``;
+    older releases only have ``jax.experimental.shard_map.shard_map`` with
+    ``check_rep=``/``auto=``. Replication checking is disabled on both
+    paths (the compressed-gradient regions mix manual collectives the
+    checker cannot see through).
+    """
+    if hasattr(jax, "shard_map"):
+        kw = {"check_vma": False}
+        if axis_names is not None:
+            kw["axis_names"] = set(axis_names)
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    auto = (frozenset(mesh.axis_names) - frozenset(axis_names)
+            if axis_names is not None else frozenset())
+    return _shard_map(f, mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=False, auto=auto)
+
+
 def strip_axes(rules: ShardingRules, *axes: str) -> ShardingRules:
     """Remove mesh axes from every rule (e.g. drop 'pod' inside a shard_map
     region where 'pod' is Manual)."""

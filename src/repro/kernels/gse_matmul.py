@@ -13,6 +13,17 @@ grid. This is bit-exact w.r.t. the value-space oracle
 group MAC exactly and fp32 holds each scaled group product.
 
 A (M, K) x B (N, K) -> (M, N); both operands pre-quantized to GSE along K.
+
+Two entry points share the MAC body:
+
+* :func:`gse_matmul_pallas` — both mantissa operands as int8 arrays (the
+  working form).
+* :func:`gse_matmul_packed_pallas` — the **fused packed-dequant matmul**:
+  the B (weight) mantissas arrive as bit-planar packed uint32 words (the
+  real storage format, ``repro.core.gse`` docstring) and are unpacked by
+  shift/mask *inside* the kernel while the tile sits in VMEM. Weights
+  therefore never materialize as int8 in HBM — HBM traffic for B is
+  b bits/value, the paper's memory claim on the compute path.
 """
 from __future__ import annotations
 
@@ -22,21 +33,23 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.gse import _PACK_CHUNK, exp2_int
+from repro.kernels.gse_unpack import unpack_tile
+
 DEFAULT_BM = 128
 DEFAULT_BN = 128
 DEFAULT_BK = 512
 
 
-def _gse_matmul_kernel(am_ref, ae_ref, bm_ref, be_ref, o_ref, acc_ref, *,
-                       group: int, k_steps: int):
-    @pl.when(pl.program_id(2) == 0)
-    def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
+def _mac_accumulate(am, ae, bm, be, acc_ref, *, group: int):
+    """One K-tile of the GSE MAC: int8 group-batched dot on the MXU, then
+    the rank-1 ``2^(eA+eB)`` rescale, accumulated into fp32 ``acc_ref``.
 
-    am = am_ref[...]                                  # (BM, BK) int8
-    bm = bm_ref[...]                                  # (BN, BK) int8
-    ae = ae_ref[...].astype(jnp.float32)              # (BM, BK/G)
-    be = be_ref[...].astype(jnp.float32)              # (BN, BK/G)
+    Groups are accumulated **sequentially in ascending order** (static
+    unrolled loop) — the ordered-accumulation contract of
+    ``gse_matmul_reference``; the K grid walks tiles in ascending order, so
+    the global fp32 add sequence matches the oracle exactly and parity is
+    bit-exact, not just allclose."""
     bm_sz, bk = am.shape
     bn_sz = bm.shape[0]
     ng = bk // group
@@ -48,11 +61,41 @@ def _gse_matmul_kernel(am_ref, ae_ref, bm_ref, be_ref, o_ref, acc_ref, *,
         ag, bg, (((2,), (2,)), ((0,), (0,))),
         preferred_element_type=jnp.int32)             # (ng, BM, BN)
 
-    # per-group rank-1 exponent rescale, accumulated in fp32
-    sa = jnp.exp2(ae).transpose(1, 0)                 # (ng, BM)
-    sb = jnp.exp2(be).transpose(1, 0)                 # (ng, BN)
+    # per-group rank-1 exponent rescale; each scaled term is exact in fp32
+    # (exp2_int builds the power of two exactly — XLA exp2 can be an ulp off)
+    sa = exp2_int(ae).transpose(1, 0)                 # (ng, BM)
+    sb = exp2_int(be).transpose(1, 0)                 # (ng, BN)
     scaled = prod.astype(jnp.float32) * sa[:, :, None] * sb[:, None, :]
-    acc_ref[...] += jnp.sum(scaled, axis=0)
+    acc = acc_ref[...]
+    for gi in range(ng):              # ordered fp32 accumulation (contract)
+        acc = acc + scaled[gi]
+    acc_ref[...] = acc
+
+
+def _gse_matmul_kernel(am_ref, ae_ref, bm_ref, be_ref, o_ref, acc_ref, *,
+                       group: int, k_steps: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    _mac_accumulate(am_ref[...], ae_ref[...], bm_ref[...], be_ref[...],
+                    acc_ref, group=group)
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _store():
+        o_ref[...] = acc_ref[...]
+
+
+def _gse_matmul_packed_kernel(am_ref, ae_ref, bw_ref, be_ref, o_ref,
+                              acc_ref, *, bits: int, group: int,
+                              k_steps: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    bm = unpack_tile(bw_ref[...], bits)               # VMEM-only int8 tile
+    _mac_accumulate(am_ref[...], ae_ref[...], bm, be_ref[...],
+                    acc_ref, group=group)
 
     @pl.when(pl.program_id(2) == k_steps - 1)
     def _store():
@@ -92,3 +135,48 @@ def gse_matmul_pallas(a_m, a_e, b_m, b_e, group: int = 32,
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
     )(a_m, a_e, b_m, b_e)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bits", "group", "bm", "bn", "bk",
+                                    "interpret"))
+def gse_matmul_packed_pallas(a_m, a_e, b_words, b_e, bits: int,
+                             group: int = 32,
+                             bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
+                             bk: int = DEFAULT_BK, interpret: bool = True):
+    """Fused packed-dequant GSE matmul.
+
+    a_m (M, K) int8, a_e (M, K//G) int8 — activations in working form;
+    b_words (N, K//32*bits) uint32 — weight mantissas in packed storage;
+    b_e (N, K//G) int8. Returns (M, N) fp32, bit-exact vs the unpacked
+    kernel and ``gse_matmul_reference``.
+    """
+    m_dim, k_dim = a_m.shape
+    n_dim = b_words.shape[0]
+    assert b_words.shape[1] * _PACK_CHUNK == k_dim * bits, (
+        "packed word count mismatch", b_words.shape, k_dim, bits)
+    bm = min(bm, m_dim)
+    bn = min(bn, n_dim)
+    bk = min(bk, k_dim)
+    assert m_dim % bm == 0 and n_dim % bn == 0 and k_dim % bk == 0
+    assert bk % group == 0 and bk % _PACK_CHUNK == 0
+    bkw = bk // _PACK_CHUNK * bits
+    k_steps = k_dim // bk
+    grid = (m_dim // bm, n_dim // bn, k_steps)
+    kernel = functools.partial(_gse_matmul_packed_kernel, bits=bits,
+                               group=group, k_steps=k_steps)
+    from jax.experimental.pallas import tpu as pltpu
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bm, bk // group), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bn, bkw), lambda i, j, k: (j, k)),
+            pl.BlockSpec((bn, bk // group), lambda i, j, k: (j, k)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m_dim, n_dim), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a_m, a_e, b_words, b_e)

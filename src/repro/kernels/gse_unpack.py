@@ -1,0 +1,78 @@
+"""Pallas TPU kernel: on-chip unpack of bit-planar packed GSE mantissas.
+
+Input is the real storage format (``repro.core.gse`` module docstring): the
+last axis carries chunks of 32 values as ``bits`` uint32 plane words each —
+plane ``j`` holds bit ``j`` of the 32 offset-binary mantissas, lane ``i``
+(bit ``i`` of the word) is value ``i`` of the chunk. Unpacking is therefore
+a pure vectorized shift/mask in VMEM — no gathers, no field ever straddles
+a word:
+
+    u_i = sum_j ((plane_j >> i) & 1) << j;      m_i = u_i - qmax
+
+The bit-plane loop is a static Python loop of ``bits`` (<= 8) iterations
+over rank-3 tiles, which Mosaic maps onto the VPU; interpret mode runs the
+identical math on CPU. Masking with ``& 1`` makes the math correct whether
+the backend shifts uint32 logically or int32 arithmetically.
+
+HBM holds only the packed words (b bits/value); full int8 mantissas exist
+only transiently as VMEM tiles (or as this kernel's output when a consumer
+genuinely needs the unpacked working form).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.gse import _PACK_CHUNK, unpack_mantissas
+
+DEFAULT_BM = 256
+DEFAULT_BK = 512
+
+
+def unpack_tile(words: jax.Array, bits: int) -> jax.Array:
+    """(BM, C*bits) uint32 plane words -> (BM, C*32) int8 mantissas.
+
+    Shared by this kernel and the fused packed matmul. The shift/mask body
+    is ``repro.core.gse.unpack_mantissas`` — pure jnp, so the same code
+    defines the wire format once and runs both host-side and on
+    VMEM-resident tiles inside kernels.
+    """
+    k = words.shape[-1] // bits * _PACK_CHUNK
+    return unpack_mantissas(words, bits, k)
+
+
+def _gse_unpack_kernel(w_ref, m_ref, *, bits: int):
+    m_ref[...] = unpack_tile(w_ref[...], bits)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bits", "bm", "bk", "interpret"))
+def gse_unpack_pallas(words: jax.Array, bits: int,
+                      bm: int = DEFAULT_BM, bk: int = DEFAULT_BK,
+                      interpret: bool = True) -> jax.Array:
+    """words (M, K//32*bits) uint32 -> mantissas (M, K) int8.
+
+    K is implied by the word count; K % 32 == 0 (kernel storage invariant —
+    the jnp path in ``repro.core.gse`` handles ragged tails by padding).
+    Tiles (bm, bk) of the *output*; bk % 32 == 0.
+    """
+    m_dim, kw = words.shape
+    k_dim = kw // bits * _PACK_CHUNK
+    bm = min(bm, m_dim)
+    bk = min(bk, k_dim)
+    assert m_dim % bm == 0 and k_dim % bk == 0 and bk % _PACK_CHUNK == 0, (
+        words.shape, bits, bm, bk)
+    bkw = bk // _PACK_CHUNK * bits
+    grid = (m_dim // bm, k_dim // bk)
+    kernel = functools.partial(_gse_unpack_kernel, bits=bits)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, bkw), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((bm, bk), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m_dim, k_dim), jnp.int8),
+        interpret=interpret,
+    )(words)

@@ -12,8 +12,11 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core.gse import PackedGSETensor, unpack_exponents
 from repro.kernels.gse_quant import gse_quantize_pallas
-from repro.kernels.gse_matmul import gse_matmul_pallas
+from repro.kernels.gse_matmul import (gse_matmul_pallas,
+                                      gse_matmul_packed_pallas)
+from repro.kernels.gse_unpack import gse_unpack_pallas
 from repro.kernels.nf4_dequant import nf4_dequant_pallas
 
 
@@ -27,10 +30,23 @@ def gse_quantize(x, bits: int = 6, group: int = 32, **block_kw):
                                **block_kw)
 
 
+def gse_unpack(words, bits: int, **block_kw):
+    """Packed mantissa words (M, K//32*bits) uint32 -> int8 (M, K)."""
+    return gse_unpack_pallas(words, bits, interpret=not _on_tpu(),
+                             **block_kw)
+
+
 def gse_matmul(a_m, a_e, b_m, b_e, group: int = 32, **block_kw):
     """GSE (M,K) x (N,K) -> fp32 (M,N) via int8 MXU MACs."""
     return gse_matmul_pallas(a_m, a_e, b_m, b_e, group,
                              interpret=not _on_tpu(), **block_kw)
+
+
+def gse_matmul_packed(a_m, a_e, b_words, b_e, bits: int, group: int = 32,
+                      **block_kw):
+    """Fused packed-dequant matmul: B mantissas stay packed in HBM."""
+    return gse_matmul_packed_pallas(a_m, a_e, b_words, b_e, bits, group,
+                                    interpret=not _on_tpu(), **block_kw)
 
 
 def nf4_dequant(codes, absmax, out_dtype=jnp.bfloat16, **block_kw):
@@ -47,3 +63,18 @@ def gse_linear(x, w, bits: int = 6, group: int = 32):
     xm, xe = gse_quantize(x, bits, group)
     wm, we = gse_quantize(w, bits, group)
     return gse_matmul(xm, xe, wm, we, group)
+
+
+def gse_linear_packed(x, w_packed: PackedGSETensor, **block_kw):
+    """Linear against a weight held in packed GSE storage: quantize the
+    activation on the fly, feed the packed words straight into the fused
+    kernel. Only the activation's (tiny) exponents are unpacked host-side;
+    the weight mantissas go HBM -> VMEM as b-bit words.
+
+    x: (B, K) float; w_packed: logical (N, K) -> (B, N) fp32.
+    """
+    bits, group = w_packed.bits, w_packed.group_size
+    xm, xe = gse_quantize(x, bits, group)
+    we = unpack_exponents(w_packed.exponent_words, w_packed.exponent_shape)
+    return gse_matmul_packed(xm, xe, w_packed.mantissa_words, we, bits,
+                             group, **block_kw)

@@ -5,7 +5,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.gse import (EXP_MIN, EXP_MAX, qmax_for_bits)
+from repro.core.gse import (EXP_MIN, EXP_MAX, exp2_int, qmax_for_bits,
+                            unpack_mantissas)
 from repro.core.nf4 import NF4_CODE, BLOCK
 
 
@@ -25,16 +26,37 @@ def gse_quantize_ref(x: jax.Array, bits: int = 6, group: int = 32):
 
 
 def gse_matmul_ref(a_m, a_e, b_m, b_e, group: int = 32):
-    """Oracle for gse_matmul_pallas: exact per-group int MAC + 2^(eA+eB)."""
+    """Oracle for gse_matmul_pallas: exact per-group int MAC + 2^(eA+eB),
+    fp32-accumulated sequentially in ascending group order (the ordered-
+    accumulation contract shared with gse_matmul_reference and the
+    kernels — see repro.core.gse.gse_matmul_reference)."""
     m_dim, k_dim = a_m.shape
     n_dim = b_m.shape[0]
     ng = k_dim // group
     ag = a_m.reshape(m_dim, ng, group).astype(jnp.int32)
     bg = b_m.reshape(n_dim, ng, group).astype(jnp.int32)
     prod = jnp.einsum("mgk,ngk->mng", ag, bg)
-    scale = jnp.exp2(a_e.astype(jnp.float32))[:, None, :] \
-        * jnp.exp2(b_e.astype(jnp.float32))[None, :, :]
-    return jnp.sum(prod.astype(jnp.float32) * scale, axis=-1)
+    scale = exp2_int(a_e)[:, None, :] * exp2_int(b_e)[None, :, :]
+    terms = prod.astype(jnp.float32) * scale
+    acc = jnp.zeros((m_dim, n_dim), jnp.float32)
+    for gi in range(ng):
+        acc = acc + terms[:, :, gi]
+    return acc
+
+
+def gse_unpack_ref(words, bits: int):
+    """Oracle for gse_unpack_pallas: (M, K//32*bits) uint32 -> (M, K) int8
+    via the jnp bit-plane unpack in repro.core.gse."""
+    m_dim, kw = words.shape
+    k_dim = kw // bits * 32
+    return unpack_mantissas(words, bits, k_dim)
+
+
+def gse_matmul_packed_ref(a_m, a_e, b_words, b_e, bits: int,
+                          group: int = 32):
+    """Oracle for gse_matmul_packed_pallas: unpack then exact GSE matmul."""
+    b_m = gse_unpack_ref(b_words, bits)
+    return gse_matmul_ref(a_m, a_e, b_m, b_e, group)
 
 
 def nf4_dequant_ref(codes, absmax, out_dtype=jnp.bfloat16):

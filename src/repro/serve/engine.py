@@ -9,8 +9,18 @@ Cache sharding (DESIGN §5): batch over (pod, data); kv-heads over model when
 divisible, otherwise the sequence axis is sharded over model (GQA archs with
 few KV heads — the softmax over the sharded length lowers to an all-reduce).
 
-Beyond-paper: ``kv_quant_bits`` stores the KV cache GSE-quantized (the
-paper's format reused as a serving memory optimization).
+Beyond-paper: ``kv_quant_bits`` stores the KV cache GSE-quantized *and
+bit-packed* (the paper's storage format reused as a serving memory
+optimization). :func:`pack_decode_cache` / :func:`unpack_decode_cache`
+convert the attention k/v (and cross k/v) leaves to
+:class:`~repro.core.gse.PackedGSETensor` — live HBM bytes drop to
+``b + 5/32`` bits per cached value, which is what lets one device hold
+many more idle sessions (pause/resume, prefix caches) or longer contexts.
+With ``kv_quant_bits`` set, :func:`greedy_generate` carries the cache
+**packed** through the decode scan: each step unpacks, attends, re-packs.
+Re-quantizing an already-GSE-valued cache is exact (same amax -> same
+exponent -> same mantissas), so only freshly appended tokens incur
+quantization error.
 """
 from __future__ import annotations
 
@@ -21,11 +31,15 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.core.gse import (DEFAULT_GROUP, PackedGSETensor, gse_pack,
+                            gse_quantize)
 from repro.core.policy import QuantPolicy
 from repro.models.config import ModelConfig
 from repro.models import model as M
 from repro.models import ssm as S
 from repro.distributed.sharding import current_ctx, resolve_pspec
+
+_PACKED_KV_KEYS = ("k", "v", "ck", "cv")
 
 
 def kv_cache_pspec(mesh, rules, batch: int, kv_heads: int,
@@ -93,6 +107,45 @@ def cache_shardings(cfg: ModelConfig, batch: int, max_len: int, mesh, rules,
     return out
 
 
+def _kv_pack_group(head_dim: int, group: int) -> int:
+    """Largest usable group size for quantizing along the head_dim axis."""
+    return group if head_dim % group == 0 else head_dim
+
+
+@partial(jax.jit, static_argnames=("bits", "group"))
+def pack_decode_cache(cache, bits: int = 8, group: int = DEFAULT_GROUP):
+    """GSE-quantize + bit-pack the attention k/v (and cross k/v) leaves.
+
+    Quantization runs along the trailing head_dim axis. Index, SSM state
+    and conv buffers pass through untouched (they are tiny or fp-sensitive).
+    Returns a cache dict whose packed leaves are PackedGSETensor pytrees;
+    their ``.nbytes`` is the realized b-bit footprint.
+    """
+    out = dict(cache)
+    for key in _PACKED_KV_KEYS:
+        if key in cache:
+            x = cache[key]
+            g = _kv_pack_group(x.shape[-1], group)
+            out[key] = gse_pack(gse_quantize(x, bits, g))
+    return out
+
+
+@partial(jax.jit, static_argnames=("dtype",))
+def unpack_decode_cache(cache, dtype=jnp.bfloat16):
+    """Inverse of :func:`pack_decode_cache` (dequantizes packed leaves)."""
+    out = dict(cache)
+    for key in _PACKED_KV_KEYS:
+        if key in cache and isinstance(cache[key], PackedGSETensor):
+            out[key] = cache[key].dequantize(dtype)
+    return out
+
+
+def packed_cache_nbytes(cache) -> int:
+    """Realized bytes of the packed k/v leaves (the serving memory claim)."""
+    return sum(cache[k].nbytes for k in _PACKED_KV_KEYS
+               if k in cache and isinstance(cache[k], PackedGSETensor))
+
+
 def _split_cache(cache):
     """Partition the flat cache dict into the per-family parts that
     _scan_stack expects per layer (attention keys + ssm keys merged ok)."""
@@ -152,17 +205,32 @@ def decode_step(fz, tr, tokens, cache, cfg: ModelConfig,
 
 
 def greedy_generate(fz, tr, prompt, cfg: ModelConfig, policy: QuantPolicy,
-                    max_new: int = 16, max_len: Optional[int] = None):
-    """Simple batched greedy decoding loop (example/serving driver)."""
+                    max_new: int = 16, max_len: Optional[int] = None,
+                    kv_quant_bits: Optional[int] = None,
+                    kv_group: int = DEFAULT_GROUP):
+    """Simple batched greedy decoding loop (example/serving driver).
+
+    With ``kv_quant_bits`` set, the KV cache lives **bit-packed** between
+    steps: the scan carry holds PackedGSETensor leaves (b-bit words in HBM),
+    each step dequantizes for attention and re-packs. Re-packing GSE-exact
+    values is lossless, so only newly written positions quantize.
+    """
     b, t = prompt.shape
     max_len = max_len or (t + max_new)
     cache = init_decode_cache(cfg, b, max_len)
     logits, cache = prefill(fz, tr, {"tokens": prompt}, cache, cfg, policy)
     tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+    packed = kv_quant_bits is not None
+    if packed:
+        cache = pack_decode_cache(cache, kv_quant_bits, kv_group)
 
     def body(carry, _):
         tok, cache = carry
+        if packed:
+            cache = unpack_decode_cache(cache)
         logits, cache = decode_step(fz, tr, tok, cache, cfg, policy)
+        if packed:
+            cache = pack_decode_cache(cache, kv_quant_bits, kv_group)
         nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
         return (nxt, cache), nxt[:, 0]
 

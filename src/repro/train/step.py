@@ -41,6 +41,7 @@ class TrainConfig:
     accum_steps: int = 1                  # microbatch count per step
     compress_pod_grads: bool = False      # GSE cross-pod gradient sync
     compress_bits: int = 8
+    compress_packed: bool = True          # bit-packed u32 wire payload
     max_grad_norm: float = 1.0
 
 
@@ -123,17 +124,18 @@ def make_train_step(cfg: ModelConfig, policy: QuantPolicy, opt: AdamW8bit,
                 with use_sharding(ctx.mesh if ctx else None, inner_rules):
                     loss, aux, grads = _grads(train, frozen, batch)
                 grads, res = C.compressed_tree_mean(
-                    grads, res, "pod", tcfg.compress_bits)
+                    grads, res, "pod", tcfg.compress_bits,
+                    packed=tcfg.compress_packed)
                 loss = jax.lax.pmean(loss, "pod")
                 res = jax.tree.map(lambda r: r[None], res)
                 return loss, grads, res
 
-            loss, grads, residuals = jax.shard_map(
-                per_pod, mesh=mesh,
+            from repro.distributed.sharding import shard_map_compat
+            loss, grads, residuals = shard_map_compat(
+                per_pod, mesh,
                 in_specs=(rep[0], rep[1], batch_specs, res_specs),
                 out_specs=(P(), jax.tree.map(lambda _: P(), train),
                            res_specs),
-                check_vma=False,
                 axis_names={"pod"})(train, frozen, batch, residuals)
         else:
             loss, aux, grads = _grads(train, frozen, batch)

@@ -1,0 +1,90 @@
+"""Graceful degradation for the property-test suite.
+
+When ``hypothesis`` is installed (CI: ``pip install -e .[test]``) this module
+re-exports the real ``given`` / ``settings`` / ``strategies``. In a bare
+environment the import used to kill collection of five test modules
+(`ModuleNotFoundError` at collect time); instead we fall back to a tiny
+deterministic sampler so the modules still collect AND their property tests
+still run as a reduced sweep: each ``@given`` test executes over a fixed
+number of seeded draws, with strategy endpoints (lo/hi, first/last element)
+always included in the first draws.
+
+The fallback implements only what this repo's tests use —
+``st.integers(lo, hi)``, ``st.floats(lo, hi)``, ``st.sampled_from(seq)``,
+``st.booleans()`` — and ``settings(max_examples=..., deadline=...)``. A test
+that genuinely needs full hypothesis semantics (shrinking, assume, etc.)
+should ``pytest.importorskip("hypothesis")`` at module top instead.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:            # bare env: deterministic reduced sweep
+    import random
+
+    HAVE_HYPOTHESIS = False
+    _FALLBACK_EXAMPLES = 8     # per-test cap; endpoints come first
+
+    class _Strategy:
+        def __init__(self, draw, endpoints=()):
+            self._draw = draw
+            self._endpoints = list(endpoints)
+
+        def example_at(self, rng, i):
+            if i < len(self._endpoints):
+                return self._endpoints[i]
+            return self._draw(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda r: r.randint(min_value, max_value),
+                             endpoints=(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value, max_value, **_kw):
+            return _Strategy(lambda r: r.uniform(min_value, max_value),
+                             endpoints=(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            xs = list(elements)
+            return _Strategy(lambda r: r.choice(xs), endpoints=xs[:2])
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda r: bool(r.getrandbits(1)),
+                             endpoints=(False, True))
+
+    st = _Strategies()
+
+    def settings(max_examples=None, **_ignored):
+        def deco(fn):
+            if max_examples is not None:
+                fn._compat_max_examples = min(max_examples,
+                                              _FALLBACK_EXAMPLES)
+            return fn
+        return deco
+
+    def given(**strategy_kw):
+        def deco(fn):
+            # zero-arg wrapper: the drawn kwargs must NOT look like pytest
+            # fixtures, so the original signature is deliberately hidden
+            # (no functools.wraps -- it forwards __wrapped__/signature).
+            def runner():
+                n = getattr(runner, "_compat_max_examples",
+                            _FALLBACK_EXAMPLES)
+                rng = random.Random(0xC0FFEE)
+                for i in range(n):
+                    draws = {k: s.example_at(rng, i)
+                             for k, s in strategy_kw.items()}
+                    fn(**draws)
+            runner.__name__ = fn.__name__
+            runner.__doc__ = fn.__doc__
+            runner.__module__ = fn.__module__
+            return runner
+        return deco
+
+
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]

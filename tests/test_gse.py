@@ -3,7 +3,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+# Real hypothesis when installed; deterministic reduced sweep otherwise
+# (keeps collection green in bare environments -- see _hypothesis_compat).
+from _hypothesis_compat import given, settings, st
 
 from repro.core.gse import (DEFAULT_GROUP, EXP_MAX, EXP_MIN, GSETensor,
                             gse_dequantize, gse_fake_quant,

@@ -47,6 +47,54 @@ def test_gse_matmul_kernel_exact(mkn, bits):
                                atol=0)
 
 
+@pytest.mark.parametrize("mkn", [(32, 256, 96), (64, 512, 128),
+                                 (96, 128, 32), (16, 1024, 64)])
+@pytest.mark.parametrize("bits", [5, 6, 8])
+def test_gse_matmul_parity_packed_and_unpacked(mkn, bits):
+    """Both kernel paths (int8 and fused packed-dequant) are bit-exact vs
+    the value-space oracle ``gse_matmul_reference`` on non-square M/K/N —
+    the ordered-accumulation contract, not an allclose."""
+    from repro.core.gse import gse_matmul_reference, gse_pack, gse_quantize
+    m, k, n = mkn
+    a = jax.random.normal(jax.random.PRNGKey(10 + bits + m), (m, k)) * 0.3
+    b = jax.random.normal(jax.random.PRNGKey(20 + bits + n), (n, k)) * 0.3
+    ta = gse_quantize(a, bits, 32)
+    tb = gse_quantize(b, bits, 32)
+    pb = gse_pack(tb)
+    ref_out = np.asarray(gse_matmul_reference(ta, tb))
+    bm, bn = min(32, m), min(32, n)
+    for bk in (64, k):
+        y_u = ops.gse_matmul(ta.mantissa, ta.exponent, tb.mantissa,
+                             tb.exponent, 32, bm=bm, bn=bn, bk=bk)
+        y_p = ops.gse_matmul_packed(ta.mantissa, ta.exponent,
+                                    pb.mantissa_words, tb.exponent, bits,
+                                    32, bm=bm, bn=bn, bk=bk)
+        np.testing.assert_array_equal(np.asarray(y_u), ref_out)
+        np.testing.assert_array_equal(np.asarray(y_p), ref_out)
+
+
+@pytest.mark.parametrize("bits", [2, 5, 6, 8])
+def test_gse_unpack_kernel_exact(bits):
+    from repro.core.gse import gse_pack, gse_quantize
+    x = jax.random.normal(jax.random.PRNGKey(bits), (64, 256)) * 0.5
+    t = gse_quantize(x, bits, 32)
+    words = gse_pack(t).mantissa_words
+    m1 = ops.gse_unpack(words, bits, bm=32, bk=64)
+    m2 = ref.gse_unpack_ref(words, bits)
+    np.testing.assert_array_equal(np.asarray(m1), np.asarray(t.mantissa))
+    np.testing.assert_array_equal(np.asarray(m2), np.asarray(t.mantissa))
+
+
+def test_gse_linear_packed_matches_unpacked():
+    from repro.core.gse import gse_pack, gse_quantize
+    x = jax.random.normal(jax.random.PRNGKey(40), (64, 256))
+    w = jax.random.normal(jax.random.PRNGKey(41), (128, 256)) * 0.1
+    pw = gse_pack(gse_quantize(w, 6, 32))
+    y1 = ops.gse_linear_packed(x, pw, bm=32, bn=32, bk=64)
+    y2 = ops.gse_linear(x, w, 6, 32)
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+
+
 def test_gse_linear_end_to_end_vs_fakequant():
     from repro.core.gse import gse_fake_quant
     x = jax.random.normal(jax.random.PRNGKey(4), (64, 256))

@@ -1,0 +1,262 @@
+"""Packed GSE storage: bit-exact pack/unpack round-trips, realized nbytes,
+pytree behavior, and the packed consumers (serve KV cache, checkpoint,
+gradient-compression wire format)."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+# Real hypothesis when installed; deterministic reduced sweep otherwise
+# (keeps collection green in bare environments -- see _hypothesis_compat).
+from _hypothesis_compat import given, settings, st
+
+from repro.core.gse import (EXP_BITS, EXP_MIN, GSETensor, PackedGSETensor,
+                            gse_bits_per_value, gse_fake_quant, gse_pack,
+                            gse_quantize, gse_unpack, pack_unsigned,
+                            qmax_for_bits, unpack_unsigned)
+
+ALL_BITS = list(range(2, 9))
+GROUPS = [16, 32, 64]
+
+
+def _assert_roundtrip_exact(t: GSETensor):
+    p = gse_pack(t)
+    t2 = gse_unpack(p)
+    np.testing.assert_array_equal(np.asarray(t.mantissa),
+                                  np.asarray(t2.mantissa))
+    np.testing.assert_array_equal(np.asarray(t.exponent),
+                                  np.asarray(t2.exponent))
+    assert t2.bits == t.bits and t2.group_size == t.group_size
+
+
+@pytest.mark.parametrize("bits", ALL_BITS)
+@pytest.mark.parametrize("group", GROUPS)
+def test_roundtrip_bit_exact(bits, group):
+    x = jax.random.normal(jax.random.PRNGKey(bits * 7 + group),
+                          (6, 192)) * 2.0
+    _assert_roundtrip_exact(gse_quantize(x, bits, group))
+
+
+@pytest.mark.parametrize("bits", [2, 5, 8])
+def test_roundtrip_all_zero_groups(bits):
+    t = gse_quantize(jnp.zeros((4, 64)), bits, 32)
+    assert bool(jnp.all(t.exponent == EXP_MIN))      # the zero-group pin
+    _assert_roundtrip_exact(t)
+
+
+@pytest.mark.parametrize("bits", ALL_BITS)
+def test_roundtrip_saturated_qmax(bits):
+    """Alternating +/- (qmax * 2^e) values quantize to exactly +/-qmax —
+    the extreme mantissa codes must survive offset-binary packing. (amax
+    must be qmax times a power of two: the ceil'd group exponent otherwise
+    leaves headroom below qmax.)"""
+    qmax = qmax_for_bits(bits)
+    x = jnp.tile(jnp.array([[1.0, -1.0]]), (4, 32)) * qmax * 4.0
+    t = gse_quantize(x, bits, 32)
+    assert int(jnp.max(t.mantissa)) == qmax
+    assert int(jnp.min(t.mantissa)) == -qmax
+    _assert_roundtrip_exact(t)
+
+
+@settings(max_examples=25, deadline=None)
+@given(bits=st.integers(2, 8), group=st.sampled_from(GROUPS),
+       scale=st.floats(1e-4, 1e3), seed=st.integers(0, 2 ** 16))
+def test_property_roundtrip(bits, group, scale, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (4, 192)) * scale
+    _assert_roundtrip_exact(gse_quantize(x, bits, group))
+
+
+@settings(max_examples=15, deadline=None)
+@given(nbits=st.integers(1, 16), k=st.integers(1, 130),
+       seed=st.integers(0, 2 ** 16))
+def test_property_pack_unsigned_generic(nbits, k, seed):
+    """The raw bit-plane packer round-trips any unsigned payload < 2^b."""
+    rng = np.random.default_rng(seed)
+    u = rng.integers(0, 1 << nbits, size=(3, k), dtype=np.uint32)
+    w = pack_unsigned(jnp.asarray(u), nbits)
+    back = unpack_unsigned(w, nbits, k)
+    np.testing.assert_array_equal(np.asarray(back), u)
+
+
+@pytest.mark.parametrize("bits", ALL_BITS)
+@pytest.mark.parametrize("group", GROUPS)
+def test_nbytes_matches_formula(bits, group):
+    """nbytes == ceil(n*b + g*5)/8 up to chunk-of-32 word alignment."""
+    rows, k = 8, 192
+    t = gse_quantize(jnp.ones((rows, k)), bits, group)
+    p = gse_pack(t)
+    n, g = rows * k, rows * (k // group)
+    # exact word-level expectation for the aligned (K % 32 == 0) layout
+    expected = 4 * (rows * (-(-k // 32)) * bits + (-(-g // 32)) * EXP_BITS)
+    assert p.nbytes == expected
+    # and within word-alignment slack of the analytic bit count
+    analytic = (n * bits + g * EXP_BITS + 7) // 8
+    slack = 4 * 32 * 2                      # one padded chunk per stream
+    assert analytic <= p.nbytes <= analytic + slack
+
+
+def test_nbytes_4096_weight_within_1pct():
+    """The acceptance shape: (4096, 4096) @ bits=6 packs to the analytic
+    bits/value exactly (device nbytes, not a formula)."""
+    w = jax.random.normal(jax.random.PRNGKey(0), (4096, 4096)) * 0.02
+    p = gse_pack(gse_quantize(w, 6, 32))
+    jax.block_until_ready(p.mantissa_words)
+    analytic = gse_bits_per_value(6, 32) / 8 * 4096 ** 2
+    assert abs(p.nbytes / analytic - 1) < 0.01
+    # device-reported bytes agree with the property
+    live = p.mantissa_words.nbytes + p.exponent_words.nbytes
+    assert live == p.nbytes
+
+
+def test_ragged_last_axis_packs_flat():
+    """Shapes whose last axis isn't a multiple of 32 (e.g. head_dim 8)
+    take the flattened-stream layout: no per-row chunk blowup."""
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 3, 16, 8))
+    t = gse_quantize(x, 6, 8)
+    p = gse_pack(t)
+    _assert_roundtrip_exact(t)
+    n = x.size
+    analytic = (n * 6 + (n // 8) * EXP_BITS + 7) // 8
+    assert p.nbytes <= analytic + 4 * 32 * 2
+
+
+def test_packed_tensor_is_pytree():
+    p = gse_pack(gse_quantize(jnp.ones((4, 64)), 6, 32))
+    leaves = jax.tree.leaves(p)
+    assert len(leaves) == 2
+    p2 = jax.tree.map(lambda x: x, p)
+    assert isinstance(p2, PackedGSETensor)
+    assert p2.bits == 6 and p2.shape == (4, 64)
+    # jit through the pytree boundary
+    deq = jax.jit(lambda q: q.dequantize())(p)
+    np.testing.assert_array_equal(
+        np.asarray(deq), np.asarray(gse_fake_quant(jnp.ones((4, 64)), 6, 32)))
+
+
+def test_dequantize_matches_unpacked_dequantize():
+    x = jax.random.normal(jax.random.PRNGKey(3), (16, 128)) * 0.5
+    t = gse_quantize(x, 5, 32)
+    np.testing.assert_array_equal(np.asarray(gse_pack(t).dequantize()),
+                                  np.asarray(t.dequantize()))
+
+
+# ---------------- consumers -------------------------------------------------
+
+def test_serve_cache_pack_roundtrip_and_bytes():
+    from repro.configs import reduced_config
+    from repro.core.policy import QuantPolicy
+    from repro.models import model as M
+    from repro.serve import engine as E
+    fp = QuantPolicy(base_w_nf4=False, a_bits=None, w_bits=None,
+                     g_bits=None, adapter_bits=None, fmt="none", rank=8)
+    cfg = reduced_config("granite_3_2b")
+    fz, tr = M.init_model(jax.random.PRNGKey(0), cfg, fp)
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 4, cfg.vocab)
+    cache = E.init_decode_cache(cfg, 2, 16)
+    _, cache = E.prefill(fz, tr, {"tokens": prompt}, cache, cfg, fp)
+    packed = E.pack_decode_cache(cache, bits=6)
+    assert isinstance(packed["k"], PackedGSETensor)
+    raw = cache["k"].nbytes + cache["v"].nbytes
+    # b=6 + shared exponents must land well under the bf16 footprint
+    assert E.packed_cache_nbytes(packed) < 0.5 * raw
+    back = E.unpack_decode_cache(packed)
+    # half-ulp-of-group-scale error bound, like the core roundtrip
+    assert float(jnp.max(jnp.abs(
+        back["k"].astype(jnp.float32) - cache["k"].astype(jnp.float32)))) < 0.1
+    assert bool(jnp.all(back["index"] == cache["index"]))
+
+
+def test_serve_generate_with_packed_kv_matches_fp_cache():
+    """Full-precision policy + 8-bit packed KV: greedy tokens match the
+    bf16-cache decode (8-bit KV error is far below argmax margins here)."""
+    from repro.configs import reduced_config
+    from repro.core.policy import QuantPolicy
+    from repro.models import model as M
+    from repro.serve import engine as E
+    fp = QuantPolicy(base_w_nf4=False, a_bits=None, w_bits=None,
+                     g_bits=None, adapter_bits=None, fmt="none", rank=8)
+    cfg = reduced_config("granite_3_2b")
+    fz, tr = M.init_model(jax.random.PRNGKey(0), cfg, fp)
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 4, cfg.vocab)
+    out = E.greedy_generate(fz, tr, prompt, cfg, fp, max_new=5)
+    outq = E.greedy_generate(fz, tr, prompt, cfg, fp, max_new=5,
+                             kv_quant_bits=8)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(outq))
+
+
+def test_checkpoint_roundtrips_packed_leaves(tmp_path):
+    from repro.checkpoint.manager import CheckpointManager
+    d = str(tmp_path / "ckpt")
+    mgr = CheckpointManager(d, keep=2)
+    w = jax.random.normal(jax.random.PRNGKey(0), (128, 128)) * 0.02
+    tree = {"w": w, "packed": gse_pack(gse_quantize(w, 6, 32))}
+    mgr.save(1, tree)
+    got, _, step = mgr.restore(1, tree)
+    assert step == 1
+    assert isinstance(got["packed"], PackedGSETensor)
+    np.testing.assert_array_equal(np.asarray(got["packed"].mantissa_words),
+                                  np.asarray(tree["packed"].mantissa_words))
+    np.testing.assert_array_equal(np.asarray(got["w"]), np.asarray(w))
+
+
+def test_checkpoint_gse_bits_snapshot_smaller_and_dequantizes(tmp_path):
+    from repro.checkpoint.manager import CheckpointManager
+    w = jax.random.normal(jax.random.PRNGKey(0), (256, 256)) * 0.02
+    tree = {"w": w, "small": jnp.zeros((8,))}
+    full = CheckpointManager(str(tmp_path / "full"))
+    full.save(1, tree)
+    packed = CheckpointManager(str(tmp_path / "packed"))
+    packed.save(1, tree, gse_bits=6)
+    sz_full = os.path.getsize(os.path.join(full.dir, "step_00000001",
+                                           "arrays.npz"))
+    sz_packed = os.path.getsize(os.path.join(packed.dir, "step_00000001",
+                                             "arrays.npz"))
+    assert sz_packed < 0.3 * sz_full            # ~6.16/32 of fp32 + overhead
+    got, _, _ = packed.restore(1, tree)
+    np.testing.assert_array_equal(np.asarray(got["w"]),
+                                  np.asarray(gse_fake_quant(w, 6, 32)))
+    np.testing.assert_array_equal(np.asarray(got["small"]),
+                                  np.zeros((8,), np.float32))
+
+
+def test_checkpoint_gse_bits_packs_bfloat16_leaves(tmp_path):
+    """bf16 (ml_dtypes) leaves — the dtype real model params use — must be
+    eligible for packed snapshots (np.issubdtype says bf16 isn't floating;
+    the manager must use the jnp check)."""
+    from repro.checkpoint.manager import CheckpointManager
+    w = (jax.random.normal(jax.random.PRNGKey(0), (256, 256)) * 0.02
+         ).astype(jnp.bfloat16)
+    mgr = CheckpointManager(str(tmp_path / "bf16"))
+    mgr.save(1, {"w": w}, gse_bits=6)
+    path = os.path.join(mgr.dir, "step_00000001", "arrays.npz")
+    sz = os.path.getsize(path)
+    assert sz < 0.5 * w.size * 2                # packed, not raw bf16
+    got, _, _ = mgr.restore(1, {"w": w})
+    assert got["w"].dtype == jnp.bfloat16
+    assert bool(jnp.all(jnp.isfinite(got["w"].astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("bits", [5, 8])
+def test_compression_packed_wire_is_lossless(bits):
+    """packed=True changes only the wire encoding: results are bit-equal
+    to the legacy int8 all-gather."""
+    from jax.sharding import PartitionSpec as P
+    from repro.distributed.compression import compressed_mean
+    from repro.distributed.sharding import shard_map_compat
+    mesh = jax.make_mesh((1,), ("pod",))
+    g = jax.random.normal(jax.random.PRNGKey(0), (250,)) * 1e-3
+    r0 = jnp.zeros((250,))
+    outs = {}
+    for packed in (True, False):
+        def f(gg, rr):
+            return compressed_mean(gg[0], rr[0], "pod", bits=bits,
+                                   group=32, packed=packed)
+        outs[packed] = shard_map_compat(
+            f, mesh, in_specs=(P("pod"), P("pod")),
+            out_specs=(P(), P()))(g[None], r0[None])
+    np.testing.assert_array_equal(np.asarray(outs[True][0]),
+                                  np.asarray(outs[False][0]))
+    np.testing.assert_array_equal(np.asarray(outs[True][1]),
+                                  np.asarray(outs[False][1]))

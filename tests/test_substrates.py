@@ -8,14 +8,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.data.pipeline import (DataConfig, PrefetchingLoader,
                                  batch_at_step)
 from repro.optim.adamw8bit import AdamW8bit
 from repro.checkpoint.manager import CheckpointManager
 from repro.distributed.sharding import (ShardingRules, resolve_pspec,
-                                        strip_axes)
+                                        shard_map_compat, strip_axes)
 
 
 # ---------------- data -----------------------------------------------------
@@ -183,9 +182,9 @@ def test_compressed_mean_single_shard_semantics():
     def f(g, r):
         return compressed_mean(g[0], r[0], "pod", bits=8, group=32)
 
-    out, res = jax.shard_map(
-        f, mesh=mesh, in_specs=(P("pod"), P("pod")),
-        out_specs=(P(), P()), check_vma=False)(g[None], r0[None])
+    out, res = shard_map_compat(
+        f, mesh, in_specs=(P("pod"), P("pod")),
+        out_specs=(P(), P()))(g[None], r0[None])
     np.testing.assert_allclose(np.asarray(out + res), np.asarray(g),
                                atol=1e-7)
 
@@ -203,8 +202,8 @@ def test_error_feedback_reduces_bias():
     def f(g, r):
         return compressed_mean(g[0], r[0], "pod", bits=8, group=32)
 
-    fm = jax.shard_map(f, mesh=mesh, in_specs=(P("pod"), P("pod")),
-                       out_specs=(P(), P()), check_vma=False)
+    fm = shard_map_compat(f, mesh, in_specs=(P("pod"), P("pod")),
+                          out_specs=(P(), P()))
     n = 64
     for _ in range(n):
         out, r = fm(g[None], r[None])
