@@ -26,22 +26,27 @@ def _time(fn, *args, iters=20):
     return (time.perf_counter() - t0) / iters * 1e6
 
 
-def run():
+def run(smoke: bool = False):
+    """Full sweep by default; ``smoke`` shrinks shapes/iters to a CI-sized
+    pass that still exercises every row (incl. the fused quantize+pack
+    kernel and realized packed bytes) in a few seconds."""
     rows = []
     key = jax.random.PRNGKey(0)
-    x = jax.random.normal(key, (512, 2048))
-    w = jax.random.normal(jax.random.PRNGKey(1), (2048, 512)) * 0.05
+    big = (128, 512) if smoke else (512, 2048)
+    x = jax.random.normal(key, big)
+    w = jax.random.normal(jax.random.PRNGKey(1), big[::-1]) * 0.05
+    tag = f"{big[0]}x{big[1]}"
 
     us = _time(jax.jit(lambda v: gse_fake_quant(v, 6, 32)), x)
-    rows.append(csv_row("kernel/gse_fake_quant_512x2048", us,
+    rows.append(csv_row(f"kernel/gse_fake_quant_{tag}", us,
                         f"GBps={x.nbytes / us * 1e6 / 1e9:.2f}"))
     us = _time(jax.jit(lambda v: gse_quantize(v, 6, 32).mantissa), x)
-    rows.append(csv_row("kernel/gse_quantize_512x2048", us,
+    rows.append(csv_row(f"kernel/gse_quantize_{tag}", us,
                         f"GBps={x.nbytes / us * 1e6 / 1e9:.2f}"))
     us = _time(jax.jit(
         lambda a, b: quantized_matmul(a, b, 6, 6, 6, 32)), x, w)
-    flops = 2 * 512 * 2048 * 512
-    rows.append(csv_row("kernel/qcd_matmul_512x2048x512", us,
+    flops = 2 * big[0] * big[1] * big[0]
+    rows.append(csv_row(f"kernel/qcd_matmul_{tag}x{big[0]}", us,
                         f"GFLOPs={flops / us * 1e6 / 1e9:.1f}"))
     us = _time(jax.jit(lambda a, b: a @ b), x, w)
     rows.append(csv_row("kernel/bf16_matmul_baseline", us,
@@ -49,23 +54,25 @@ def run():
 
     t = nf4_quantize(w)
     us = _time(jax.jit(nf4_dequantize), t)
-    rows.append(csv_row("kernel/nf4_dequant_2048x512", us,
+    rows.append(csv_row(f"kernel/nf4_dequant_{big[1]}x{big[0]}", us,
                         f"GBps={w.nbytes / us * 1e6 / 1e9:.2f}"))
 
     # flash attention (jnp chunked) vs direct at prefill-ish shape
     from repro.models.attention import (MaskInfo, direct_attention,
                                         flash_attention)
     ks = jax.random.split(key, 3)
-    q = jax.random.normal(ks[0], (1, 2048, 8, 64), jnp.bfloat16)
-    kk = jax.random.normal(ks[1], (1, 2048, 4, 64), jnp.bfloat16)
-    vv = jax.random.normal(ks[2], (1, 2048, 4, 64), jnp.bfloat16)
+    t_attn = 256 if smoke else 2048
+    blk = 128 if smoke else 512
+    q = jax.random.normal(ks[0], (1, t_attn, 8, 64), jnp.bfloat16)
+    kk = jax.random.normal(ks[1], (1, t_attn, 4, 64), jnp.bfloat16)
+    vv = jax.random.normal(ks[2], (1, t_attn, 4, 64), jnp.bfloat16)
     info = MaskInfo(causal=True)
     us1 = _time(jax.jit(lambda q, k, v: flash_attention(q, k, v, info,
-                                                        512, 512)),
+                                                        blk, blk)),
                 q, kk, vv, iters=5)
     us2 = _time(jax.jit(lambda q, k, v: direct_attention(q, k, v, info)),
                 q, kk, vv, iters=5)
-    rows.append(csv_row("kernel/flash_attn_2k", us1,
+    rows.append(csv_row(f"kernel/flash_attn_{t_attn}", us1,
                         f"direct_us={us2:.0f} ratio={us2 / us1:.2f}"))
 
     # Pallas interpret-mode correctness path (not wall-representative)
@@ -77,16 +84,34 @@ def run():
 
     # packed storage: jnp pack/unpack wall time and realized bytes
     from repro.core.gse import gse_pack, gse_quantize as gq, gse_unpack
-    t = gq(w.T, 6, 32)                            # (512, 2048) along K
+    t = gq(w.T, 6, 32)                            # (M, K) along K
     us = _time(jax.jit(lambda v: gse_pack(v).mantissa_words), t)
     p = gse_pack(t)
     rows.append(csv_row(
-        "kernel/gse_pack_512x2048_b6", us,
+        f"kernel/gse_pack_{tag}_b6", us,
         f"GBps={t.mantissa.nbytes / us * 1e6 / 1e9:.2f} "
         f"packed_bytes={p.nbytes} int8_bytes={t.mantissa.nbytes + t.exponent.nbytes}"))
     us = _time(jax.jit(lambda v: gse_unpack(v).mantissa), p)
-    rows.append(csv_row("kernel/gse_unpack_512x2048_b6", us,
+    rows.append(csv_row(f"kernel/gse_unpack_{tag}_b6", us,
                         f"GBps={t.mantissa.nbytes / us * 1e6 / 1e9:.2f}"))
+
+    # fused quantize+pack vs the two-dispatch storage path. The fused row
+    # credits the removed HBM round-trip: the old path writes+reads the
+    # int8 mantissa intermediate (~8/6 of the packed payload extra traffic)
+    # between its two dispatches; the fused kernel's tile never leaves
+    # VMEM unpacked.
+    two = jax.jit(lambda v: gse_pack(gq(v, 6, 32)).mantissa_words)
+    us2d = _time(two, x)
+    int8_roundtrip = 2 * x.size                   # int8 write + read bytes
+    rows.append(csv_row(
+        f"kernel/gse_quant_then_pack_{tag}_b6", us2d,
+        f"GBps={x.nbytes / us2d * 1e6 / 1e9:.2f} "
+        f"hbm_intermediate_bytes={int8_roundtrip}"))
+    usf = _time(lambda v: ops.gse_quant_pack(v, 6, 32)[0], x, iters=3)
+    rows.append(csv_row(
+        f"kernel/pallas_gse_quant_pack_fused_{tag}_b6", usf,
+        f"correctness-path-only hbm_intermediate_bytes=0 "
+        f"two_dispatch_us={us2d:.0f}"))
 
     # fused packed-dequant matmul, interpret mode (correctness path)
     xa = jax.random.normal(key, (128, 512))
@@ -103,4 +128,9 @@ def run():
 
 
 if __name__ == "__main__":
-    print("\n".join(run()))
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized pass: small shapes, every row exercised")
+    print("\n".join(run(smoke=ap.parse_args().smoke)))

@@ -5,7 +5,9 @@ Components per the paper's setting (batch 16, seq 2048, 8-bit AdamW,
 activation storage for backward in the compute format):
 
   base weights     : NF4 = 4 bits + fp32 absmax / 64 + DQ overhead
-  adapters         : bf16 master + fp32 copy + 2x int8 moments (+scales)
+  adapters         : bf16 master + fp32 copy + 2x packed GSE moments
+                     (b + 5/group bits per moment value — the realized
+                     AdamW8bit storage, not an int8+scales spreadsheet)
   activations      : stored GEMM inputs per layer, b_act bits/value
                      (16 for QLoRA, GSE bits + 5/32 shared exp for GSQ)
   gradients        : transient microbatch gradient workspace, b_grad bits
@@ -23,6 +25,11 @@ from repro.core.gse import gse_bits_per_value
 
 BATCH, SEQ = 16, 2048
 GB = 1024 ** 3
+
+# AdamW8bit moment storage: two packed GSE moments at b=8, group=32 —
+# matches AdamW8bit.state_nbytes exactly (both are b + 5/group bits/value)
+OPT_MOMENT_BITS = 8
+OPT_BYTES_PER_PARAM = 2 * gse_bits_per_value(OPT_MOMENT_BITS) / 8
 
 
 def realized_packed_rows(shape=(2048, 4096), bits=(5, 6, 8), group=32):
@@ -48,6 +55,34 @@ def realized_packed_rows(shape=(2048, 4096), bits=(5, 6, 8), group=32):
                      f"unpacked_int8={unpacked} analytic={analytic:.0f} "
                      f"ratio_vs_analytic={p.nbytes / analytic:.4f} "
                      f"saving_vs_int8={1 - p.nbytes / unpacked:.1%}"))
+    return rows
+
+
+def realized_optimizer_rows(shape=(4096, 4096), bits=(5, 8), group=32):
+    """Measured (not analytic) packed AdamW moment footprint: init real
+    optimizer state for a ``shape`` adapter tree and report
+    ``state_nbytes`` (logical packed bytes, BLOCK padding excluded) vs the
+    analytic ``2 * (b + 5/group) / 8`` bytes/param and the old
+    int8-moments-plus-fp32-block-scales accounting. Ratio vs analytic must
+    be ~1.0 — the optimizer row of the paper's bits/value budget as
+    observable storage."""
+    import jax.numpy as jnp
+    from repro.optim.adamw8bit import AdamW8bit
+
+    n = shape[0] * shape[1]
+    params = {"w": jnp.zeros(shape, jnp.float32)}
+    rows = []
+    for b in bits:
+        opt = AdamW8bit(m_bits=b, v_bits=b, group=group)
+        nbytes = opt.state_nbytes(opt.init(params))
+        analytic = 2 * gse_bits_per_value(b, group) / 8 * n
+        int8_legacy = 2 * (n + n // 256 * 4)       # int8 + fp32 scales/256
+        rows.append((f"memory_model/realized_optimizer/b{b}",
+                     nbytes,
+                     f"analytic={analytic:.0f} "
+                     f"ratio_vs_analytic={nbytes / analytic:.4f} "
+                     f"legacy_int8={int8_legacy} "
+                     f"saving_vs_int8={1 - nbytes / int8_legacy:.1%}"))
     return rows
 
 
@@ -91,7 +126,7 @@ def estimate_gb(arch: str, row: MemRow, act_factor: float) -> float:
     n_emb = cfg.padded_vocab * cfg.d_model * (1 if cfg.tie_embeddings else 2)
     base = n_lin * (4 + 32 / 64 + 8 / 4096) / 8 + n_emb * 2
     n_ad = _adapter_params(cfg, row.rank)
-    adapters = n_ad * (2 + 4 + 2 + 8 / 256) if row.rank else 0
+    adapters = n_ad * (2 + 4 + OPT_BYTES_PER_PARAM) if row.rank else 0
     acts = _stored_act_values(cfg) * act_factor * row.act_bits / 8
     grads = _stored_act_values(cfg) / cfg.n_layers * row.grad_bits / 8 * 2
     runtime = 0.75 * GB                      # cuda/xla context + code
@@ -162,6 +197,10 @@ def run(print_csv=True):
                f"model={1 - g6[1] / q[1]:.1%} paper={1 - 5.97 / 10.73:.1%}")
     # realized packed buffers (measured device nbytes, not analytic)
     for name, nbytes, derived in realized_packed_rows():
+        out.append(f"{name},{float(nbytes):.1f},{derived}")
+    # realized packed optimizer state (AdamW8bit moments on the GSE
+    # substrate — the optimizer row of the bits/value budget)
+    for name, nbytes, derived in realized_optimizer_rows():
         out.append(f"{name},{float(nbytes):.1f},{derived}")
     if print_csv:
         print("\n".join(out))

@@ -21,7 +21,9 @@ Packed GSE support (two flavors):
   round-trip losslessly — the pytree flattens to its uint32 word arrays
   (``.../mantissa_words``, ``.../exponent_words``) and ``restore`` rebuilds
   against the ``like`` structure. Checkpoint bytes on disk equal the live
-  packed bytes.
+  packed bytes. This is also how the packed AdamW moments
+  (``repro.optim.adamw8bit.PackedMoment`` wrapping a packed tensor) travel:
+  optimizer state checkpoints at b-bit wire size and resumes bit-exactly.
 * ``save(..., gse_bits=b)`` quantizes eligible float leaves to GSE and
   stores the packed words (b + 5/group bits/value on disk instead of 32).
   This is a **lossy** serving/deployment snapshot — restore transparently
@@ -41,8 +43,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.gse import (DEFAULT_GROUP, PackedGSETensor, gse_pack,
-                            gse_quantize)
+from repro.core.gse import DEFAULT_GROUP, PackedGSETensor
+from repro.kernels.ops import gse_quantize_pack
 
 
 def _flatten(tree) -> dict:
@@ -93,8 +95,11 @@ class CheckpointManager:
                     and jnp.issubdtype(arr.dtype, jnp.floating)
                     and arr.size >= gse_min_size
                     and arr.shape[-1] % gse_group == 0):
-                p = gse_pack(gse_quantize(
-                    jnp.asarray(arr, jnp.float32), gse_bits, gse_group))
+                # fused quantize+pack kernel: fp leaf -> b-bit words in one
+                # pass (no int8 intermediate), identical wire bytes to the
+                # old quantize-then-pack dispatch pair
+                p = gse_quantize_pack(
+                    jnp.asarray(arr, jnp.float32), gse_bits, gse_group)
                 arrays[key + "#gsem"] = np.asarray(p.mantissa_words)
                 arrays[key + "#gsee"] = np.asarray(p.exponent_words)
                 leaf_meta[key] = {"shape": list(arr.shape),

@@ -12,7 +12,7 @@ trainer. Rules (DESIGN §5):
   MoE experts     (L, E, d, f)      -> (-, experts, w_embed, -)
   LoRA A          (L, in, r)        -> (-, w_embed, -)
   LoRA B          (L, r, out)       -> (-, -, ff)
-  optimizer moments (flat)          -> (data,)               # ZeRO-1 style
+  optimizer moments (packed flat)   -> (opt_state rule)      # ZeRO-1 style
   everything else                   -> replicated
 
 ``w_embed`` is None by default (pure TP) and ("data",) under the FSDP rules
@@ -108,11 +108,20 @@ def infer_param_shardings(tree: Any, mesh: Mesh, rules: ShardingRules):
 
 
 def opt_state_pspecs(opt_state, mesh: Mesh, rules: ShardingRules):
-    """ZeRO-1-ish: flat int8 moments and their block scales shard over data
-    when divisible."""
-    def one(leaf):
+    """ZeRO-1-ish placement for the packed AdamW state.
+
+    Moments are flat word-planar uint32 streams (``PackedMoment`` wrapping
+    a ``PackedGSETensor`` — bit-planar chunks of 32 values, each word one
+    self-contained plane): the big ``mantissa_words`` streams shard over
+    the ``opt_state`` rule axis when the word count divides; the tiny
+    ``exponent_words`` streams and the step scalar replicate. Any
+    word-aligned split is a valid storage sharding — consumers unpack
+    locally after the gather XLA inserts."""
+    def one(path, leaf):
         shape = getattr(leaf, "shape", ())
-        if len(shape) == 1 and shape[0] > 0:
-            return resolve_pspec(shape, ("batch",), mesh, rules)
+        names = _path_names(path)
+        if (len(shape) == 1 and shape[0] > 0
+                and names[-1] == "mantissa_words"):
+            return resolve_pspec(shape, ("opt_state",), mesh, rules)
         return P()
-    return jax.tree.map(one, opt_state)
+    return jax.tree_util.tree_map_with_path(one, opt_state)

@@ -49,16 +49,23 @@ class ShardingRules:
     lora_rank: AxisSpec = None
     # weight-only axes (FSDP-style sharding of replicated-in-TP weight dims)
     w_embed: AxisSpec = None
+    # flat packed optimizer-moment word streams (ZeRO-1-style placement).
+    # The streams are word-planar uint32 (bit-planar chunks of 32 values —
+    # repro.core.gse docstring): every uint32 word is self-contained (one
+    # bit-plane of one chunk), so any word-aligned 1-D split is valid
+    # storage sharding; the divisibility guard in resolve_pspec handles
+    # stream lengths that don't divide the data axis.
+    opt_state: AxisSpec = ("pod", "data")
 
     @classmethod
     def single_pod(cls):
-        return cls(batch=("data",))
+        return cls(batch=("data",), opt_state=("data",))
 
     @classmethod
     def fsdp(cls, multi_pod: bool = True):
         """Zero-3-ish: additionally shard weight d_model dims over data."""
-        return cls(batch=("pod", "data") if multi_pod else ("data",),
-                   w_embed=("data",))
+        dp = ("pod", "data") if multi_pod else ("data",)
+        return cls(batch=dp, w_embed=("data",), opt_state=dp)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -20,8 +20,16 @@ DEFAULT_BM = 256
 DEFAULT_BK = 512
 
 
-def _gse_quant_kernel(x_ref, m_ref, e_ref, *, bits: int, group: int):
-    x = x_ref[...].astype(jnp.float32)                    # (BM, BK)
+def quantize_tile(x: jax.Array, bits: int, group: int):
+    """(BM, BK) float tile -> (mantissa fp-valued (BM, BK), exponent fp
+    (BM, BK/G)): amax -> shared exponent (zero groups pinned to EXP_MIN)
+    -> clipped round-to-nearest-even mantissas.
+
+    The single definition of the on-chip quantize math — shared by this
+    kernel and the fused quantize+pack kernel, which both carry the
+    bit-exact parity contract vs ``repro.core.gse.gse_quantize``.
+    """
+    x = x.astype(jnp.float32)
     bm, bk = x.shape
     qmax = qmax_for_bits(bits)
     xg = x.reshape(bm, bk // group, group)
@@ -32,7 +40,12 @@ def _gse_quant_kernel(x_ref, m_ref, e_ref, *, bits: int, group: int):
     e = jnp.clip(e, EXP_MIN, EXP_MAX)
     scale = jnp.exp2(e)[..., None]                        # (BM, BK/G, 1)
     m = jnp.clip(jnp.round(xg / scale), -qmax, qmax)
-    m_ref[...] = m.reshape(bm, bk).astype(jnp.int8)
+    return m.reshape(bm, bk), e
+
+
+def _gse_quant_kernel(x_ref, m_ref, e_ref, *, bits: int, group: int):
+    m, e = quantize_tile(x_ref[...], bits, group)
+    m_ref[...] = m.astype(jnp.int8)
     e_ref[...] = e.astype(jnp.int8)
 
 

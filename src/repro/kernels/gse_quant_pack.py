@@ -1,0 +1,144 @@
+"""Pallas TPU kernel: **fused** GSE quantize + bit-planar pack.
+
+Previously the storage path was two dispatches — ``gse_quantize`` (find the
+shared group exponent, shift mantissas, write int8) followed by ``gse_pack``
+(bit-planar uint32 packing) — with the full int8 mantissa tensor living in
+HBM between them. This kernel computes group amax → shared exponent →
+mantissa → offset-binary bit planes in a single VMEM pass, so the int8
+working form never touches HBM: a tile goes fp32-in / b-bit-words-out.
+
+Outputs per (BM, BK) input tile:
+
+* mantissa words  (BM, BK//32 * bits) uint32 — the wire layout of
+  ``repro.core.gse`` (bit-planar chunks of 32, offset-binary ``m + qmax``),
+  identical word-for-word to ``gse_pack(gse_quantize(x))``.
+* exponents       (BM, BK//G) int8 — unbiased shared exponents. Exponents
+  are ~``1/group`` of the payload and their wire layout is a *flat* stream
+  over the whole tensor (chunk boundaries cross kernel tiles), so the 5-bit
+  exponent packing stays a host-side jnp epilogue
+  (:func:`repro.core.gse.pack_exponents`) on the kernel's int8 output.
+
+The quantize math is literally ``repro.kernels.gse_quant.quantize_tile``
+(the shared tile body of the non-fused kernel) and the pack math is
+literally ``repro.core.gse.pack_mantissas`` running on the VMEM-resident
+tile — one definition of each half, host and kernel, so the two kernels
+cannot silently diverge on the bit-exact parity contract.
+
+:func:`gse_quantize_pack` is the shape-polymorphic convenience used by the
+optimizer / KV-cache / checkpoint hot paths: it returns a
+:class:`~repro.core.gse.PackedGSETensor` and falls back to the two-dispatch
+jnp path for shapes the tiled kernel cannot take (last axis not a multiple
+of 32 — e.g. tiny KV head_dims — which use the flat ragged wire layout).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core.gse import (_PACK_CHUNK, PackedGSETensor, gse_pack,
+                            gse_quantize, pack_exponents, pack_mantissas)
+from repro.kernels.gse_quant import quantize_tile
+
+DEFAULT_BM = 256
+DEFAULT_BK = 512
+
+
+def _fit_block(dim: int, want: int, multiple: int = 1) -> int:
+    """Largest block ≤ ``want`` that divides ``dim`` and is a multiple of
+    ``multiple`` (callers guarantee ``dim % multiple == 0``)."""
+    b = min(want, dim)
+    b -= b % multiple
+    while b > multiple and dim % b != 0:
+        b -= multiple
+    return max(b, multiple) if dim % max(b, multiple) == 0 else dim
+
+
+def _gse_quant_pack_kernel(x_ref, w_ref, e_ref, *, bits: int, group: int):
+    m, e = quantize_tile(x_ref[...], bits, group)  # shared quantize math
+    # offset-binary bit-planar pack while the tile sits in VMEM — the int8
+    # mantissas never exist outside this kernel
+    w_ref[...] = pack_mantissas(m.astype(jnp.int8), bits)
+    e_ref[...] = e.astype(jnp.int8)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bits", "group", "bm", "bk",
+                                    "interpret"))
+def gse_quant_pack_pallas(x: jax.Array, bits: int = 6, group: int = 32,
+                          bm: int = DEFAULT_BM, bk: int = DEFAULT_BK,
+                          interpret: bool = True):
+    """x (M, K) float -> (mantissa words (M, K//32*bits) uint32,
+    exponents (M, K//group) int8), one fused VMEM pass.
+
+    K % 32 == 0 and K % group == 0 required (the per-row packed layout);
+    block shapes are fitted down to divisors of M/K automatically.
+    """
+    m_dim, k_dim = x.shape
+    assert k_dim % _PACK_CHUNK == 0 and k_dim % group == 0, (x.shape, group)
+    bm = _fit_block(m_dim, bm)
+    bk = _fit_block(k_dim, bk, multiple=int(np.lcm(_PACK_CHUNK, group)))
+    assert m_dim % bm == 0 and k_dim % bk == 0, (x.shape, bm, bk)
+    bkw = bk // _PACK_CHUNK * bits
+    grid = (m_dim // bm, k_dim // bk)
+    kernel = functools.partial(_gse_quant_pack_kernel, bits=bits,
+                               group=group)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, bk), lambda i, j: (i, j))],
+        out_specs=[
+            pl.BlockSpec((bm, bkw), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bk // group), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m_dim, k_dim // _PACK_CHUNK * bits),
+                                 jnp.uint32),
+            jax.ShapeDtypeStruct((m_dim, k_dim // group), jnp.int8),
+        ],
+        interpret=interpret,
+    )(x)
+
+
+# 1-D inputs re-tile to this row width when it divides them: (n/K0, K0)
+# grids beat a single (1, n) stripe once n is large.
+_FLAT_ROW = 256
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bits", "group", "interpret", "bm",
+                                    "bk"))
+def gse_quantize_pack(x: jax.Array, bits: int = 6, group: int = 32,
+                      interpret: bool = True, bm: int = DEFAULT_BM,
+                      bk: int = DEFAULT_BK) -> PackedGSETensor:
+    """Quantize + pack ``x`` (any shape, grouped along the last axis) into a
+    :class:`PackedGSETensor`, word-for-word identical to
+    ``gse_pack(gse_quantize(x, bits, group))``.
+
+    Shapes whose last axis is a multiple of 32 (and of ``group``) run the
+    fused Pallas kernel on a 2-D retiling; others (the flat ragged wire
+    layout) fall back to the two-dispatch jnp path.
+    """
+    k = x.shape[-1]
+    if k % group != 0:
+        raise ValueError(f"last dim {k} not divisible by group {group}")
+    if k % _PACK_CHUNK != 0:
+        return gse_pack(gse_quantize(x, bits, group))
+    if x.ndim == 1:
+        k0 = _FLAT_ROW if (k % _FLAT_ROW == 0 and _FLAT_ROW % group == 0
+                           and k > _FLAT_ROW) else k
+        x2 = x.reshape(-1, k0)
+    else:
+        x2 = x.reshape(-1, k)
+        k0 = k
+    words, exp = gse_quant_pack_pallas(x2, bits, group, bm=bm, bk=bk,
+                                       interpret=interpret)
+    # per-row chunks concatenate in flat chunk order, so reshaping the 2-D
+    # retiling back is exactly the wire layout of the original shape
+    words = words.reshape(*x.shape[:-1], k // _PACK_CHUNK * bits)
+    eshape = (*x.shape[:-1], k // group)
+    return PackedGSETensor(words, pack_exponents(exp.reshape(eshape)),
+                           bits, group, tuple(x.shape))

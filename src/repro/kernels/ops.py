@@ -14,6 +14,9 @@ import jax.numpy as jnp
 
 from repro.core.gse import PackedGSETensor, unpack_exponents
 from repro.kernels.gse_quant import gse_quantize_pallas
+from repro.kernels.gse_quant_pack import (gse_quant_pack_pallas,
+                                          gse_quantize_pack as
+                                          _gse_quantize_pack)
 from repro.kernels.gse_matmul import (gse_matmul_pallas,
                                       gse_matmul_packed_pallas)
 from repro.kernels.gse_unpack import gse_unpack_pallas
@@ -28,6 +31,21 @@ def gse_quantize(x, bits: int = 6, group: int = 32, **block_kw):
     """(M, K) -> (mantissa int8, exponent int8). Pads M/K to block shape."""
     return gse_quantize_pallas(x, bits, group, interpret=not _on_tpu(),
                                **block_kw)
+
+
+def gse_quant_pack(x, bits: int = 6, group: int = 32, **block_kw):
+    """Fused quantize+pack: (M, K) -> (mantissa words uint32, exponent
+    int8) in one VMEM pass — no int8 intermediate in HBM."""
+    return gse_quant_pack_pallas(x, bits, group, interpret=not _on_tpu(),
+                                 **block_kw)
+
+
+def gse_quantize_pack(x, bits: int = 6, group: int = 32,
+                      **block_kw) -> PackedGSETensor:
+    """Shape-polymorphic fused quantize+pack to a PackedGSETensor (kernel
+    when the last axis is 32-aligned, jnp fallback for ragged layouts)."""
+    return _gse_quantize_pack(x, bits, group, interpret=not _on_tpu(),
+                              **block_kw)
 
 
 def gse_unpack(words, bits: int, **block_kw):

@@ -44,6 +44,16 @@ def gse_matmul_ref(a_m, a_e, b_m, b_e, group: int = 32):
     return acc
 
 
+def gse_quant_pack_ref(x: jax.Array, bits: int = 6, group: int = 32):
+    """Oracle for gse_quant_pack_pallas: quantize-then-pack as two separate
+    dispatches (the pre-fusion path, int8 intermediate materialized).
+    Returns (mantissa words uint32 (M, K//32*bits), exponent int8 (M, K//G))
+    — must be bit-identical to the fused kernel for every bits in [2, 8]."""
+    from repro.core.gse import pack_mantissas
+    m, e = gse_quantize_ref(x, bits, group)
+    return pack_mantissas(m, bits), e
+
+
 def gse_unpack_ref(words, bits: int):
     """Oracle for gse_unpack_pallas: (M, K//32*bits) uint32 -> (M, K) int8
     via the jnp bit-plane unpack in repro.core.gse."""

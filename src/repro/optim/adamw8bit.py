@@ -1,52 +1,76 @@
-"""Block-wise 8-bit AdamW (Dettmers et al., ICLR'22) — the paper's optimizer
-("8-bits AdamW ... in bfloat16 precision", Sec. 3 Training Details).
+"""Block-wise low-bit AdamW (Dettmers et al., ICLR'22) — the paper's
+optimizer ("8-bits AdamW ... in bfloat16 precision", Sec. 3 Training
+Details) with its moments stored on the **packed GSE substrate**.
 
-Optimizer moments are stored as int8 with one fp32 absmax scale per block of
-256 values; master params stay fp32. We use linear absmax block quantization
-(Dettmers uses a dynamic-tree code; linear absmax is within noise for the
-adapter-scale states this framework trains and keeps the update jit-friendly
-— noted in DESIGN §8).
+Moment storage: each moment tensor is flattened, padded to a multiple of
+``BLOCK``, GSE-quantized along the flat axis (b-bit symmetric mantissas +
+one shared 5-bit exponent per ``group`` values) and held as a
+:class:`~repro.core.gse.PackedGSETensor` — real bit-planar uint32 words in
+HBM, ``b + 5/group`` bits per moment value, the same wire format as packed
+weights / KV / checkpoints. The second moment is stored in the **sqrt
+domain** (halves the dynamic range and puts the quantization error directly
+in the denominator's units — the cheap stand-in for Dettmers' dynamic
+code). Re-quantization on the update hot path runs the fused quantize+pack
+Pallas kernel (``repro.kernels.gse_quant_pack``): amax → exponent →
+mantissa → bit-planar words in one VMEM pass, no int8 intermediate in HBM.
 
-Only applied to *trainable* leaves (the LoRA adapters); frozen NF4 base
-weights carry no optimizer state, which is where the paper's ~50 % fine-tune
-memory saving comes from.
+``m_bits`` / ``v_bits`` are configurable per-moment (default 8, matching
+the paper's 8-bit optimizer accounting); master params stay fp32. Only
+*trainable* leaves (the LoRA adapters) carry state; frozen NF4 base weights
+carry none, which is where the paper's ~50 % fine-tune memory saving comes
+from.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-BLOCK = 256
+from repro.core.gse import (EXP_BITS, PackedGSETensor, qmax_for_bits)
+
+BLOCK = 256     # flat moments pad to this (rows of the kernel's 2-D tiling)
 
 
 def _pad_len(n: int) -> int:
     return (-n) % BLOCK
 
 
-def _q8(x: jax.Array, signed: bool = True):
-    """Blockwise absmax int8 quantization of a flat fp32 array."""
-    n = x.shape[0]
-    xp = jnp.pad(x, (0, _pad_len(n))).reshape(-1, BLOCK)
-    amax = jnp.max(jnp.abs(xp), axis=-1, keepdims=True)
-    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
-    q = jnp.clip(jnp.round(xp / scale), -127, 127).astype(jnp.int8)
-    return q.reshape(-1), scale[:, 0]
+@jax.tree_util.register_pytree_with_keys_class
+@dataclasses.dataclass(frozen=True)
+class PackedMoment:
+    """One optimizer moment in packed GSE storage.
 
+    ``packed`` holds the padded flat stream (shape ``(n + pad,)``); ``n``
+    (static) is the true value count, so diagnostics can report the logical
+    footprint with the BLOCK-padding tail excluded.
+    """
+    packed: PackedGSETensor
+    n: int
 
-def _dq8(q: jax.Array, scale: jax.Array, n: int):
-    xp = q.reshape(-1, BLOCK).astype(jnp.float32) * scale[:, None]
-    return xp.reshape(-1)[:n]
+    def tree_flatten_with_keys(self):
+        return (((jax.tree_util.GetAttrKey("packed"), self.packed),),
+                (self.n,))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], aux[0])
+
+    def values(self) -> jax.Array:
+        """Dequantized flat fp32 moment values, padding stripped."""
+        return self.packed.dequantize(jnp.float32)[: self.n]
+
+    def nbytes_logical(self) -> int:
+        """b-bit + shared-exponent bytes for the *unpadded* n values."""
+        g = self.packed.group_size
+        return (self.n * self.packed.bits + (-(-self.n // g)) * EXP_BITS
+                + 7) // 8
 
 
 class Adam8State(NamedTuple):
-    m_q: Any          # tree of int8
-    m_s: Any          # tree of fp32 block scales
-    v_q: Any
-    v_s: Any
+    m: Any          # tree of PackedMoment (b-bit first moment)
+    v: Any          # tree of PackedMoment (b-bit sqrt second moment)
     step: jax.Array
 
 
@@ -59,25 +83,58 @@ class AdamW8bit:
     weight_decay: float = 0.0
     warmup_steps: int = 100          # paper: linear warmup of 100 steps
     schedule: str = "constant"       # paper: constant LR
+    total_steps: int = 0             # cosine horizon (0 = constant)
+    m_bits: int = 8                  # first-moment mantissa bits
+    v_bits: int = 8                  # sqrt-second-moment mantissa bits
+    group: int = 32                  # values per shared 5-bit exponent
+
+    def __post_init__(self):
+        # fail at the misconfiguration site: moments are padded to BLOCK
+        # and grouped along the flat axis, so group must divide BLOCK (a
+        # bad group otherwise only surfaces deep in gse internals on the
+        # first values()/update call)
+        if self.group <= 0 or BLOCK % self.group != 0:
+            raise ValueError(
+                f"group must divide BLOCK={BLOCK}, got {self.group}")
+        qmax_for_bits(self.m_bits)       # validates 2 <= bits <= 8
+        qmax_for_bits(self.v_bits)
+
+    def _quantize_moment(self, x: jax.Array, bits: int) -> PackedMoment:
+        """Flat fp32 (n,) -> PackedMoment via the fused quantize+pack
+        kernel (pads to BLOCK; the pad tail quantizes to exact zeros)."""
+        from repro.kernels.ops import gse_quantize_pack
+        n = x.shape[0]
+        xp = jnp.pad(x, (0, _pad_len(n)))
+        return PackedMoment(gse_quantize_pack(xp, bits, self.group), n)
+
+    def _zero_moment(self, n: int, bits: int) -> PackedMoment:
+        """Packed all-zero moment, constructed directly: zero groups pin to
+        EXP_MIN (biased 0 -> zero exponent words) and mantissa 0 is
+        offset-binary ``qmax``, whose bit-planes are full/empty words."""
+        n_pad = n + _pad_len(n)
+        qmax = qmax_for_bits(bits)
+        plane = [jnp.uint32(0xFFFFFFFF if (qmax >> j) & 1 else 0)
+                 for j in range(bits)]
+        mw = jnp.tile(jnp.stack(plane), n_pad // 32)
+        ngroups = n_pad // self.group
+        ew = jnp.zeros(((-(-ngroups // 32)) * EXP_BITS,), jnp.uint32)
+        return PackedMoment(
+            PackedGSETensor(mw, ew, bits, self.group, (n_pad,)), n)
 
     def init(self, params) -> Adam8State:
-        def zq(p):
-            n = p.size + _pad_len(p.size)
-            return jnp.zeros((n,), jnp.int8)
-
-        def zs(p):
-            n = (p.size + _pad_len(p.size)) // BLOCK
-            return jnp.zeros((n,), jnp.float32)
-
         return Adam8State(
-            m_q=jax.tree.map(zq, params), m_s=jax.tree.map(zs, params),
-            v_q=jax.tree.map(zq, params), v_s=jax.tree.map(zs, params),
+            m=jax.tree.map(lambda p: self._zero_moment(p.size, self.m_bits),
+                           params),
+            v=jax.tree.map(lambda p: self._zero_moment(p.size, self.v_bits),
+                           params),
             step=jnp.zeros((), jnp.int32))
 
-    total_steps: int = 0             # cosine horizon (0 = constant)
-
     def current_lr(self, step):
-        warm = jnp.minimum(1.0, (step + 1) / max(self.warmup_steps, 1))
+        # ``update`` already advances step = state.step + 1 before calling;
+        # warmup therefore ramps 1/W, 2/W, ... and reaches full LR exactly
+        # at step == warmup_steps (the old (step + 1)/W skipped the first
+        # fraction and saturated one step early).
+        warm = jnp.minimum(1.0, step / max(self.warmup_steps, 1))
         lr = self.lr * warm
         if self.schedule == "cosine" and self.total_steps:
             prog = jnp.clip((step - self.warmup_steps)
@@ -93,46 +150,41 @@ class AdamW8bit:
         b1c = 1.0 - self.b1 ** step.astype(jnp.float32)
         b2c = 1.0 - self.b2 ** step.astype(jnp.float32)
 
-        def upd(p, g, mq, ms, vq, vs):
-            n = p.size
+        def upd(p, g, mom, vom):
             gf = g.reshape(-1).astype(jnp.float32)
-            m = _dq8(mq, ms, n) * self.b1 + (1 - self.b1) * gf
-            # v is stored as sqrt(v) (8-bit linear absmax in the sqrt domain
-            # — the cheap stand-in for Dettmers' dynamic code; halves the
-            # dynamic range and puts the quantization error directly in the
-            # denominator's units)
-            v = _dq8(vq, vs, n) ** 2 * self.b2 + (1 - self.b2) * gf * gf
+            m = mom.values() * self.b1 + (1 - self.b1) * gf
+            # v is stored as sqrt(v) (packed GSE in the sqrt domain)
+            v = vom.values() ** 2 * self.b2 + (1 - self.b2) * gf * gf
             mhat = m / b1c
             vhat = v / b2c
             pf = p.reshape(-1).astype(jnp.float32)
             newp = pf - lr * (mhat / (jnp.sqrt(vhat) + self.eps)
                               + self.weight_decay * pf)
-            mq2, ms2 = _q8(m)
-            vq2, vs2 = _q8(jnp.sqrt(v))
-            return (newp.reshape(p.shape).astype(p.dtype), mq2, ms2, vq2, vs2)
+            return (newp.reshape(p.shape).astype(p.dtype),
+                    self._quantize_moment(m, self.m_bits),
+                    self._quantize_moment(jnp.sqrt(v), self.v_bits))
 
         flat_p, treedef = jax.tree.flatten(params)
         flat_g = treedef.flatten_up_to(grads)
-        flat_mq = treedef.flatten_up_to(state.m_q)
-        flat_ms = treedef.flatten_up_to(state.m_s)
-        flat_vq = treedef.flatten_up_to(state.v_q)
-        flat_vs = treedef.flatten_up_to(state.v_s)
+        is_mom = lambda x: isinstance(x, PackedMoment)
+        flat_m = jax.tree.flatten(state.m, is_leaf=is_mom)[0]
+        flat_v = jax.tree.flatten(state.v, is_leaf=is_mom)[0]
         outs = [upd(*args) for args in
-                zip(flat_p, flat_g, flat_mq, flat_ms, flat_vq, flat_vs)]
+                zip(flat_p, flat_g, flat_m, flat_v)]
         newp = treedef.unflatten([o[0] for o in outs])
         new_state = Adam8State(
-            m_q=treedef.unflatten([o[1] for o in outs]),
-            m_s=treedef.unflatten([o[2] for o in outs]),
-            v_q=treedef.unflatten([o[3] for o in outs]),
-            v_s=treedef.unflatten([o[4] for o in outs]),
+            m=treedef.unflatten([o[1] for o in outs]),
+            v=treedef.unflatten([o[2] for o in outs]),
             step=step)
         return newp, new_state
 
     def state_nbytes(self, state: Adam8State) -> int:
-        """True 8-bit state footprint (diagnostics for the memory model)."""
-        tot = 0
-        for leaf in jax.tree.leaves((state.m_q, state.v_q)):
-            tot += leaf.size
-        for leaf in jax.tree.leaves((state.m_s, state.v_s)):
-            tot += leaf.size * 4
-        return tot
+        """Logical packed state footprint in bytes: b-bit mantissas plus
+        amortized shared exponents for exactly ``param.size`` values per
+        moment — BLOCK-padding tail bytes excluded, so the figure matches
+        the analytic ``(bits + 5/group) / 8`` bytes/value accounting used
+        by ``benchmarks/memory_model.py``."""
+        moments = jax.tree.leaves(
+            (state.m, state.v),
+            is_leaf=lambda x: isinstance(x, PackedMoment))
+        return sum(mom.nbytes_logical() for mom in moments)

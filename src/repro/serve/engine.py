@@ -31,9 +31,10 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core.gse import (DEFAULT_GROUP, PackedGSETensor, gse_pack,
-                            gse_quantize)
+from repro.core.gse import DEFAULT_GROUP, PackedGSETensor
 from repro.core.policy import QuantPolicy
+from repro.core.qcd import effective_group_size
+from repro.kernels.ops import gse_quantize_pack
 from repro.models.config import ModelConfig
 from repro.models import model as M
 from repro.models import ssm as S
@@ -108,15 +109,21 @@ def cache_shardings(cfg: ModelConfig, batch: int, max_len: int, mesh, rules,
 
 
 def _kv_pack_group(head_dim: int, group: int) -> int:
-    """Largest usable group size for quantizing along the head_dim axis."""
-    return group if head_dim % group == 0 else head_dim
+    """Largest usable group size for quantizing along the head_dim axis:
+    the largest divisor of head_dim that is <= group. (The old fallback of
+    one shared exponent per whole head — ``group = head_dim`` — silently
+    lost precision on non-divisible head_dims.)"""
+    return effective_group_size(head_dim, group)
 
 
 @partial(jax.jit, static_argnames=("bits", "group"))
 def pack_decode_cache(cache, bits: int = 8, group: int = DEFAULT_GROUP):
     """GSE-quantize + bit-pack the attention k/v (and cross k/v) leaves.
 
-    Quantization runs along the trailing head_dim axis. Index, SSM state
+    Quantization runs along the trailing head_dim axis via the fused
+    quantize+pack kernel (``repro.kernels.gse_quant_pack``) — fp values go
+    to b-bit words in one pass, no int8 intermediate; ragged head_dims take
+    the jnp fallback inside :func:`gse_quantize_pack`. Index, SSM state
     and conv buffers pass through untouched (they are tiny or fp-sensitive).
     Returns a cache dict whose packed leaves are PackedGSETensor pytrees;
     their ``.nbytes`` is the realized b-bit footprint.
@@ -126,7 +133,7 @@ def pack_decode_cache(cache, bits: int = 8, group: int = DEFAULT_GROUP):
         if key in cache:
             x = cache[key]
             g = _kv_pack_group(x.shape[-1], group)
-            out[key] = gse_pack(gse_quantize(x, bits, g))
+            out[key] = gse_quantize_pack(x, bits, g)
     return out
 
 

@@ -53,6 +53,12 @@ class TrainingRunner:
         self.mesh = mesh
         self.frozen, self.train = frozen, train
         self.opt_state = opt.init(train)
+        # logical packed moment footprint (b + 5/group bits per value,
+        # BLOCK padding excluded) — the quantity memory_model.py credits
+        self.opt_state_nbytes = opt.state_nbytes(self.opt_state)
+        log.info("optimizer state: %d packed bytes "
+                 "(m_bits=%d v_bits=%d group=%d)",
+                 self.opt_state_nbytes, opt.m_bits, opt.v_bits, opt.group)
         n_pods = mesh.shape.get("pod", 1) if mesh else 1
         self.residuals = init_residuals(train, n_pods) \
             if tcfg.compress_pod_grads else jax.tree.map(
@@ -95,7 +101,8 @@ class TrainingRunner:
                        {"train": self.train, "opt": self.opt_state,
                         "residuals": self.residuals},
                        metadata={"data_seed": self.data_cfg.seed,
-                                 "policy": self.policy.label()})
+                                 "policy": self.policy.label(),
+                                 "opt_state_nbytes": self.opt_state_nbytes})
 
     # ---- main loop --------------------------------------------------------
     def run(self, until: Optional[int] = None,

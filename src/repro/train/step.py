@@ -1,9 +1,15 @@
 """Training step: masked LM loss, microbatched gradient accumulation,
-optional GSE-compressed cross-pod gradient sync, 8-bit AdamW update.
+optional GSE-compressed cross-pod gradient sync, low-bit AdamW update with
+**packed** GSE moments.
 
 ``train_step`` is the function the train_* dry-run cells lower: it takes
 (train_params, opt_state, residuals, batch) and returns updated state +
-metrics, with every GEMM inside running the paper's QCD pipeline.
+metrics, with every GEMM inside running the paper's QCD pipeline. The
+``opt_state`` threaded through (and donated by the runner / dry-run jits)
+is an :class:`~repro.optim.adamw8bit.Adam8State` whose moment leaves are
+``PackedMoment`` pytrees — flat uint32 word streams in HBM at
+``b + 5/group`` bits per moment value; the update re-quantizes them through
+the fused quantize+pack Pallas kernel each step.
 """
 from __future__ import annotations
 
@@ -141,6 +147,8 @@ def make_train_step(cfg: ModelConfig, policy: QuantPolicy, opt: AdamW8bit,
             loss, aux, grads = _grads(train, frozen, batch)
         grads, gnorm = clip_by_global_norm(grads, tcfg.max_grad_norm)
         train, opt_state = opt.update(grads, opt_state, train)
+        # opt_state.step is already the post-update step, so this is the
+        # exact LR the update above applied (update advances step first).
         metrics = {"loss": loss, "grad_norm": gnorm,
                    "lr": opt.current_lr(opt_state.step)}
         return train, opt_state, residuals, metrics

@@ -57,6 +57,65 @@ def test_greedy_generate(arch):
     assert bool(jnp.all((out >= 0) & (out < cfg.padded_vocab)))
 
 
+@pytest.mark.parametrize("kv_quant_bits", [None, 6])
+def test_greedy_generate_max_new_1(kv_quant_bits):
+    """Degenerate decode: max_new=1 runs a zero-length scan — the driver
+    must still return a (B, 1) token array on both the packed and
+    unpacked cache paths."""
+    cfg, fz, tr, prompt, extra = _setup("granite_3_2b")
+    out = E.greedy_generate(fz, tr, prompt, cfg, FP, max_new=1,
+                            kv_quant_bits=kv_quant_bits)
+    assert out.shape == (2, 1)
+    assert bool(jnp.all((out >= 0) & (out < cfg.padded_vocab)))
+    # matches the first token of a longer decode
+    ref = E.greedy_generate(fz, tr, prompt, cfg, FP, max_new=3)
+    np.testing.assert_array_equal(np.asarray(out[:, 0]),
+                                  np.asarray(ref[:, 0]))
+
+
+def test_packed_cache_repack_is_bit_identical_mid_scan():
+    """pack -> unpack -> pack of an already-GSE-valued cache reproduces
+    the packed words exactly — the invariant that lets greedy_generate
+    carry the cache packed through the decode scan without accumulating
+    error on old positions."""
+    cfg, fz, tr, prompt, extra = _setup("granite_3_2b")
+    cache = E.init_decode_cache(cfg, 2, 16)
+    _, cache = E.prefill(fz, tr, {"tokens": prompt}, cache, cfg, FP)
+    p1 = E.pack_decode_cache(cache, bits=6)
+    p2 = E.pack_decode_cache(E.unpack_decode_cache(p1), bits=6)
+    for key in ("k", "v"):
+        np.testing.assert_array_equal(np.asarray(p1[key].mantissa_words),
+                                      np.asarray(p2[key].mantissa_words))
+        np.testing.assert_array_equal(np.asarray(p1[key].exponent_words),
+                                      np.asarray(p2[key].exponent_words))
+
+
+def test_kv_pack_group_non_divisible_head_dim():
+    """head_dim % group != 0 falls back to the largest divisor <= group
+    (one exponent per 20 values for head_dim 40), not one exponent per
+    whole head — strictly finer grouping, strictly less error."""
+    assert E._kv_pack_group(40, 32) == 20
+    assert E._kv_pack_group(64, 32) == 32
+    assert E._kv_pack_group(8, 32) == 8
+    key = jax.random.PRNGKey(0)
+    cache = {"k": jax.random.normal(key, (1, 2, 4, 2, 40)) * 0.5,
+             "v": jax.random.normal(jax.random.PRNGKey(1),
+                                    (1, 2, 4, 2, 40)) * 0.5,
+             "index": jnp.zeros((1,), jnp.int32)}
+    packed = E.pack_decode_cache(cache, bits=6)
+    assert packed["k"].group_size == 20
+    back = E.unpack_decode_cache(packed)
+    err = float(jnp.max(jnp.abs(back["k"] - cache["k"])))
+    # per-20-value exponents: error bounded by half an ulp of each group
+    # scale; the old whole-head fallback is strictly coarser
+    from repro.core.gse import gse_fake_quant
+    np.testing.assert_array_equal(
+        np.asarray(back["k"]),
+        np.asarray(gse_fake_quant(cache["k"], 6, 20).astype(jnp.bfloat16)
+                   .astype(jnp.float32)))
+    assert err < 0.1
+
+
 def test_cache_index_advances():
     cfg, fz, tr, prompt, extra = _setup("granite_3_2b")
     cache = E.init_decode_cache(cfg, 2, 16)

@@ -9,9 +9,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core.gse import PackedGSETensor, gse_bits_per_value
 from repro.data.pipeline import (DataConfig, PrefetchingLoader,
                                  batch_at_step)
-from repro.optim.adamw8bit import AdamW8bit
+from repro.optim.adamw8bit import AdamW8bit, PackedMoment
 from repro.checkpoint.manager import CheckpointManager
 from repro.distributed.sharding import (ShardingRules, resolve_pspec,
                                         shard_map_compat, strip_axes)
@@ -92,12 +93,111 @@ def test_adamw8bit_close_to_fp32_adam():
     assert err < 0.15, err
 
 
-def test_adamw8bit_state_is_int8():
+def test_adamw8bit_state_is_packed():
+    """Moments live as PackedGSETensor word streams (b-bit mantissas +
+    shared 5-bit exponents), not int8-per-value."""
     opt = AdamW8bit()
     params = {"a": jnp.ones((1000,))}
     st_ = opt.init(params)
-    assert st_.m_q["a"].dtype == jnp.int8
+    assert isinstance(st_.m["a"], PackedMoment)
+    assert st_.m["a"].packed.mantissa_words.dtype == jnp.uint32
+    assert st_.m["a"].packed.bits == 8
+    assert st_.v["a"].packed.bits == 8
     assert opt.state_nbytes(st_) < 1000 * 4   # far below fp32 moments
+
+
+def test_adamw8bit_init_matches_quantize_pack_of_zeros():
+    """The direct zero-state construction is word-identical to running the
+    fused quantize+pack kernel on an all-zero moment."""
+    from repro.kernels.ops import gse_quantize_pack
+    opt = AdamW8bit(m_bits=5, group=32)
+    st_ = opt.init({"a": jnp.ones((300,))})      # pads 300 -> 512
+    ref = gse_quantize_pack(jnp.zeros((512,)), 5, 32)
+    np.testing.assert_array_equal(
+        np.asarray(st_.m["a"].packed.mantissa_words),
+        np.asarray(ref.mantissa_words))
+    np.testing.assert_array_equal(
+        np.asarray(st_.m["a"].packed.exponent_words),
+        np.asarray(ref.exponent_words))
+    assert st_.m["a"].n == 300
+    np.testing.assert_array_equal(np.asarray(st_.m["a"].values()),
+                                  np.zeros(300, np.float32))
+
+
+@pytest.mark.parametrize("bits", [2, 5, 8])
+def test_adamw8bit_state_nbytes_analytic_4096(bits):
+    """Acceptance: on a (4096, 4096)-param adapter tree the reported state
+    footprint matches 2 * (b + 5/32) / 8 bytes/param within 1% (here:
+    exactly — padding bytes are excluded by construction)."""
+    n = 4096 * 4096
+    opt = AdamW8bit(m_bits=bits, v_bits=bits, group=32)
+    st_ = opt.init({"w": jnp.zeros((4096, 4096))})
+    analytic = 2 * gse_bits_per_value(bits, 32) / 8 * n
+    assert abs(opt.state_nbytes(st_) / analytic - 1) < 0.01
+    assert opt.state_nbytes(st_) == int(analytic)
+
+
+def test_adamw8bit_state_nbytes_excludes_padding():
+    """Footprint tracks param.size exactly, not the BLOCK-padded
+    allocation (n=1000 pads to 1024 internally)."""
+    opt = AdamW8bit()                            # b=8, group=32
+    st_ = opt.init({"a": jnp.ones((1000,))})
+    per_moment = (1000 * 8 + (-(-1000 // 32)) * 5 + 7) // 8
+    assert opt.state_nbytes(st_) == 2 * per_moment
+    # the padded device allocation is strictly larger
+    dev = sum(l.size * 4 for l in jax.tree.leaves((st_.m, st_.v)))
+    assert dev > opt.state_nbytes(st_)
+
+
+def test_adamw8bit_per_moment_bits():
+    """b is configurable per-moment; update keeps running and nbytes
+    reflects the mixed widths."""
+    opt = AdamW8bit(lr=0.01, warmup_steps=1, m_bits=4, v_bits=8)
+    params = {"w": jnp.linspace(-1, 1, 128)}
+    st_ = opt.init(params)
+    assert st_.m["w"].packed.bits == 4 and st_.v["w"].packed.bits == 8
+    g = {"w": jnp.ones((128,))}
+    params, st_ = opt.update(g, st_, params)
+    assert st_.m["w"].packed.bits == 4 and st_.v["w"].packed.bits == 8
+    exp = ((128 * 4 + 4 * 5 + 7) // 8) + ((128 * 8 + 4 * 5 + 7) // 8)
+    assert opt.state_nbytes(st_) == exp
+
+
+def test_adamw8bit_warmup_reaches_full_lr_on_time():
+    """update advances step before current_lr, so warmup ramps 1/W..W/W:
+    the first update uses lr/W (not 2/W) and full LR lands exactly at
+    step == warmup_steps (the old code saturated one step early)."""
+    opt = AdamW8bit(lr=1.0, warmup_steps=4)
+    lrs = [float(opt.current_lr(jnp.int32(s))) for s in (1, 2, 3, 4, 5)]
+    np.testing.assert_allclose(lrs, [0.25, 0.5, 0.75, 1.0, 1.0])
+    # end-to-end: the metrics lr of the first real update is lr/W
+    params = {"w": jnp.ones((8,))}
+    st_ = opt.init(params)
+    _, st_ = opt.update({"w": jnp.ones((8,))}, st_, params)
+    np.testing.assert_allclose(float(opt.current_lr(st_.step)), 0.25)
+
+
+def test_adamw8bit_packed_state_checkpoint_roundtrip(tmp_path):
+    """Optimizer state checkpoints as packed words and restores
+    bit-exactly (the training-resume path for packed moments)."""
+    opt = AdamW8bit(lr=0.05, warmup_steps=1)
+    params = {"w": jnp.linspace(-1, 1, 200)}
+    st_ = opt.init(params)
+    params, st_ = opt.update({"w": jnp.ones((200,))}, st_, params)
+    mgr = CheckpointManager(str(tmp_path), keep=1)
+    mgr.save(1, {"opt": st_})
+    got, _, _ = mgr.restore(1, {"opt": st_})
+    ropt = got["opt"]
+    assert isinstance(ropt.m["w"], PackedMoment)
+    assert ropt.m["w"].n == 200
+    for a, b in ((ropt.m["w"], st_.m["w"]), (ropt.v["w"], st_.v["w"])):
+        np.testing.assert_array_equal(
+            np.asarray(a.packed.mantissa_words),
+            np.asarray(b.packed.mantissa_words))
+        np.testing.assert_array_equal(
+            np.asarray(a.packed.exponent_words),
+            np.asarray(b.packed.exponent_words))
+    assert int(ropt.step) == 1
 
 
 # ---------------- checkpoint ------------------------------------------------
@@ -158,6 +258,26 @@ def test_resolve_pspec_no_axis_reuse():
     spec = resolve_pspec((8, 16, 64), ("batch", "heads", "ff"), mesh, rules)
     # heads claims model first; ff must then replicate
     assert spec[1] == "model" and spec[2] is None
+
+
+def test_opt_state_pspecs_shard_word_streams():
+    """ZeRO-1 placement of the packed moments: the flat word-planar
+    mantissa streams shard over the opt_state rule axis (when the word
+    count divides); exponent words and the step scalar replicate."""
+    from repro.distributed.params import opt_state_pspecs
+    opt = AdamW8bit()
+    st_ = opt.init({"w": jnp.ones((1024,))})     # 256 mantissa words
+    mesh = _FakeMesh({"data": 4, "model": 8})
+    from jax.sharding import PartitionSpec as P
+    specs = opt_state_pspecs(st_, mesh, ShardingRules.single_pod())
+    assert specs.m["w"].packed.mantissa_words == P(("data",))
+    assert specs.m["w"].packed.exponent_words == P()
+    assert specs.step == P()
+    # non-divisible stream -> divisibility guard replicates
+    st2 = opt.init({"w": jnp.ones((96,))})       # 256-pad -> 64 words
+    mesh3 = _FakeMesh({"data": 3})
+    specs2 = opt_state_pspecs(st2, mesh3, ShardingRules.single_pod())
+    assert specs2.m["w"].packed.mantissa_words in (P(), P(None))
 
 
 def test_strip_axes():
