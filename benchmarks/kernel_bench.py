@@ -113,6 +113,65 @@ def run(smoke: bool = False):
         f"correctness-path-only hbm_intermediate_bytes=0 "
         f"two_dispatch_us={us2d:.0f}"))
 
+    # packed-KV decode step: fused tile-local attention + in-place append
+    # vs the legacy round-trip (unpack the WHOLE cache, attend, re-pack).
+    # Shapes model one decode step against a warm cache; both paths run
+    # the jnp/CPU code the serving engine executes here. The fused row's
+    # transient unpacked KV is one (B, bk, Kv, D) fp32 tile; the
+    # round-trip's is the entire cache (reported as bytes).
+    from repro.kernels.flash_attention_packed import (
+        dequant_kv_rows, flash_attention_packed_jnp, quant_pack_kv_rows)
+    bsz, s_max, kvh, hd, heads = (1, 256, 2, 64, 4) if smoke else \
+        (1, 1024, 4, 128, 16)
+    bk = 128 if smoke else 512
+    kb = 8
+    kc = jax.random.normal(jax.random.PRNGKey(20), (bsz, s_max, kvh, hd))
+    vc = jax.random.normal(jax.random.PRNGKey(21), (bsz, s_max, kvh, hd))
+    kwp, kep = quant_pack_kv_rows(kc, kb)
+    vwp, vep = quant_pack_kv_rows(vc, kb)
+    qd = jax.random.normal(jax.random.PRNGKey(22), (bsz, 1, heads, hd))
+    newk = jax.random.normal(jax.random.PRNGKey(23), (bsz, 1, kvh, hd))
+    newv = jax.random.normal(jax.random.PRNGKey(24), (bsz, 1, kvh, hd))
+    off = s_max - 1
+
+    @jax.jit
+    def fused_step(q, kw, ke, vw, ve, nk, nv):
+        nw, ne = quant_pack_kv_rows(nk, kb)          # one token's rows
+        kw = jax.lax.dynamic_update_slice(kw, nw, (0, off, 0, 0))
+        ke = jax.lax.dynamic_update_slice(ke, ne, (0, off, 0, 0))
+        nw, ne = quant_pack_kv_rows(nv, kb)
+        vw = jax.lax.dynamic_update_slice(vw, nw, (0, off, 0, 0))
+        ve = jax.lax.dynamic_update_slice(ve, ne, (0, off, 0, 0))
+        return flash_attention_packed_jnp(q, kw, ke, vw, ve, causal=True,
+                                          q_offset=off, k_chunk=bk)
+
+    @jax.jit
+    def roundtrip_step(q, kw, ke, vw, ve, nk, nv):
+        kfull = dequant_kv_rows(kw, ke, hd, jnp.bfloat16)   # WHOLE cache
+        vfull = dequant_kv_rows(vw, ve, hd, jnp.bfloat16)
+        kfull = jax.lax.dynamic_update_slice(
+            kfull, nk.astype(kfull.dtype), (0, off, 0, 0))
+        vfull = jax.lax.dynamic_update_slice(
+            vfull, nv.astype(vfull.dtype), (0, off, 0, 0))
+        o = direct_attention(q, kfull, vfull,
+                             MaskInfo(q_offset=off, causal=True))
+        kw2, _ = quant_pack_kv_rows(kfull.astype(jnp.float32), kb)  # re-pack
+        vw2, _ = quant_pack_kv_rows(vfull.astype(jnp.float32), kb)
+        return o, kw2, vw2
+
+    usf = _time(fused_step, qd, kwp, kep, vwp, vep, newk, newv, iters=5)
+    usr = _time(roundtrip_step, qd, kwp, kep, vwp, vep, newk, newv, iters=5)
+    cache_bytes = 2 * (kwp.nbytes + kep.nbytes)
+    tile_bytes = 2 * bsz * bk * kvh * hd * 4
+    full_bytes = 2 * kc.astype(jnp.bfloat16).nbytes
+    rows.append(csv_row(
+        f"kernel/packed_kv_decode_fused_s{s_max}_b{kb}", usf,
+        f"roundtrip_us={usr:.0f} speedup={usr / usf:.2f} "
+        f"packed_bytes={cache_bytes} transient_unpacked={tile_bytes}"))
+    rows.append(csv_row(
+        f"kernel/packed_kv_decode_roundtrip_s{s_max}_b{kb}", usr,
+        f"transient_unpacked={full_bytes}"))
+
     # fused packed-dequant matmul, interpret mode (correctness path)
     xa = jax.random.normal(key, (128, 512))
     wq = gq(jax.random.normal(jax.random.PRNGKey(9), (256, 512)) * 0.05,

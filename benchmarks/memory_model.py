@@ -86,6 +86,46 @@ def realized_optimizer_rows(shape=(4096, 4096), bits=(5, 8), group=32):
     return rows
 
 
+def realized_packed_kv_rows(shape=(4, 1, 2048, 4, 128), bits=(4, 8),
+                            group=32, tile=512):
+    """Measured (not analytic) packed decode-cache footprint: planar-pack a
+    real (L, B, S, Kv, D) KV cache into the row-planar word/exponent planes
+    the in-place packed decode carries, and report live ``nbytes`` vs the
+    bf16 cache and the analytic ``b * ceil(D/32)*32/D + 8/g`` bits/value.
+
+    ``peak_live`` is the decode-step claim: the packed planes plus ONE
+    dequantized (B, tile, Kv, D) fp32 attention tile — the only unpacked
+    KV bytes that ever exist under the fused kernel (per dequantized
+    operand; K and V tiles are live together, hence the 2x). The old
+    round-trip path's peak was packed + the ENTIRE cache unpacked.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.core.qcd import effective_group_size
+    from repro.kernels import ops
+
+    l, b, s, kv, d = shape
+    g = effective_group_size(d, group)
+    rows = []
+    for bb in bits:
+        k = jax.random.normal(jax.random.PRNGKey(0), shape) * 0.5
+        words, exps = ops.quant_pack_kv_rows(k, bb, g)
+        jax.block_until_ready(words)
+        packed = 2 * (words.nbytes + exps.nbytes)          # k and v planes
+        bf16 = 2 * k.astype(jnp.bfloat16).nbytes
+        n = 2 * k.size
+        analytic = (bb * (-(-d // 32) * 32) / d + 8 / g) / 8 * n
+        tile_bytes = 2 * b * min(tile, s) * kv * d * 4     # k + v fp32 tile
+        rows.append((f"memory_model/realized_packed_kv/b{bb}",
+                     packed,
+                     f"bf16={bf16} ratio_vs_bf16={packed / bf16:.3f} "
+                     f"analytic={analytic:.0f} "
+                     f"ratio_vs_analytic={packed / analytic:.4f} "
+                     f"peak_live_fused={packed + tile_bytes} "
+                     f"peak_live_roundtrip={packed + bf16}"))
+    return rows
+
+
 @dataclasses.dataclass
 class MemRow:
     label: str
@@ -201,6 +241,10 @@ def run(print_csv=True):
     # realized packed optimizer state (AdamW8bit moments on the GSE
     # substrate — the optimizer row of the bits/value budget)
     for name, nbytes, derived in realized_optimizer_rows():
+        out.append(f"{name},{float(nbytes):.1f},{derived}")
+    # realized packed decode KV cache (row-planar planes the in-place
+    # packed decode carries; peak-live = packed + one attention tile)
+    for name, nbytes, derived in realized_packed_kv_rows():
         out.append(f"{name},{float(nbytes):.1f},{derived}")
     if print_csv:
         print("\n".join(out))

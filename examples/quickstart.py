@@ -4,8 +4,12 @@ Builds a small GSQ-LoRA transformer (NF4 frozen base + GSE-quantized
 forward/backward), fine-tunes it on the synthetic instruction tasks for a
 few dozen steps, and prints the loss curve.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py [--steps N]
+
+``--steps`` shrinks the run (CI smokes it at a handful of steps).
 """
+import argparse
+
 import jax
 
 from repro.core.policy import QuantPolicy
@@ -17,7 +21,7 @@ from repro.train.runner import RunnerConfig, TrainingRunner
 from repro.train.step import TrainConfig
 
 
-def main():
+def main(total_steps: int = 60):
     # the paper's W4-A6-G6 configuration at LoRA rank 16
     policy = QuantPolicy.gsq(bits=6, rank=16)
     cfg = ModelConfig(name="quickstart", family="dense", n_layers=2,
@@ -31,7 +35,8 @@ def main():
                    task_mix=("copy", "reverse")),
         AdamW8bit(lr=5e-3, warmup_steps=10),
         TrainConfig(accum_steps=1),
-        RunnerConfig(total_steps=60, checkpoint_every=50,
+        RunnerConfig(total_steps=total_steps,
+                     checkpoint_every=min(50, total_steps),
                      checkpoint_dir="/tmp/gsq_quickstart", log_every=10),
         frozen=frozen, train=train)
     runner.install_signal_handlers()
@@ -42,4 +47,7 @@ def main():
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=60,
+                    help="training steps (CI smoke uses a small count)")
+    main(ap.parse_args().steps)

@@ -33,20 +33,37 @@ def main():
     for row in out[:2]:
         print("  ", list(map(int, row)))
 
-    # decode again with the KV cache held bit-packed between steps: live
-    # cache bytes drop to ~(b + 5/G)/16 of bf16 (observable, not analytic)
+    # decode again with the KV cache held bit-packed THROUGH attention:
+    # after prefill the cache converts once to row-planar packed planes,
+    # each step appends the new token's quantized rows in place and
+    # attends fused with tile-local dequant — the full unpacked cache is
+    # never materialized (docs/architecture.md, serve path)
     out_p = E.greedy_generate(frozen, train, prompt, cfg, policy,
                               max_new=16, kv_quant_bits=8)
+    # the legacy per-step unpack->attend->re-pack round-trip, for A/B
+    out_rt = E.greedy_generate(frozen, train, prompt, cfg, policy,
+                               max_new=16, kv_quant_bits=8,
+                               kv_inplace=False)
     cache = E.init_decode_cache(cfg, batch, 12 + 16)
     _, cache = E.prefill(frozen, train, {"tokens": prompt}, cache, cfg,
                          policy)
-    packed = E.pack_decode_cache(cache, bits=8)
+    planar = E.pack_decode_cache_planar(cache, bits=8)
+    flat = E.pack_decode_cache(cache, bits=8)
     raw = cache["k"].nbytes + cache["v"].nbytes
     agree = float(jnp.mean((out_p == out).astype(jnp.float32)))
+    agree_rt = float(jnp.mean((out_p == out_rt).astype(jnp.float32)))
     print(f"packed-KV greedy tokens matching bf16-KV: {agree:.0%} "
           f"(8-bit KV noise can flip near-tie argmaxes)")
-    print(f"kv cache bytes: bf16={raw} packed8={E.packed_cache_nbytes(packed)} "
-          f"({E.packed_cache_nbytes(packed) / raw:.1%})")
+    print(f"in-place packed decode matching round-trip: {agree_rt:.0%}")
+    print(f"kv cache bytes: bf16={raw} "
+          f"flat8={E.packed_cache_nbytes(flat)} "
+          f"({E.packed_cache_nbytes(flat) / raw:.1%}, at-rest snapshot) "
+          f"planar8={E.packed_cache_nbytes(planar)} (decode-resident; "
+          f"this toy head_dim={cfg.resolved_head_dim} pays full 32-chunk "
+          f"padding — real head dims are 32-aligned and land at "
+          f"~(b+8/g)/16, see docs/gse-format.md §4)")
+    print("peak live KV during decode: packed planes + one attention "
+          "tile (memory_model.py realized_packed_kv rows)")
 
 
 if __name__ == "__main__":

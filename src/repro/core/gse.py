@@ -152,11 +152,18 @@ def packed_words_per_axis(k: int, nbits: int) -> int:
     return -(-k // _PACK_CHUNK) * nbits
 
 
-def pack_unsigned(u: jax.Array, nbits: int) -> jax.Array:
+def pack_unsigned(u: jax.Array, nbits: int, *,
+                  int32_shifts: bool = False) -> jax.Array:
     """Bit-planar pack of the last axis of ``u`` (values must be < 2**nbits).
 
     (..., K) uint32 -> (..., ceil(K/32) * nbits) uint32. See the module
     docstring for the wire layout.
+
+    ``int32_shifts=True`` runs the identical shift/mask math on int32 words
+    (uint32 in/out via bitcast) for Mosaic targets that lack u32 shifts.
+    Two's-complement left shifts and wrapping adds preserve the exact bit
+    pattern (each lane contributes one distinct bit — no carries), so the
+    emitted words are bit-identical to the u32 path.
     """
     if not 1 <= nbits <= 16:
         raise ValueError(f"nbits must be in [1, 16], got {nbits}")
@@ -166,40 +173,56 @@ def pack_unsigned(u: jax.Array, nbits: int) -> jax.Array:
     if pad:
         u = jnp.pad(u, [(0, 0)] * (u.ndim - 1) + [(0, pad)])
     chunks = u.shape[-1] // _PACK_CHUNK
+    wd = jnp.int32 if int32_shifts else jnp.uint32
     ug = u.reshape(*u.shape[:-1], chunks, _PACK_CHUNK)
-    lanes = jnp.arange(_PACK_CHUNK, dtype=jnp.uint32)
-    planes = [jnp.sum(((ug >> jnp.uint32(j)) & jnp.uint32(1)) << lanes,
-                      axis=-1, dtype=jnp.uint32)
+    if int32_shifts:
+        ug = jax.lax.bitcast_convert_type(ug, jnp.int32)
+    lanes = jnp.arange(_PACK_CHUNK, dtype=wd)
+    planes = [jnp.sum(((ug >> wd(j)) & wd(1)) << lanes, axis=-1, dtype=wd)
               for j in range(nbits)]
     words = jnp.stack(planes, axis=-1)            # (..., chunks, nbits)
+    if int32_shifts:
+        words = jax.lax.bitcast_convert_type(words, jnp.uint32)
     return words.reshape(*u.shape[:-1], chunks * nbits)
 
 
-def unpack_unsigned(words: jax.Array, nbits: int, k: int) -> jax.Array:
-    """Inverse of :func:`pack_unsigned`: (..., ceil(k/32)*nbits) -> (..., k)."""
+def unpack_unsigned(words: jax.Array, nbits: int, k: int, *,
+                    int32_shifts: bool = False) -> jax.Array:
+    """Inverse of :func:`pack_unsigned`: (..., ceil(k/32)*nbits) -> (..., k).
+
+    ``int32_shifts=True``: same math on bitcast int32 words (see
+    :func:`pack_unsigned`); the ``& 1`` mask makes the arithmetic
+    shift-right equivalent to the logical one bit-for-bit.
+    """
     words = jnp.asarray(words, jnp.uint32)
     chunks = words.shape[-1] // nbits
+    wd = jnp.int32 if int32_shifts else jnp.uint32
     w = words.reshape(*words.shape[:-1], chunks, nbits)
-    lanes = jnp.arange(_PACK_CHUNK, dtype=jnp.uint32)
-    u = jnp.zeros((*words.shape[:-1], chunks, _PACK_CHUNK), jnp.uint32)
+    if int32_shifts:
+        w = jax.lax.bitcast_convert_type(w, jnp.int32)
+    lanes = jnp.arange(_PACK_CHUNK, dtype=wd)
+    u = jnp.zeros((*words.shape[:-1], chunks, _PACK_CHUNK), wd)
     for j in range(nbits):
-        bits_j = (w[..., j][..., None] >> lanes) & jnp.uint32(1)
-        u = u | (bits_j << jnp.uint32(j))
+        bits_j = (w[..., j][..., None] >> lanes) & wd(1)
+        u = u | (bits_j << wd(j))
     u = u.reshape(*words.shape[:-1], chunks * _PACK_CHUNK)
-    return u[..., :k]
+    # unpacked fields are < 2**16, so the int32 path is nonneg: plain astype
+    return u.astype(jnp.uint32)[..., :k]
 
 
-def pack_mantissas(m: jax.Array, bits: int) -> jax.Array:
+def pack_mantissas(m: jax.Array, bits: int, *,
+                   int32_shifts: bool = False) -> jax.Array:
     """int8 mantissas (..., K) -> offset-binary packed uint32 words."""
     qmax = qmax_for_bits(bits)
     u = (m.astype(jnp.int32) + qmax).astype(jnp.uint32)
-    return pack_unsigned(u, bits)
+    return pack_unsigned(u, bits, int32_shifts=int32_shifts)
 
 
-def unpack_mantissas(words: jax.Array, bits: int, k: int) -> jax.Array:
+def unpack_mantissas(words: jax.Array, bits: int, k: int, *,
+                     int32_shifts: bool = False) -> jax.Array:
     """Packed words -> int8 mantissas (..., k)."""
     qmax = qmax_for_bits(bits)
-    u = unpack_unsigned(words, bits, k)
+    u = unpack_unsigned(words, bits, k, int32_shifts=int32_shifts)
     return (u.astype(jnp.int32) - qmax).astype(jnp.int8)
 
 

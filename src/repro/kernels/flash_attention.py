@@ -20,6 +20,54 @@ from jax.experimental import pallas as pl
 NEG_INF = -1e30
 
 
+def tile_position_mask(bq: int, bk: int, qi, ki, causal: bool, window: int,
+                       q_offset):
+    """(bq, bk) bool mask for the (qi, ki) tile, or None if unmasked.
+
+    Positions are built in-kernel from the tile indices (no (T, S) mask in
+    HBM). Shared by the dense and the packed-KV flash kernels so both carry
+    the identical masking definition.
+    """
+    if not (causal or window):
+        return None
+    qpos = q_offset + qi * bq + jax.lax.broadcasted_iota(
+        jnp.int32, (bq, bk), 0)
+    kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        mask = mask & (kpos <= qpos)
+    if window:
+        mask = mask & (kpos > qpos - window)
+    return mask
+
+
+def online_softmax_update(q, k, v, mask, m_scr, l_scr, acc_scr,
+                          scale: float):
+    """One KV tile of the online-softmax recurrence, updating the VMEM
+    scratch (running max, running sum, output accumulator) in place.
+
+    q (bq, D), k/v (bk, D) fp32; mask (bq, bk) bool or None. The single
+    definition of the flash tile math — shared by ``_flash_kernel`` and
+    the packed-KV kernel/fallback in ``flash_attention_packed``, which is
+    what makes fused-vs-oracle parity bit-exact rather than allclose.
+    """
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if mask is not None:
+        s = jnp.where(mask, s, NEG_INF)
+    m_prev = m_scr[...]                                   # (bq, 1)
+    l_prev = l_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + jnp.sum(p, axis=-1, keepdims=True)
+    pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_scr[...] = acc_scr[...] * corr + pv
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
                   bq: int, bk: int, k_steps: int, causal: bool,
                   window: int, q_offset: int, scale: float):
@@ -35,30 +83,8 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
     q = q_ref[0].astype(jnp.float32)                     # (bq, D)
     k = k_ref[0].astype(jnp.float32)                     # (bk, D)
     v = v_ref[0].astype(jnp.float32)
-    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                            preferred_element_type=jnp.float32) * scale
-    if causal or window:
-        qpos = q_offset + qi * bq + jax.lax.broadcasted_iota(
-            jnp.int32, (bq, bk), 0)
-        kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
-        mask = jnp.ones((bq, bk), jnp.bool_)
-        if causal:
-            mask = mask & (kpos <= qpos)
-        if window:
-            mask = mask & (kpos > qpos - window)
-        s = jnp.where(mask, s, NEG_INF)
-
-    m_prev = m_scr[...]                                   # (bq, 1)
-    l_prev = l_scr[...]
-    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
-    p = jnp.exp(s - m_new)
-    corr = jnp.exp(m_prev - m_new)
-    l_new = l_prev * corr + jnp.sum(p, axis=-1, keepdims=True)
-    pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
-                             preferred_element_type=jnp.float32)
-    acc_scr[...] = acc_scr[...] * corr + pv
-    m_scr[...] = m_new
-    l_scr[...] = l_new
+    mask = tile_position_mask(bq, bk, qi, ki, causal, window, q_offset)
+    online_softmax_update(q, k, v, mask, m_scr, l_scr, acc_scr, scale)
 
     @pl.when(ki == k_steps - 1)
     def _store():

@@ -1,0 +1,285 @@
+"""Pallas TPU kernel: flash attention over a **bit-packed GSE KV cache**,
+with tile-local dequantization — the serving hot path that keeps the
+paper's storage format resident in HBM during decode.
+
+The K/V operands arrive in the *row-planar* packed layout used by the
+packed decode cache (``repro.serve.engine``): every (token, kv-head) row of
+``head_dim`` values packs independently into
+
+    words  (..., S, Kv, ceil(D/32) * bits)   uint32  bit-planar mantissas
+    exps   (..., S, Kv, D // g)              int8    unbiased shared exps
+
+i.e. the wire chunk layout of ``repro.core.gse`` applied per row, padded to
+a whole 32-chunk (``docs/gse-format.md`` §"Row-planar decode layout").
+Unlike the flat :class:`~repro.core.gse.PackedGSETensor` stream, one
+token's slice is a contiguous word row, so the decode loop can append a
+freshly quantized token with a single ``dynamic_update_slice`` — the cache
+is never materialized unpacked.
+
+Inside the kernel only the current KV tile is unpacked: the shift/mask body
+(``repro.kernels.gse_unpack.unpack_tile``) and exact power-of-two rescale
+(``exp2_int``) run on the VMEM-resident (bk, words) tile, feeding the
+shared online-softmax tile update of ``repro.kernels.flash_attention``.
+HBM traffic and VMEM residency for K/V are therefore ``b + 8/g`` bits per
+value (int8 exponents — the row-planar layout trades the 5-bit exponent
+packing for appendability); the full fp cache never exists.
+
+Bit-exactness contract: dequantizing a GSE row is exact in fp32 (mantissa
+* power-of-two scale), and the tile math is literally the same
+``online_softmax_update``/``tile_position_mask`` the dense kernel runs, so
+the fused kernel is **bit-identical** to unpack-everything-then-
+``flash_attention_pallas`` at the same tiling (the ordered-accumulation
+contract; oracle in ``repro.kernels.ref``).
+
+:func:`flash_attention_packed_jnp` is the GQA-aware jnp fallback
+(interpret/CPU serving path): a ``lax.scan`` over KV tiles that unpacks one
+(B, bk, Kv) tile per step — tile-local like the kernel, trace-safe
+``q_offset``/``is_global`` (decode), ragged sequence lengths via masked
+padding.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.gse import (_PACK_CHUNK, DEFAULT_GROUP, exp2_int,
+                            gse_quantize, pack_mantissas, unpack_mantissas)
+from repro.core.qcd import effective_group_size
+from repro.kernels.flash_attention import (NEG_INF, online_softmax_update,
+                                           tile_position_mask)
+
+DEFAULT_BQ = 256
+DEFAULT_BK = 512
+
+
+# ---------------------------------------------------------------------------
+# Row-planar packed KV layout: per-(token, head) rows of head_dim values.
+# ---------------------------------------------------------------------------
+
+def kv_row_words(head_dim: int, bits: int) -> int:
+    """uint32 words per packed (token, head) row: ceil(D/32) * bits."""
+    return -(-head_dim // _PACK_CHUNK) * bits
+
+
+def kv_row_bits(words_per_row: int, head_dim: int) -> int:
+    """Invert :func:`kv_row_words`: recover ``bits`` from the word-plane
+    width (static — lets consumers derive the format from array shapes)."""
+    chunks = -(-head_dim // _PACK_CHUNK)
+    bits, rem = divmod(words_per_row, chunks)
+    if rem or not 2 <= bits <= 8:
+        raise ValueError(f"words/row {words_per_row} is not a packed row of "
+                         f"head_dim {head_dim}")
+    return bits
+
+
+def quant_pack_kv_rows(x: jax.Array, bits: int, group: int = DEFAULT_GROUP,
+                       interpret: bool = True, int32_shifts: bool = False):
+    """Quantize + pack ``x`` (..., D) into row-planar KV planes.
+
+    Returns (words (..., ceil(D/32)*bits) uint32, exps (..., D//g) int8)
+    with g = largest divisor of D that is <= ``group``. 32-aligned head
+    dims run the fused quantize+pack Pallas kernel (one VMEM pass, no int8
+    intermediate); ragged dims take the jnp two-step path whose words are
+    bit-identical (``pack_mantissas`` zero-pads the final chunk).
+    """
+    d = x.shape[-1]
+    g = effective_group_size(d, group)
+    if d % _PACK_CHUNK == 0:
+        from repro.kernels.gse_quant_pack import gse_quant_pack_pallas
+        words, exps = gse_quant_pack_pallas(
+            x.reshape(-1, d), bits, g, interpret=interpret,
+            int32_shifts=int32_shifts)
+        return (words.reshape(*x.shape[:-1], kv_row_words(d, bits)),
+                exps.reshape(*x.shape[:-1], d // g))
+    t = gse_quantize(x, bits, g)
+    return (pack_mantissas(t.mantissa, bits, int32_shifts=int32_shifts),
+            t.exponent)
+
+
+def dequant_kv_rows(words: jax.Array, exps: jax.Array, head_dim: int,
+                    dtype=jnp.float32, int32_shifts: bool = False):
+    """Row-planar planes -> values (..., D). Pure jnp shift/mask + exact
+    power-of-two rescale; runs host-side and on VMEM tiles inside the
+    kernel (the single definition of the row dequant)."""
+    d32 = -(-head_dim // _PACK_CHUNK) * _PACK_CHUNK
+    bits = kv_row_bits(words.shape[-1], head_dim)
+    m = unpack_mantissas(words, bits, d32,
+                         int32_shifts=int32_shifts)[..., :head_dim]
+    g = head_dim // exps.shape[-1]
+    scale = exp2_int(exps.astype(jnp.int32))          # exact 2^e, fp32
+    vals = m.astype(jnp.float32).reshape(*m.shape[:-1], exps.shape[-1], g)
+    return (vals * scale[..., None]).reshape(*m.shape[:-1],
+                                             head_dim).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel: (BH, T, D) q against (BH, S, ·) packed planes.
+# ---------------------------------------------------------------------------
+
+def _flash_packed_kernel(q_ref, kw_ref, ke_ref, vw_ref, ve_ref, o_ref,
+                         m_scr, l_scr, acc_scr, *, head_dim: int, bq: int,
+                         bk: int, k_steps: int, causal: bool, window: int,
+                         q_offset: int, scale: float, int32_shifts: bool):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # tile-local dequant: only this (bk, D) K/V tile ever exists unpacked,
+    # and only in VMEM — HBM holds b-bit words + int8 exponents
+    k = dequant_kv_rows(kw_ref[0], ke_ref[0], head_dim,
+                        int32_shifts=int32_shifts)          # (bk, D) fp32
+    v = dequant_kv_rows(vw_ref[0], ve_ref[0], head_dim,
+                        int32_shifts=int32_shifts)
+    q = q_ref[0].astype(jnp.float32)                        # (bq, D)
+    mask = tile_position_mask(bq, bk, qi, ki, causal, window, q_offset)
+    online_softmax_update(q, k, v, mask, m_scr, l_scr, acc_scr, scale)
+
+    @pl.when(ki == k_steps - 1)
+    def _store():
+        o_ref[0] = (acc_scr[...] /
+                    jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "window", "q_offset", "bq",
+                                    "bk", "interpret", "int32_shifts"))
+def flash_attention_packed_pallas(q, k_words, k_exp, v_words, v_exp,
+                                  causal: bool = True, window: int = 0,
+                                  q_offset: int = 0, bq: int = DEFAULT_BQ,
+                                  bk: int = DEFAULT_BK,
+                                  interpret: bool = True,
+                                  int32_shifts: bool = False):
+    """q (BH, T, D) float; k/v planes (BH, S, W) uint32 + (BH, S, G) int8
+    (row-planar packed layout) -> (BH, T, D).
+
+    GQA callers fold/expand heads like ``flash_attention_pallas``;
+    ``q_offset`` is static here (the decode path threads traced offsets
+    through :func:`flash_attention_packed_jnp`; a TPU decode deployment
+    would move it to scalar prefetch).
+    """
+    bh, t, d = q.shape
+    s_len = k_words.shape[1]
+    wpr, gexp = k_words.shape[-1], k_exp.shape[-1]
+    assert kv_row_bits(wpr, d) and v_words.shape[-1] == wpr, (
+        "packed row width mismatch", k_words.shape, v_words.shape, d)
+    bq = min(bq, t)
+    bk = min(bk, s_len)
+    assert t % bq == 0 and s_len % bk == 0, (t, bq, s_len, bk)
+    k_steps = s_len // bk
+    grid = (bh, t // bq, k_steps)
+    kernel = functools.partial(
+        _flash_packed_kernel, head_dim=d, bq=bq, bk=bk, k_steps=k_steps,
+        causal=causal, window=window, q_offset=q_offset, scale=d ** -0.5,
+        int32_shifts=int32_shifts)
+    from jax.experimental.pallas import tpu as pltpu
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, wpr), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, gexp), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, wpr), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, gexp), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, t, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k_words, k_exp, v_words, v_exp)
+
+
+# ---------------------------------------------------------------------------
+# GQA-aware jnp fallback: the interpret/CPU decode path. Tile-local like
+# the kernel (lax.scan over KV tiles, one tile unpacked per step).
+# ---------------------------------------------------------------------------
+
+def _pad_seq(x, pad):
+    return jnp.pad(x, [(0, 0), (0, pad)] + [(0, 0)] * (x.ndim - 2))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "window", "k_chunk",
+                                    "int32_shifts"))
+def flash_attention_packed_jnp(q, k_words, k_exp, v_words, v_exp,
+                               causal: bool = True, window: int = 0,
+                               q_offset=0, is_global=None,
+                               k_chunk: int = DEFAULT_BK,
+                               int32_shifts: bool = False):
+    """q (B, T, H, D); planes (B, S, Kv, ·) -> (B, T, H, D).
+
+    Per scan step exactly one (B, kc, Kv, D) K/V tile is dequantized —
+    peak live unpacked KV is one tile, matching the kernel's VMEM
+    residency claim. ``q_offset`` and ``is_global`` may be traced (decode);
+    ragged S pads to a whole tile with positions masked by ``kpos < S``.
+    """
+    b, t, h, d = q.shape
+    s_len, kv = k_words.shape[1], k_words.shape[2]
+    g = h // kv
+    kc = min(k_chunk, s_len)
+    pad = (-s_len) % kc
+    ragged = pad > 0
+    if ragged:
+        k_words, k_exp = _pad_seq(k_words, pad), _pad_seq(k_exp, pad)
+        v_words, v_exp = _pad_seq(v_words, pad), _pad_seq(v_exp, pad)
+    nk = (s_len + pad) // kc
+
+    def chunked(x):                       # (B, nk*kc, Kv, ·) -> scan xs
+        return x.reshape(b, nk, kc, *x.shape[2:]).transpose(
+            1, 0, 2, *range(3, x.ndim + 1))
+
+    xs = (chunked(k_words), chunked(k_exp), chunked(v_words),
+          chunked(v_exp), jnp.arange(nk))
+    qg = q.reshape(b, t, kv, g, d).astype(jnp.float32)
+    qpos = jnp.asarray(q_offset, jnp.int32) + jnp.arange(t)
+    scale = d ** -0.5
+
+    def k_step(carry, inp):
+        kwb, keb, vwb, veb, ki = inp
+        m_prev, l_prev, acc = carry
+        kblk = dequant_kv_rows(kwb, keb, d,
+                               int32_shifts=int32_shifts)  # (B, kc, Kv, D)
+        vblk = dequant_kv_rows(vwb, veb, d, int32_shifts=int32_shifts)
+        kpos = ki * kc + jnp.arange(kc)
+        sblk = jnp.einsum("btkgd,bskd->bkgts", qg, kblk,
+                          preferred_element_type=jnp.float32) * scale
+        # same structural mask as models.attention.block_mask, plus the
+        # ragged-tail validity term (padded rows never win the softmax)
+        mask = jnp.ones((t, kc), bool)
+        if causal:
+            mask = mask & (kpos[None, :] <= qpos[:, None])
+        if window:
+            local = kpos[None, :] > (qpos[:, None] - window)
+            mask = mask & (local if is_global is None
+                           else (local | is_global))
+        if ragged:
+            mask = mask & (kpos < s_len)[None, :]
+        sblk = jnp.where(mask[None, None, None], sblk, NEG_INF)
+        m_new = jnp.maximum(m_prev, jnp.max(sblk, axis=-1))
+        p = jnp.exp(sblk - m_new[..., None])
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bkgts,bskd->bkgtd", p, vblk,
+                        preferred_element_type=jnp.float32)
+        acc = acc * corr[..., None] + pv
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, kv, g, t), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kv, g, t), jnp.float32)
+    a0 = jnp.zeros((b, kv, g, t, d), jnp.float32)
+    (_, l_f, acc), _ = jax.lax.scan(k_step, (m0, l0, a0), xs)
+    out = acc / jnp.maximum(l_f, 1e-30)[..., None]
+    # (B, KV, G, T, D) -> (B, T, KV, G, D) -> (B, T, H, D)
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, t, h, d).astype(q.dtype)

@@ -88,12 +88,12 @@ def _gse_matmul_kernel(am_ref, ae_ref, bm_ref, be_ref, o_ref, acc_ref, *,
 
 def _gse_matmul_packed_kernel(am_ref, ae_ref, bw_ref, be_ref, o_ref,
                               acc_ref, *, bits: int, group: int,
-                              k_steps: int):
+                              k_steps: int, int32_shifts: bool):
     @pl.when(pl.program_id(2) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    bm = unpack_tile(bw_ref[...], bits)               # VMEM-only int8 tile
+    bm = unpack_tile(bw_ref[...], bits, int32_shifts)  # VMEM-only int8 tile
     _mac_accumulate(am_ref[...], ae_ref[...], bm, be_ref[...],
                     acc_ref, group=group)
 
@@ -139,11 +139,12 @@ def gse_matmul_pallas(a_m, a_e, b_m, b_e, group: int = 32,
 
 @functools.partial(jax.jit,
                    static_argnames=("bits", "group", "bm", "bn", "bk",
-                                    "interpret"))
+                                    "interpret", "int32_shifts"))
 def gse_matmul_packed_pallas(a_m, a_e, b_words, b_e, bits: int,
                              group: int = 32,
                              bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
-                             bk: int = DEFAULT_BK, interpret: bool = True):
+                             bk: int = DEFAULT_BK, interpret: bool = True,
+                             int32_shifts: bool = False):
     """Fused packed-dequant GSE matmul.
 
     a_m (M, K) int8, a_e (M, K//G) int8 — activations in working form;
@@ -164,7 +165,8 @@ def gse_matmul_packed_pallas(a_m, a_e, b_words, b_e, bits: int,
     k_steps = k_dim // bk
     grid = (m_dim // bm, n_dim // bn, k_steps)
     kernel = functools.partial(_gse_matmul_packed_kernel, bits=bits,
-                               group=group, k_steps=k_steps)
+                               group=group, k_steps=k_steps,
+                               int32_shifts=int32_shifts)
     from jax.experimental.pallas import tpu as pltpu
     return pl.pallas_call(
         kernel,

@@ -57,20 +57,23 @@ def _fit_block(dim: int, want: int, multiple: int = 1) -> int:
     return max(b, multiple) if dim % max(b, multiple) == 0 else dim
 
 
-def _gse_quant_pack_kernel(x_ref, w_ref, e_ref, *, bits: int, group: int):
+def _gse_quant_pack_kernel(x_ref, w_ref, e_ref, *, bits: int, group: int,
+                           int32_shifts: bool):
     m, e = quantize_tile(x_ref[...], bits, group)  # shared quantize math
     # offset-binary bit-planar pack while the tile sits in VMEM — the int8
     # mantissas never exist outside this kernel
-    w_ref[...] = pack_mantissas(m.astype(jnp.int8), bits)
+    w_ref[...] = pack_mantissas(m.astype(jnp.int8), bits,
+                                int32_shifts=int32_shifts)
     e_ref[...] = e.astype(jnp.int8)
 
 
 @functools.partial(jax.jit,
                    static_argnames=("bits", "group", "bm", "bk",
-                                    "interpret"))
+                                    "interpret", "int32_shifts"))
 def gse_quant_pack_pallas(x: jax.Array, bits: int = 6, group: int = 32,
                           bm: int = DEFAULT_BM, bk: int = DEFAULT_BK,
-                          interpret: bool = True):
+                          interpret: bool = True,
+                          int32_shifts: bool = False):
     """x (M, K) float -> (mantissa words (M, K//32*bits) uint32,
     exponents (M, K//group) int8), one fused VMEM pass.
 
@@ -85,7 +88,7 @@ def gse_quant_pack_pallas(x: jax.Array, bits: int = 6, group: int = 32,
     bkw = bk // _PACK_CHUNK * bits
     grid = (m_dim // bm, k_dim // bk)
     kernel = functools.partial(_gse_quant_pack_kernel, bits=bits,
-                               group=group)
+                               group=group, int32_shifts=int32_shifts)
     return pl.pallas_call(
         kernel,
         grid=grid,
@@ -110,10 +113,11 @@ _FLAT_ROW = 256
 
 @functools.partial(jax.jit,
                    static_argnames=("bits", "group", "interpret", "bm",
-                                    "bk"))
+                                    "bk", "int32_shifts"))
 def gse_quantize_pack(x: jax.Array, bits: int = 6, group: int = 32,
                       interpret: bool = True, bm: int = DEFAULT_BM,
-                      bk: int = DEFAULT_BK) -> PackedGSETensor:
+                      bk: int = DEFAULT_BK,
+                      int32_shifts: bool = False) -> PackedGSETensor:
     """Quantize + pack ``x`` (any shape, grouped along the last axis) into a
     :class:`PackedGSETensor`, word-for-word identical to
     ``gse_pack(gse_quantize(x, bits, group))``.
@@ -135,7 +139,8 @@ def gse_quantize_pack(x: jax.Array, bits: int = 6, group: int = 32,
         x2 = x.reshape(-1, k)
         k0 = k
     words, exp = gse_quant_pack_pallas(x2, bits, group, bm=bm, bk=bk,
-                                       interpret=interpret)
+                                       interpret=interpret,
+                                       int32_shifts=int32_shifts)
     # per-row chunks concatenate in flat chunk order, so reshaping the 2-D
     # retiling back is exactly the wire layout of the original shape
     words = words.reshape(*x.shape[:-1], k // _PACK_CHUNK * bits)

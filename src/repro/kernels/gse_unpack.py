@@ -32,27 +32,32 @@ DEFAULT_BM = 256
 DEFAULT_BK = 512
 
 
-def unpack_tile(words: jax.Array, bits: int) -> jax.Array:
+def unpack_tile(words: jax.Array, bits: int,
+                int32_shifts: bool = False) -> jax.Array:
     """(BM, C*bits) uint32 plane words -> (BM, C*32) int8 mantissas.
 
-    Shared by this kernel and the fused packed matmul. The shift/mask body
-    is ``repro.core.gse.unpack_mantissas`` — pure jnp, so the same code
-    defines the wire format once and runs both host-side and on
-    VMEM-resident tiles inside kernels.
+    Shared by this kernel, the fused packed matmul, and the packed-KV flash
+    attention. The shift/mask body is ``repro.core.gse.unpack_mantissas`` —
+    pure jnp, so the same code defines the wire format once and runs both
+    host-side and on VMEM-resident tiles inside kernels.
+    ``int32_shifts`` selects the bitcast-int32 shift fallback for Mosaic
+    targets lacking u32 shifts (bit-identical output, see core.gse).
     """
     k = words.shape[-1] // bits * _PACK_CHUNK
-    return unpack_mantissas(words, bits, k)
+    return unpack_mantissas(words, bits, k, int32_shifts=int32_shifts)
 
 
-def _gse_unpack_kernel(w_ref, m_ref, *, bits: int):
-    m_ref[...] = unpack_tile(w_ref[...], bits)
+def _gse_unpack_kernel(w_ref, m_ref, *, bits: int, int32_shifts: bool):
+    m_ref[...] = unpack_tile(w_ref[...], bits, int32_shifts)
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("bits", "bm", "bk", "interpret"))
+                   static_argnames=("bits", "bm", "bk", "interpret",
+                                    "int32_shifts"))
 def gse_unpack_pallas(words: jax.Array, bits: int,
                       bm: int = DEFAULT_BM, bk: int = DEFAULT_BK,
-                      interpret: bool = True) -> jax.Array:
+                      interpret: bool = True,
+                      int32_shifts: bool = False) -> jax.Array:
     """words (M, K//32*bits) uint32 -> mantissas (M, K) int8.
 
     K is implied by the word count; K % 32 == 0 (kernel storage invariant —
@@ -67,7 +72,8 @@ def gse_unpack_pallas(words: jax.Array, bits: int,
         words.shape, bits, bm, bk)
     bkw = bk // _PACK_CHUNK * bits
     grid = (m_dim // bm, k_dim // bk)
-    kernel = functools.partial(_gse_unpack_kernel, bits=bits)
+    kernel = functools.partial(_gse_unpack_kernel, bits=bits,
+                               int32_shifts=int32_shifts)
     return pl.pallas_call(
         kernel,
         grid=grid,

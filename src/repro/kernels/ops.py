@@ -8,9 +8,11 @@ fuses into the surrounding HLO for the dry-run analysis).
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.gse import PackedGSETensor, unpack_exponents
 from repro.kernels.gse_quant import gse_quantize_pallas
@@ -21,10 +23,26 @@ from repro.kernels.gse_matmul import (gse_matmul_pallas,
                                       gse_matmul_packed_pallas)
 from repro.kernels.gse_unpack import gse_unpack_pallas
 from repro.kernels.nf4_dequant import nf4_dequant_pallas
+from repro.kernels import flash_attention_packed as fap
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+# uint32 shifts are not lowered by every Mosaic version; the packed kernels
+# can run the identical shift/mask math on bitcast int32 words instead
+# (bit-identical output — see repro.core.gse.pack_unsigned). "auto" enables
+# the fallback on TPU only; force with REPRO_GSE_INT32_SHIFTS=1/0.
+
+
+def int32_shift_fallback() -> bool:
+    env = os.environ.get("REPRO_GSE_INT32_SHIFTS", "auto").lower()
+    if env in ("1", "true", "on"):
+        return True
+    if env in ("0", "false", "off"):
+        return False
+    return _on_tpu()
 
 
 def gse_quantize(x, bits: int = 6, group: int = 32, **block_kw):
@@ -36,6 +54,7 @@ def gse_quantize(x, bits: int = 6, group: int = 32, **block_kw):
 def gse_quant_pack(x, bits: int = 6, group: int = 32, **block_kw):
     """Fused quantize+pack: (M, K) -> (mantissa words uint32, exponent
     int8) in one VMEM pass — no int8 intermediate in HBM."""
+    block_kw.setdefault("int32_shifts", int32_shift_fallback())
     return gse_quant_pack_pallas(x, bits, group, interpret=not _on_tpu(),
                                  **block_kw)
 
@@ -44,12 +63,14 @@ def gse_quantize_pack(x, bits: int = 6, group: int = 32,
                       **block_kw) -> PackedGSETensor:
     """Shape-polymorphic fused quantize+pack to a PackedGSETensor (kernel
     when the last axis is 32-aligned, jnp fallback for ragged layouts)."""
+    block_kw.setdefault("int32_shifts", int32_shift_fallback())
     return _gse_quantize_pack(x, bits, group, interpret=not _on_tpu(),
                               **block_kw)
 
 
 def gse_unpack(words, bits: int, **block_kw):
     """Packed mantissa words (M, K//32*bits) uint32 -> int8 (M, K)."""
+    block_kw.setdefault("int32_shifts", int32_shift_fallback())
     return gse_unpack_pallas(words, bits, interpret=not _on_tpu(),
                              **block_kw)
 
@@ -63,6 +84,7 @@ def gse_matmul(a_m, a_e, b_m, b_e, group: int = 32, **block_kw):
 def gse_matmul_packed(a_m, a_e, b_words, b_e, bits: int, group: int = 32,
                       **block_kw):
     """Fused packed-dequant matmul: B mantissas stay packed in HBM."""
+    block_kw.setdefault("int32_shifts", int32_shift_fallback())
     return gse_matmul_packed_pallas(a_m, a_e, b_words, b_e, bits, group,
                                     interpret=not _on_tpu(), **block_kw)
 
@@ -81,6 +103,53 @@ def gse_linear(x, w, bits: int = 6, group: int = 32):
     xm, xe = gse_quantize(x, bits, group)
     wm, we = gse_quantize(w, bits, group)
     return gse_matmul(xm, xe, wm, we, group)
+
+
+def quant_pack_kv_rows(x, bits: int, group: int = 32):
+    """Row-planar KV quantize+pack: (..., D) float -> (words, int8 exps)
+    via the fused kernel when D is 32-aligned (the decode append path)."""
+    return fap.quant_pack_kv_rows(x, bits, group,
+                                  interpret=not _on_tpu(),
+                                  int32_shifts=int32_shift_fallback())
+
+
+def dequant_kv_rows(words, exps, head_dim: int, dtype=jnp.float32):
+    """Row-planar planes -> values (..., head_dim). Full materialization —
+    tests/inspection only; the attention hot path never calls this on a
+    whole cache."""
+    return fap.dequant_kv_rows(words, exps, head_dim, dtype,
+                               int32_shifts=int32_shift_fallback())
+
+
+def flash_attention_packed(q, k_words, k_exp, v_words, v_exp, *,
+                           causal: bool = True, window: int = 0,
+                           q_offset=0, is_global=None,
+                           bq: int = 256, bk: int = 512):
+    """Fused packed-KV flash attention dispatcher.
+
+    q (B, T, H, D); planes (B, S, Kv, ·) in the row-planar packed layout.
+    On TPU with MHA-shaped static inputs the Pallas kernel runs (K/V tiles
+    unpacked in VMEM only); everywhere else — GQA, traced decode offsets,
+    per-layer ``is_global`` overrides, ragged lengths, interpret/CPU — the
+    tile-local jnp fallback runs the same math one KV tile at a time.
+    """
+    b, t, h, d = q.shape
+    s_len, kv = k_words.shape[1], k_words.shape[2]
+    static_off = isinstance(q_offset, (int, np.integer))
+    fits = (t % min(bq, t) == 0 and s_len % min(bk, s_len) == 0)
+    if _on_tpu() and h == kv and static_off and is_global is None and fits:
+        def fold(x):                      # (B, S, H, ·) -> (B*H, S, ·)
+            return x.transpose(0, 2, 1, 3).reshape(b * h, x.shape[1], -1)
+        o = fap.flash_attention_packed_pallas(
+            fold(q), fold(k_words), fold(k_exp), fold(v_words),
+            fold(v_exp), causal=causal, window=window,
+            q_offset=int(q_offset), bq=bq, bk=bk, interpret=False,
+            int32_shifts=int32_shift_fallback())
+        return o.reshape(b, h, t, d).transpose(0, 2, 1, 3)
+    return fap.flash_attention_packed_jnp(
+        q, k_words, k_exp, v_words, v_exp, causal=causal, window=window,
+        q_offset=q_offset, is_global=is_global, k_chunk=bk,
+        int32_shifts=int32_shift_fallback())
 
 
 def gse_linear_packed(x, w_packed: PackedGSETensor, **block_kw):

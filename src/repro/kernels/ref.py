@@ -85,3 +85,50 @@ def flash_attention_oracle(q, k, v, causal=True, window=0, q_offset=0):
     return direct_attention(q, k, v,
                             MaskInfo(q_offset=q_offset, causal=causal,
                                      window=window))
+
+
+def packed_kv_dequant_ref(words, exps, head_dim: int):
+    """Oracle for the row-planar KV dequant: numpy bit-field decode written
+    straight from the wire spec (docs/gse-format.md §3.1/§4), deliberately
+    NOT sharing ``unpack_mantissas`` so a layout bug in the shared helper
+    cannot cancel out in the parity test. (..., W) uint32 + (..., G) int8
+    -> (..., head_dim) fp32 (each product mantissa*2^e is fp32-exact)."""
+    import numpy as np
+    w = np.asarray(words, np.uint32)
+    e = np.asarray(exps, np.int64)
+    d32 = -(-head_dim // 32) * 32
+    chunks = d32 // 32
+    bits = w.shape[-1] // chunks
+    qmax = 2 ** (bits - 1) - 1
+    wf = w.reshape(-1, chunks, bits)
+    # value i of a row: bit-plane p lives at bit (i % 32) of word
+    # (i // 32) * bits + p; fields are offset-binary (m + qmax)
+    idx = np.arange(head_dim)
+    chunk, lane = idx // 32, idx % 32
+    u = np.zeros((wf.shape[0], head_dim), np.int64)
+    for p in range(bits):
+        u |= ((wf[:, chunk, p] >> lane) & 1).astype(np.int64) << p
+    m = (u - qmax).reshape(*w.shape[:-1], head_dim)
+    g = head_dim // e.shape[-1]
+    scale = np.exp2(e.astype(np.float64))            # exact powers of two
+    vals = m.astype(np.float32).reshape(*m.shape[:-1], e.shape[-1], g)
+    out = vals * scale[..., None].astype(np.float32)
+    return jnp.asarray(out.reshape(*m.shape[:-1], head_dim), jnp.float32)
+
+
+def flash_attention_packed_oracle(q, k_words, k_exp, v_words, v_exp,
+                                  causal=True, window=0, q_offset=0,
+                                  bq=256, bk=512):
+    """Unpack-then-attend oracle for the packed-KV flash kernel: dequantize
+    the **entire** K/V (what the round-trip decode path used to do), then
+    run the dense flash kernel at the identical tiling. Because GSE dequant
+    is exact in fp32 and both kernels share ``online_softmax_update``/
+    ``tile_position_mask``, the fused kernel must match this **bit-exactly**
+    (the ordered-accumulation contract), not just allclose."""
+    from repro.kernels.flash_attention import flash_attention_pallas
+    d = q.shape[-1]
+    k = packed_kv_dequant_ref(k_words, k_exp, d)
+    v = packed_kv_dequant_ref(v_words, v_exp, d)
+    return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  q_offset=q_offset, bq=bq, bk=bk,
+                                  interpret=True)

@@ -309,3 +309,20 @@ def attention(q, k, v, info: MaskInfo, *, q_chunk: int = 512,
     if t % q_chunk != 0 or s_len % k_chunk != 0:
         return direct_attention(q, k, v, info)
     return flash_attention(q, k, v, info, q_chunk, k_chunk)
+
+
+def packed_attention(q, k_words, k_exp, v_words, v_exp, info: MaskInfo, *,
+                     k_chunk: int = 512):
+    """Attention against a **bit-packed** GSE KV cache (row-planar planes,
+    see ``repro.kernels.flash_attention_packed``) — the packed decode call
+    path. K/V stay packed end to end; only one KV tile is ever dequantized
+    at a time (VMEM tile on TPU, scan-local tile on CPU). ``info`` fields
+    may be traced (decode ``q_offset``, hymba ``is_global``).
+
+    q (B, T, H, D); planes (B, S, Kv, ·) -> (B, T, H, D).
+    """
+    from repro.kernels.ops import flash_attention_packed
+    return flash_attention_packed(
+        q, k_words, k_exp, v_words, v_exp, causal=info.causal,
+        window=info.window, q_offset=info.q_offset,
+        is_global=info.is_global, bk=k_chunk)

@@ -136,24 +136,55 @@ def attn_apply(fz, tr, x, cfg: ModelConfig, policy: QuantPolicy, *,
                use_rope: bool = True) -> Tuple[jax.Array, Optional[dict]]:
     """Self-attention. ``mask_info`` is an attention.MaskInfo (structural
     mask — no (T,S) materialization). ``layer_cache`` (decode): dict with
-    k/v (B,S,Kv,D) and index scalar; returns updated cache."""
-    from repro.models.attention import attention
+    k/v (B,S,Kv,D) and index scalar — or the **packed** planes
+    ``k_words``/``k_exp``/``v_words``/``v_exp`` (row-planar GSE storage),
+    in which case the new token is quantized+packed and written in place
+    and attention runs fused over the packed cache (the cache is never
+    materialized unpacked). Returns updated cache."""
+    from repro.models.attention import attention, packed_attention
     b, t, _ = x.shape
     q, k, v = _project_qkv(fz, tr, x, cfg, policy)
     if use_rope:
         q = apply_rope(q, positions, cfg.rope_theta)
         k = apply_rope(k, positions, cfg.rope_theta)
     new_cache = None
-    if layer_cache is not None:
-        ck, cv, idx = layer_cache["k"], layer_cache["v"], layer_cache["index"]
-        s_max = ck.shape[1]
-        write = (idx % s_max) if ring_buffer else idx
-        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, write, 0, 0))
-        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, write, 0, 0))
-        k, v = ck, cv
-        new_cache = dict(layer_cache, k=ck, v=cv, index=idx + t)
-    o = attention(q, k, v, mask_info,
-                  q_chunk=cfg.attn_q_chunk, k_chunk=cfg.attn_k_chunk)
+    if layer_cache is not None and "k_words" in layer_cache:
+        from repro.kernels.ops import quant_pack_kv_rows
+        kw, ke = layer_cache["k_words"], layer_cache["k_exp"]
+        vw, ve = layer_cache["v_words"], layer_cache["v_exp"]
+        idx = layer_cache["index"]
+        d = cfg.resolved_head_dim
+        from repro.kernels.flash_attention_packed import kv_row_bits
+        bits = kv_row_bits(kw.shape[-1], d)       # static, from the planes
+        group = d // ke.shape[-1]
+        # in-place packed append: quantize+pack only the new token's rows
+        # (fused kernel path for 32-aligned head dims), one word-row write
+        nkw, nke = quant_pack_kv_rows(k, bits, group)
+        nvw, nve = quant_pack_kv_rows(v, bits, group)
+        write = (idx % kw.shape[1]) if ring_buffer else idx
+        at = (0, write, 0, 0)
+        kw = jax.lax.dynamic_update_slice(kw, nkw, at)
+        ke = jax.lax.dynamic_update_slice(ke, nke, at)
+        vw = jax.lax.dynamic_update_slice(vw, nvw, at)
+        ve = jax.lax.dynamic_update_slice(ve, nve, at)
+        new_cache = dict(layer_cache, k_words=kw, k_exp=ke, v_words=vw,
+                         v_exp=ve, index=idx + t)
+        o = packed_attention(q, kw, ke, vw, ve, mask_info,
+                             k_chunk=cfg.attn_k_chunk)
+    else:
+        if layer_cache is not None:
+            ck, cv, idx = (layer_cache["k"], layer_cache["v"],
+                           layer_cache["index"])
+            s_max = ck.shape[1]
+            write = (idx % s_max) if ring_buffer else idx
+            ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                              (0, write, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                              (0, write, 0, 0))
+            k, v = ck, cv
+            new_cache = dict(layer_cache, k=ck, v=cv, index=idx + t)
+        o = attention(q, k, v, mask_info,
+                      q_chunk=cfg.attn_q_chunk, k_chunk=cfg.attn_k_chunk)
     o = shard(o, "batch", None, "heads", None)
     y = apply_gsq_linear(fz["wo"], tr["wo"], o.reshape(b, t, -1), policy)
     return y, new_cache
@@ -161,16 +192,22 @@ def attn_apply(fz, tr, x, cfg: ModelConfig, policy: QuantPolicy, *,
 
 def cross_attn_apply(fz, tr, x, enc_kv, cfg: ModelConfig,
                      policy: QuantPolicy) -> jax.Array:
-    """Cross-attention (whisper decoder). enc_kv: precomputed (k, v) from the
-    encoder output — (B, S_enc, Kv, D) each."""
-    from repro.models.attention import attention, MaskInfo
+    """Cross-attention (whisper decoder). enc_kv: precomputed (k, v) from
+    the encoder output — (B, S_enc, Kv, D) each — or the 4-tuple of
+    row-planar packed planes (k_words, k_exp, v_words, v_exp) when the
+    decode cache is packed (attends fused, no unpacked cross cache)."""
+    from repro.models.attention import attention, packed_attention, MaskInfo
     b, t, _ = x.shape
     hd = cfg.resolved_head_dim
     q = apply_gsq_linear(fz["wq"], tr["wq"], x, policy).reshape(
         b, t, cfg.n_heads, hd)
-    k, v = enc_kv
-    o = attention(q, k, v, MaskInfo(causal=False),
-                  q_chunk=cfg.attn_q_chunk, k_chunk=cfg.attn_k_chunk)
+    if len(enc_kv) == 4:
+        o = packed_attention(q, *enc_kv, MaskInfo(causal=False),
+                             k_chunk=cfg.attn_k_chunk)
+    else:
+        k, v = enc_kv
+        o = attention(q, k, v, MaskInfo(causal=False),
+                      q_chunk=cfg.attn_q_chunk, k_chunk=cfg.attn_k_chunk)
     return apply_gsq_linear(fz["wo"], tr["wo"], o.reshape(b, t, -1), policy)
 
 

@@ -28,6 +28,15 @@ from repro.models.attention import MaskInfo
 
 _MASK_BIDIR = MaskInfo(causal=False)
 
+# per-layer cache keys owned by the attention mixer: unpacked k/v or the
+# row-planar packed planes (packed decode path), plus the write index
+_ATTN_CACHE_KEYS = ("k", "v", "index", "k_words", "k_exp", "v_words",
+                    "v_exp")
+
+
+def _attn_cache_view(layer_cache):
+    return {k: layer_cache[k] for k in _ATTN_CACHE_KEYS if k in layer_cache}
+
 
 # --------------------------------------------------------------------------
 # Per-layer init / apply by family
@@ -71,8 +80,7 @@ def _mixer(fz, tr, h, cfg, policy, *, positions, mask_info, layer_cache,
                             cache=layer_cache)
         return y, (sc if sc is not None else {})
     if cfg.hybrid:
-        attn_cache = {k: layer_cache[k] for k in ("k", "v", "index")} \
-            if layer_cache else None
+        attn_cache = _attn_cache_view(layer_cache) if layer_cache else None
         ssm_cache = {k: layer_cache[k] for k in ("state", "conv")} \
             if layer_cache else None
         ya, ac = L.attn_apply(fz["attn"], tr["attn"], h, cfg, policy,
@@ -85,7 +93,7 @@ def _mixer(fz, tr, h, cfg, policy, *, positions, mask_info, layer_cache,
         y = 0.5 * (L.rmsnorm(fz["attn_out_norm"], ya, cfg.norm_eps)
                    + L.rmsnorm(fz["ssm_out_norm"], ys, cfg.norm_eps))
         if ac is not None:
-            new_cache.update({k: ac[k] for k in ("k", "v", "index")})
+            new_cache.update(_attn_cache_view(ac))
         if sc is not None:
             new_cache.update(sc)
         return y, new_cache
@@ -103,7 +111,8 @@ def _block_apply(fz, tr, x, cfg: ModelConfig, policy: QuantPolicy, *,
     """Pre-norm residual block; returns (x_out, new_layer_cache)."""
     h = L.norm_apply(cfg, fz["ln1"], x)
     t = x.shape[1]
-    if layer_cache is not None and "k" in layer_cache:
+    if layer_cache is not None and ("k" in layer_cache
+                                    or "k_words" in layer_cache):
         # Decode/prefill: positions and mask derive from the cache index.
         idx = layer_cache["index"]
         qpos = idx + jnp.arange(t)
@@ -362,20 +371,25 @@ def _scan_stack_encdec(fz, tr, x, enc_out, cfg, policy, *, positions,
         fz_l, tr_l, cache_l = per_layer
 
         def run(h, fz_l, tr_l, cache_l):
+            cross_keys = ()
             if enc_out is not None:
                 ekv = L.cross_kv(fz_l["cross"], tr_l["cross"], enc_out, cfg,
                                  policy)
+            elif "ck_words" in cache_l:      # packed cross cache (planes)
+                cross_keys = ("ck_words", "ck_exp", "cv_words", "cv_exp")
+                ekv = tuple(cache_l[k] for k in cross_keys)
             else:
+                cross_keys = ("ck", "cv")
                 ekv = (cache_l["ck"], cache_l["cv"])
             self_cache = None
             if cache_l is not None:
-                self_cache = {k: cache_l[k] for k in ("k", "v", "index")}
+                self_cache = _attn_cache_view(cache_l)
             h, nc = _block_apply(fz_l, tr_l, h, cfg, policy,
                                  positions=positions,
                                  layer_cache=self_cache, use_rope=False,
                                  enc_kv=ekv)
             if cache_l is not None:
-                nc = dict(nc, ck=cache_l["ck"], cv=cache_l["cv"])
+                nc = dict(nc, **{k: cache_l[k] for k in cross_keys})
             return h, nc
         if remat:
             run = jax.checkpoint(

@@ -11,16 +11,24 @@ few KV heads — the softmax over the sharded length lowers to an all-reduce).
 
 Beyond-paper: ``kv_quant_bits`` stores the KV cache GSE-quantized *and
 bit-packed* (the paper's storage format reused as a serving memory
-optimization). :func:`pack_decode_cache` / :func:`unpack_decode_cache`
-convert the attention k/v (and cross k/v) leaves to
-:class:`~repro.core.gse.PackedGSETensor` — live HBM bytes drop to
-``b + 5/32`` bits per cached value, which is what lets one device hold
-many more idle sessions (pause/resume, prefix caches) or longer contexts.
-With ``kv_quant_bits`` set, :func:`greedy_generate` carries the cache
-**packed** through the decode scan: each step unpacks, attends, re-packs.
-Re-quantizing an already-GSE-valued cache is exact (same amax -> same
-exponent -> same mantissas), so only freshly appended tokens incur
-quantization error.
+optimization), and — the default decode path — keeps it packed **through
+attention**: :func:`pack_decode_cache_planar` converts the prefilled k/v
+(and cross k/v) to the row-planar packed planes of
+``repro.kernels.flash_attention_packed`` (``*_words`` uint32 bit-planar
+mantissas + ``*_exp`` int8 shared exponents, one independently writable
+row per (token, kv-head)), and each decode step quantizes+packs only the
+new token's rows, writes them in place, and attends fused with tile-local
+dequant. The full unpacked cache exists at no point in the decode scan:
+peak live KV bytes are the packed planes plus one attention tile
+(``docs/benchmarks.md`` shows the measured row).
+
+The legacy round-trip (:func:`pack_decode_cache` /
+:func:`unpack_decode_cache`, flat :class:`~repro.core.gse.PackedGSETensor`
+leaves at ``b + 5/32`` bits/value) remains for at-rest snapshots — idle
+sessions, prefix caches — and as the ``kv_inplace=False`` A/B reference:
+re-quantizing an already-GSE-valued cache is exact (same amax -> same
+exponent -> same mantissas), so both paths quantize each token exactly
+once and agree token-for-token.
 """
 from __future__ import annotations
 
@@ -147,10 +155,58 @@ def unpack_decode_cache(cache, dtype=jnp.bfloat16):
     return out
 
 
+@partial(jax.jit, static_argnames=("bits", "group"))
+def pack_decode_cache_planar(cache, bits: int = 8,
+                             group: int = DEFAULT_GROUP):
+    """Convert the attention k/v (and cross k/v) leaves to **row-planar**
+    packed planes — the prefill→packed-decode handoff.
+
+    Each ``key`` leaf (L, B, S, Kv, D) becomes ``key_words``
+    (L, B, S, Kv, ceil(D/32)*bits) uint32 and ``key_exp`` (L, B, S, Kv,
+    D//g) int8, quantized along head_dim through the fused quantize+pack
+    kernel. Unlike :func:`pack_decode_cache` the exponents stay int8 and
+    each (token, head) row packs independently, which is what lets
+    ``decode_step`` append one token with a single ``dynamic_update_slice``
+    and attend without ever unpacking the cache. Index/SSM leaves pass
+    through untouched.
+    """
+    from repro.kernels.ops import quant_pack_kv_rows
+    out = {k: v for k, v in cache.items() if k not in _PACKED_KV_KEYS}
+    for key in _PACKED_KV_KEYS:
+        if key in cache:
+            x = cache[key]
+            g = _kv_pack_group(x.shape[-1], group)
+            words, exps = quant_pack_kv_rows(x, bits, g)
+            out[f"{key}_words"] = words
+            out[f"{key}_exp"] = exps
+    return out
+
+
+@partial(jax.jit, static_argnames=("head_dim", "dtype"))
+def unpack_decode_cache_planar(cache, head_dim: int, dtype=jnp.bfloat16):
+    """Inverse of :func:`pack_decode_cache_planar` (tests/inspection only —
+    the decode path never materializes this)."""
+    from repro.kernels.ops import dequant_kv_rows
+    out = {k: v for k, v in cache.items()
+           if not k.endswith(("_words", "_exp"))}
+    for key in _PACKED_KV_KEYS:
+        if f"{key}_words" in cache:
+            out[key] = dequant_kv_rows(cache[f"{key}_words"],
+                                       cache[f"{key}_exp"], head_dim,
+                                       dtype)
+    return out
+
+
 def packed_cache_nbytes(cache) -> int:
-    """Realized bytes of the packed k/v leaves (the serving memory claim)."""
-    return sum(cache[k].nbytes for k in _PACKED_KV_KEYS
-               if k in cache and isinstance(cache[k], PackedGSETensor))
+    """Realized bytes of the packed k/v storage (the serving memory claim):
+    flat PackedGSETensor leaves and/or row-planar word/exponent planes."""
+    total = sum(cache[k].nbytes for k in _PACKED_KV_KEYS
+                if k in cache and isinstance(cache[k], PackedGSETensor))
+    for key in _PACKED_KV_KEYS:
+        for suffix in ("_words", "_exp"):
+            if f"{key}{suffix}" in cache:
+                total += cache[f"{key}{suffix}"].nbytes
+    return total
 
 
 def _split_cache(cache):
@@ -214,13 +270,22 @@ def decode_step(fz, tr, tokens, cache, cfg: ModelConfig,
 def greedy_generate(fz, tr, prompt, cfg: ModelConfig, policy: QuantPolicy,
                     max_new: int = 16, max_len: Optional[int] = None,
                     kv_quant_bits: Optional[int] = None,
-                    kv_group: int = DEFAULT_GROUP):
+                    kv_group: int = DEFAULT_GROUP,
+                    kv_inplace: bool = True):
     """Simple batched greedy decoding loop (example/serving driver).
 
-    With ``kv_quant_bits`` set, the KV cache lives **bit-packed** between
-    steps: the scan carry holds PackedGSETensor leaves (b-bit words in HBM),
-    each step dequantizes for attention and re-packs. Re-packing GSE-exact
-    values is lossless, so only newly written positions quantize.
+    With ``kv_quant_bits`` set the KV cache lives **bit-packed** for the
+    whole decode. Default (``kv_inplace=True``): the scan carry holds the
+    row-planar word/exponent planes, each step quantizes+packs only the new
+    token's k/v rows, writes them in place, and attends fused over the
+    packed cache — the full unpacked cache is never materialized at any
+    step. ``kv_inplace=False`` keeps the legacy round-trip (unpack the
+    whole cache, attend, re-pack flat PackedGSETensor leaves) as the A/B
+    reference; both paths quantize each token exactly once (re-packing
+    GSE-exact values is lossless), so they produce identical tokens up to
+    the step where the in-place path attends to the current token's
+    already-quantized k/v (b>=8 makes that difference sub-argmax in
+    practice).
     """
     b, t = prompt.shape
     max_len = max_len or (t + max_new)
@@ -228,15 +293,17 @@ def greedy_generate(fz, tr, prompt, cfg: ModelConfig, policy: QuantPolicy,
     logits, cache = prefill(fz, tr, {"tokens": prompt}, cache, cfg, policy)
     tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
     packed = kv_quant_bits is not None
+    roundtrip = packed and not kv_inplace
     if packed:
-        cache = pack_decode_cache(cache, kv_quant_bits, kv_group)
+        pack = pack_decode_cache_planar if kv_inplace else pack_decode_cache
+        cache = pack(cache, kv_quant_bits, kv_group)
 
     def body(carry, _):
         tok, cache = carry
-        if packed:
+        if roundtrip:
             cache = unpack_decode_cache(cache)
         logits, cache = decode_step(fz, tr, tok, cache, cfg, policy)
-        if packed:
+        if roundtrip:
             cache = pack_decode_cache(cache, kv_quant_bits, kv_group)
         nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
         return (nxt, cache), nxt[:, 0]

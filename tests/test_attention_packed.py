@@ -1,0 +1,263 @@
+"""Fused packed-KV flash attention: kernel-vs-oracle bit parity, the
+tile-local jnp fallback, the in-place packed decode loop, and the
+peak-live-KV-bytes claim (the cache is never materialized unpacked)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import reduced_config
+from repro.core.gse import gse_fake_quant
+from repro.core.policy import QuantPolicy
+from repro.core.qcd import effective_group_size
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention_packed import (
+    dequant_kv_rows, flash_attention_packed_jnp,
+    flash_attention_packed_pallas, kv_row_bits, kv_row_words,
+    quant_pack_kv_rows)
+from repro.models import model as M
+from repro.models.attention import MaskInfo, direct_attention
+from repro.serve import engine as E
+
+FP = QuantPolicy(base_w_nf4=False, a_bits=None, w_bits=None, g_bits=None,
+                 adapter_bits=None, fmt="none", rank=8)
+
+
+def _planes(seed, shape, bits, group=32):
+    x = jax.random.normal(jax.random.PRNGKey(seed), shape) * 0.5
+    w, e = quant_pack_kv_rows(x, bits, group)
+    return x, w, e
+
+
+# ---------------- row-planar layout ---------------------------------------
+
+@pytest.mark.parametrize("d", [8, 40, 64, 128])
+@pytest.mark.parametrize("bits", [4, 8])
+def test_quant_pack_rows_roundtrip_exact(d, bits):
+    """dequant(quant_pack) == gse_fake_quant at the effective group — the
+    row-planar planes carry exactly the GSE values, fused kernel path
+    (32-aligned D) and ragged jnp path alike."""
+    x, w, e = _planes(d + bits, (3, 5, 2, d), bits)
+    assert w.shape[-1] == kv_row_words(d, bits)
+    assert kv_row_bits(w.shape[-1], d) == bits
+    g = effective_group_size(d, 32)
+    np.testing.assert_array_equal(
+        np.asarray(dequant_kv_rows(w, e, d)),
+        np.asarray(gse_fake_quant(x.astype(jnp.float32), bits, g)))
+
+
+def test_dequant_rows_matches_ref():
+    _, w, e = _planes(0, (4, 16, 2, 64), 6)
+    np.testing.assert_array_equal(np.asarray(dequant_kv_rows(w, e, 64)),
+                                  np.asarray(ref.packed_kv_dequant_ref(
+                                      w, e, 64)))
+
+
+# ---------------- kernel vs unpack-then-attend oracle ---------------------
+
+@pytest.mark.parametrize("bits", [4, 8])
+@pytest.mark.parametrize("causal,window", [(True, 0), (False, 0),
+                                           (True, 32)])
+@pytest.mark.parametrize("d", [64, 40])
+def test_packed_kernel_bit_exact_vs_oracle(bits, causal, window, d):
+    """The fused kernel (tile-local dequant in VMEM) is **bit-identical**
+    to dequantizing the whole cache and running the dense flash kernel at
+    the same tiling — the ordered-accumulation contract, incl. ragged
+    head_dim 40 (padded final word chunk)."""
+    bh, t, s = 4, 64, 128
+    q = jax.random.normal(jax.random.PRNGKey(1), (bh, t, d), jnp.float32)
+    _, kw, ke = _planes(2, (bh, s, d), bits)
+    _, vw, ve = _planes(3, (bh, s, d), bits)
+    o1 = flash_attention_packed_pallas(q, kw, ke, vw, ve, causal=causal,
+                                       window=window, bq=32, bk=32)
+    o2 = ref.flash_attention_packed_oracle(q, kw, ke, vw, ve,
+                                           causal=causal, window=window,
+                                           bq=32, bk=32)
+    np.testing.assert_array_equal(np.asarray(o1), np.asarray(o2))
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+def test_packed_kernel_int32_shift_fallback_bit_exact(bits):
+    """The bitcast-int32 shift path (Mosaic targets without u32 shifts)
+    changes nothing observable."""
+    bh, t, s, d = 2, 32, 64, 64
+    q = jax.random.normal(jax.random.PRNGKey(4), (bh, t, d), jnp.float32)
+    _, kw, ke = _planes(5, (bh, s, d), bits)
+    _, vw, ve = _planes(6, (bh, s, d), bits)
+    o1 = flash_attention_packed_pallas(q, kw, ke, vw, ve, bq=32, bk=32)
+    o2 = flash_attention_packed_pallas(q, kw, ke, vw, ve, bq=32, bk=32,
+                                       int32_shifts=True)
+    np.testing.assert_array_equal(np.asarray(o1), np.asarray(o2))
+
+
+def test_packed_kernel_q_offset_decode_shape():
+    """Decode-shaped call: one query row at the end of a longer cache."""
+    bh, s, d = 4, 96, 64
+    q = jax.random.normal(jax.random.PRNGKey(7), (bh, 1, d), jnp.float32)
+    _, kw, ke = _planes(8, (bh, s, d), 8)
+    _, vw, ve = _planes(9, (bh, s, d), 8)
+    o1 = flash_attention_packed_pallas(q, kw, ke, vw, ve, causal=True,
+                                       q_offset=s - 1, bq=1, bk=32)
+    o2 = ref.flash_attention_packed_oracle(q, kw, ke, vw, ve, causal=True,
+                                           q_offset=s - 1, bq=1, bk=32)
+    np.testing.assert_array_equal(np.asarray(o1), np.asarray(o2))
+
+
+# ---------------- jnp fallback (the CPU/interpret decode path) ------------
+
+def test_jnp_fallback_bit_exact_vs_kernel():
+    """MHA layout at matching tile size: the scan-over-tiles fallback runs
+    the identical float sequence as the kernel."""
+    bh, t, s, d = 4, 32, 64, 64
+    q = jax.random.normal(jax.random.PRNGKey(10), (bh, t, d), jnp.float32)
+    _, kw, ke = _planes(11, (bh, s, d), 4)
+    _, vw, ve = _planes(12, (bh, s, d), 4)
+    ok = flash_attention_packed_pallas(q, kw, ke, vw, ve, causal=True,
+                                       bq=t, bk=16)
+    oj = flash_attention_packed_jnp(
+        q[:, :, None, :], kw[:, :, None, :], ke[:, :, None, :],
+        vw[:, :, None, :], ve[:, :, None, :], causal=True, k_chunk=16)
+    np.testing.assert_array_equal(np.asarray(ok), np.asarray(oj[:, :, 0]))
+
+
+@pytest.mark.parametrize("causal,window", [(True, 0), (False, 0), (True, 8)])
+def test_jnp_fallback_gqa_ragged_vs_direct(causal, window):
+    """GQA heads + ragged cache length (pad tile masked) + traced offset
+    against the materialized-scores reference."""
+    b, t, h, kv, d, s = 2, 8, 4, 2, 64, 24
+    q = jax.random.normal(jax.random.PRNGKey(13), (b, t, h, d), jnp.float32)
+    _, kw, ke = _planes(14, (b, s, kv, d), 8)
+    _, vw, ve = _planes(15, (b, s, kv, d), 8)
+    off = jnp.asarray(s - t)                       # traced, like decode
+    o = flash_attention_packed_jnp(q, kw, ke, vw, ve, causal=causal,
+                                   window=window, q_offset=off, k_chunk=16)
+    kd = ref.packed_kv_dequant_ref(kw, ke, d)
+    vd = ref.packed_kv_dequant_ref(vw, ve, d)
+    o2 = direct_attention(q, kd, vd, MaskInfo(q_offset=s - t, causal=causal,
+                                              window=window))
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o2), atol=2e-6)
+
+
+def test_dispatcher_routes_to_fallback_on_cpu():
+    b, t, h, kv, d, s = 1, 4, 2, 2, 64, 16
+    q = jax.random.normal(jax.random.PRNGKey(16), (b, t, h, d), jnp.float32)
+    _, kw, ke = _planes(17, (b, s, kv, d), 8)
+    _, vw, ve = _planes(18, (b, s, kv, d), 8)
+    o = ops.flash_attention_packed(q, kw, ke, vw, ve, causal=True,
+                                   q_offset=s - t)
+    assert o.shape == q.shape and o.dtype == q.dtype
+
+
+# ---------------- packed decode: in-place append, never unpacked ----------
+
+_PLANE_KEYS = ("k_words", "k_exp", "v_words", "v_exp")
+
+
+def _setup(arch):
+    cfg = reduced_config(arch)
+    fz, tr = M.init_model(jax.random.PRNGKey(0), cfg, FP)
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 4, cfg.vocab)
+    return cfg, fz, tr, prompt
+
+
+def test_generate_inplace_token_identical_to_roundtrip():
+    """The restructured decode loop (in-place packed append + fused
+    attention) produces the same tokens as the legacy unpack-attend-repack
+    round-trip at b=8 — both paths quantize each token exactly once."""
+    cfg, fz, tr, prompt = _setup("granite_3_2b")
+    out_ip = E.greedy_generate(fz, tr, prompt, cfg, FP, max_new=5,
+                               kv_quant_bits=8)
+    out_rt = E.greedy_generate(fz, tr, prompt, cfg, FP, max_new=5,
+                               kv_quant_bits=8, kv_inplace=False)
+    np.testing.assert_array_equal(np.asarray(out_ip), np.asarray(out_rt))
+
+
+def test_generate_inplace_hybrid_sliding_window():
+    """hymba: hybrid attention+SSM cache with a sliding window — the
+    packed path must thread window/is_global masks and leave SSM state
+    untouched. Near-tie argmaxes may flip vs the round-trip path (the
+    in-place path attends to the current token's k/v already quantized),
+    so assert agreement with the fp-cache decode instead, which shares
+    the in-place step semantics."""
+    cfg, fz, tr, prompt = _setup("hymba_1_5b")
+    out_ip = E.greedy_generate(fz, tr, prompt, cfg, FP, max_new=5,
+                               kv_quant_bits=8)
+    out_fp = E.greedy_generate(fz, tr, prompt, cfg, FP, max_new=5)
+    agree = float(np.mean(np.asarray(out_ip) == np.asarray(out_fp)))
+    assert agree >= 0.8, (agree, np.asarray(out_ip), np.asarray(out_fp))
+
+
+def test_decode_never_materializes_unpacked_cache():
+    """Peak live KV bytes ≈ packed bytes: the scan carry holds only the
+    word/exponent planes (buffer inspection) and their measured nbytes
+    match the analytic row-planar footprint exactly."""
+    cfg, fz, tr, prompt = _setup("granite_3_2b")
+    max_len = 16
+    cache = E.init_decode_cache(cfg, 2, max_len)
+    _, cache = E.prefill(fz, tr, {"tokens": prompt}, cache, cfg, FP)
+    bf16_bytes = cache["k"].nbytes + cache["v"].nbytes
+    pc = E.pack_decode_cache_planar(cache, bits=8)
+    # buffer inspection: no unpacked k/v leaves anywhere in the carry
+    assert "k" not in pc and "v" not in pc
+    tok = jnp.zeros((2, 1), jnp.int32)
+    _, pc = E.decode_step(fz, tr, tok, pc, cfg, FP)
+    assert set(k for k in pc if k != "index") == set(_PLANE_KEYS)
+    d = cfg.resolved_head_dim
+    g = E._kv_pack_group(d, 32)
+    bits, batch = 8, 2
+    n_rows = cfg.n_layers * batch * max_len * cfg.n_kv_heads
+    analytic = 2 * n_rows * (kv_row_words(d, bits) * 4 + d // g)  # k and v
+    assert E.packed_cache_nbytes(pc) == analytic
+    # decode_step must not grow the planes
+    _, pc2 = E.decode_step(fz, tr, tok, pc, cfg, FP)
+    assert E.packed_cache_nbytes(pc2) == analytic
+    # at a realistic head_dim the planes beat bf16 by ~2x at b=8 (the
+    # reduced configs' tiny head_dim pays padding; assert there instead
+    # on the aligned shape below)
+    k = jax.random.normal(jax.random.PRNGKey(2), (2, 2, 64, 4, 128))
+    w, e = quant_pack_kv_rows(k, 8)
+    packed_bytes = w.nbytes + e.nbytes
+    assert packed_bytes < 0.55 * k.astype(jnp.bfloat16).nbytes
+    del bf16_bytes
+
+
+def test_inplace_append_planes_repack_idempotent():
+    """Mid-scan invariant of the planar layout: unpack -> re-pack of the
+    in-place-appended planes reproduces the words and exponents exactly
+    (GSE re-quantization of GSE-exact values is lossless), so appended
+    positions never accumulate error across the decode scan."""
+    cfg, fz, tr, prompt = _setup("granite_3_2b")
+    cache = E.init_decode_cache(cfg, 2, 16)
+    _, cache = E.prefill(fz, tr, {"tokens": prompt}, cache, cfg, FP)
+    pc = E.pack_decode_cache_planar(cache, bits=6)
+    tok = jnp.zeros((2, 1), jnp.int32)
+    for _ in range(2):
+        _, pc = E.decode_step(fz, tr, tok, pc, cfg, FP)
+    d = cfg.resolved_head_dim
+    back = E.unpack_decode_cache_planar(pc, d, jnp.float32)
+    repack = E.pack_decode_cache_planar(
+        {"k": back["k"], "v": back["v"], "index": back["index"]}, bits=6)
+    for key in _PLANE_KEYS:
+        np.testing.assert_array_equal(np.asarray(pc[key]),
+                                      np.asarray(repack[key]))
+
+
+def test_whisper_packed_cross_attention_decode():
+    """encdec: self **and** cross caches packed; decode logits agree with
+    the unpacked cache path within quantization tolerance."""
+    cfg = reduced_config("whisper_small")
+    fz, tr = M.init_model(jax.random.PRNGKey(0), cfg, FP)
+    key = jax.random.PRNGKey(1)
+    prompt = jax.random.randint(key, (2, 8), 4, cfg.vocab)
+    frames = jax.random.normal(key, (2, cfg.encoder_len, cfg.d_model))
+    cache = E.init_decode_cache(cfg, 2, 16, enc_len=cfg.encoder_len)
+    logits, cache = E.prefill(fz, tr, dict(tokens=prompt, frames=frames),
+                              cache, cfg, FP)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+    l_u, _ = E.decode_step(fz, tr, tok, dict(cache), cfg, FP)
+    pc = E.pack_decode_cache_planar(cache, bits=8)
+    assert {"ck_words", "ck_exp", "cv_words", "cv_exp"} <= set(pc)
+    l_p, pc2 = E.decode_step(fz, tr, tok, pc, cfg, FP)
+    rel = float(jnp.max(jnp.abs(l_p - l_u)) / jnp.max(jnp.abs(l_u)))
+    assert rel < 0.05, rel
+    assert "ck" not in pc2 and "k" not in pc2

@@ -196,6 +196,51 @@ def test_flash_kernel_vs_oracle(causal, window, dtype):
                                np.asarray(o2, np.float32), atol=tol)
 
 
+@pytest.mark.parametrize("bits", [2, 5, 8])
+def test_int32_shift_fallback_bit_identical(bits):
+    """The uint32->int32 bitcast shift path (Mosaic targets without u32
+    shifts) emits bit-identical words/mantissas/products across all three
+    packed kernels — pack, unpack, and fused packed-dequant matmul."""
+    from repro.core.gse import gse_pack, gse_quantize
+    from repro.kernels.gse_quant_pack import gse_quant_pack_pallas
+    from repro.kernels.gse_unpack import gse_unpack_pallas
+    from repro.kernels.gse_matmul import gse_matmul_packed_pallas
+    x = jax.random.normal(jax.random.PRNGKey(50 + bits), (64, 256)) * 0.4
+    w1, e1 = gse_quant_pack_pallas(x, bits, 32, bm=32, bk=64)
+    w2, e2 = gse_quant_pack_pallas(x, bits, 32, bm=32, bk=64,
+                                   int32_shifts=True)
+    np.testing.assert_array_equal(np.asarray(w1), np.asarray(w2))
+    np.testing.assert_array_equal(np.asarray(e1), np.asarray(e2))
+    m1 = gse_unpack_pallas(w1, bits, bm=32, bk=64)
+    m2 = gse_unpack_pallas(w1, bits, bm=32, bk=64, int32_shifts=True)
+    np.testing.assert_array_equal(np.asarray(m1), np.asarray(m2))
+    a = gse_quantize(jax.random.normal(jax.random.PRNGKey(51), (32, 256)),
+                     bits, 32)
+    tb = gse_quantize(x, bits, 32)
+    pb = gse_pack(tb)
+    y1 = gse_matmul_packed_pallas(a.mantissa, a.exponent, pb.mantissa_words,
+                                  tb.exponent, bits, 32, bm=32, bn=32,
+                                  bk=64)
+    y2 = gse_matmul_packed_pallas(a.mantissa, a.exponent, pb.mantissa_words,
+                                  tb.exponent, bits, 32, bm=32, bn=32,
+                                  bk=64, int32_shifts=True)
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+
+
+def test_int32_shift_fallback_host_pack_unpack():
+    """Host-side jnp pack/unpack under int32 shifts roundtrips every value
+    of every field width (exhaustive over the 5-bit exponent range and
+    8-bit mantissa range)."""
+    from repro.core.gse import pack_unsigned, unpack_unsigned
+    for nbits in (1, 5, 8, 16):
+        u = jnp.arange(2 ** min(nbits, 11), dtype=jnp.uint32) % (2 ** nbits)
+        w_u = pack_unsigned(u, nbits)
+        w_i = pack_unsigned(u, nbits, int32_shifts=True)
+        np.testing.assert_array_equal(np.asarray(w_u), np.asarray(w_i))
+        back = unpack_unsigned(w_i, nbits, u.shape[0], int32_shifts=True)
+        np.testing.assert_array_equal(np.asarray(back), np.asarray(u))
+
+
 def test_flash_kernel_block_shape_sweep():
     ks = jax.random.split(jax.random.PRNGKey(8), 3)
     q = jax.random.normal(ks[0], (2, 256, 32))

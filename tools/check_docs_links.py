@@ -1,0 +1,68 @@
+#!/usr/bin/env python
+"""Docs link checker (CI): every relative markdown link in README.md and
+docs/*.md must resolve to an existing file, every `#anchor` must match a
+heading in the target (GitHub slug rules), and the core docs pages must be
+reachable from README. Exits non-zero with a list of broken links.
+
+    python tools/check_docs_links.py
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+# docs/ pages that must be linked from the README
+REQUIRED_FROM_README = ("docs/gse-format.md", "docs/architecture.md",
+                        "docs/benchmarks.md")
+
+
+def github_slug(heading: str) -> str:
+    h = re.sub(r"[`*_]", "", heading.strip().lower())
+    h = re.sub(r"[^\w\- ]", "", h, flags=re.UNICODE)
+    return h.replace(" ", "-")
+
+
+def anchors_of(path: Path) -> set:
+    return {github_slug(m) for m in HEADING_RE.findall(
+        path.read_text(encoding="utf-8"))}
+
+
+def check_file(path: Path, errors: list):
+    text = path.read_text(encoding="utf-8")
+    for target in LINK_RE.findall(text):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        ref, _, anchor = target.partition("#")
+        dest = path if not ref else (path.parent / ref).resolve()
+        if ref and not dest.exists():
+            errors.append(f"{path.relative_to(ROOT)}: broken link -> {target}")
+            continue
+        if anchor and dest.suffix == ".md":
+            if github_slug(anchor) not in anchors_of(dest):
+                errors.append(f"{path.relative_to(ROOT)}: missing anchor "
+                              f"-> {target}")
+
+
+def main() -> int:
+    errors = []
+    readme = ROOT / "README.md"
+    pages = [readme] + sorted((ROOT / "docs").glob("*.md"))
+    for page in pages:
+        check_file(page, errors)
+    readme_text = readme.read_text(encoding="utf-8")
+    for req in REQUIRED_FROM_README:
+        if req not in readme_text:
+            errors.append(f"README.md: does not link {req}")
+    if errors:
+        print("\n".join(errors))
+        return 1
+    print(f"docs links OK ({len(pages)} pages checked)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
