@@ -183,6 +183,63 @@ def run(smoke: bool = False):
         bm=128, bn=128, bk=512), qa.mantissa, qa.exponent, iters=3)
     rows.append(csv_row("kernel/pallas_gse_matmul_packed_interpret", us,
                         "correctness-path-only"))
+
+    # packed-backward QCD step: full fwd+bwd of quantized_matmul with the
+    # residuals saved as packed GSE word streams vs the legacy bf16
+    # fake-quant residuals. Same jnp/XLA GEMMs on CPU (the simulation
+    # path), so the delta is the pack/unpack overhead the packed path pays
+    # for its b + 5/group bits/value residual footprint (reported as
+    # bytes). Both rows run in --smoke (CI).
+    mq, kq, nq = (128, 256, 128) if smoke else (512, 1024, 512)
+    xb = jax.random.normal(jax.random.PRNGKey(30), (mq, kq))
+    wb = jax.random.normal(jax.random.PRNGKey(31), (kq, nq)) * 0.05
+    ct = jax.random.normal(jax.random.PRNGKey(32), (mq, nq))
+
+    def _qcd_step(packed):
+        @jax.jit
+        def step(x, w, ct):
+            y, vjp = jax.vjp(
+                lambda a, b: quantized_matmul(a, b, 6, 6, 6, 32, packed),
+                x, w)
+            dx, dw = vjp(ct)
+            return y, dx, dw
+        return step
+
+    us_pk = _time(_qcd_step(True), xb, wb, ct, iters=5)
+    us_bf = _time(_qcd_step(False), xb, wb, ct, iters=5)
+    from repro.core.gse import gse_bits_per_value
+    packed_bytes = int(gse_bits_per_value(6, 32) / 8 * (xb.size + wb.size))
+    bf16_bytes = 2 * (xb.size + wb.size)
+    rows.append(csv_row(
+        f"kernel/qcd_bwd_packed_residuals_{mq}x{kq}x{nq}", us_pk,
+        f"bf16_residual_us={us_bf:.0f} residual_bytes={packed_bytes} "
+        f"bf16_residual_bytes={bf16_bytes} "
+        f"bytes_saving={1 - packed_bytes / bf16_bytes:.1%}"))
+    rows.append(csv_row(
+        f"kernel/qcd_bwd_bf16_residuals_{mq}x{kq}x{nq}", us_bf,
+        f"residual_bytes={bf16_bytes}"))
+
+    # transposed-contraction / token-contraction packed matmuls (the dX/dW
+    # backward kernels), interpret mode (correctness path)
+    dyq = gq(jax.random.normal(jax.random.PRNGKey(33), (128, 256)), 6, 32)
+    pdy = gse_pack(dyq)
+    xq2 = gq(jax.random.normal(jax.random.PRNGKey(34), (128, 512)), 6, 32)
+    px2 = gse_pack(xq2)
+    wq2 = gq(jax.random.normal(jax.random.PRNGKey(35), (256, 512)) * 0.05,
+             6, 32)
+    pw2 = gse_pack(wq2)
+    us = _time(lambda aw, bw: ops.gse_matmul_packed_nt(
+        aw, dyq.exponent, bw, wq2.exponent, 6, 6, 32, 32,
+        bm=128, bn=256, bk=128), pdy.mantissa_words, pw2.mantissa_words,
+        iters=3)
+    rows.append(csv_row("kernel/pallas_gse_matmul_packed_nt_interpret", us,
+                        "correctness-path-only dX-shaped"))
+    us = _time(lambda aw, bw: ops.gse_matmul_packed_tn(
+        aw, xq2.exponent, bw, dyq.exponent, 6, 6, 32, 32,
+        bm=128, bn=128, bk=128), px2.mantissa_words, pdy.mantissa_words,
+        iters=3)
+    rows.append(csv_row("kernel/pallas_gse_matmul_packed_tn_interpret", us,
+                        "correctness-path-only dW-shaped"))
     return rows
 
 

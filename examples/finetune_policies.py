@@ -17,6 +17,11 @@ def main():
     ladder = [
         ("QLoRA  4-16-16 (bf16 adapters)", QuantPolicy.qlora_bf16(rank=16)),
         ("GSQ    4-8-8   (GSE-INT8)", QuantPolicy.gsq(8, rank=16)),
+        # packed backward residuals: same math (loss bit-identical to the
+        # row above at matching bits), residuals stored at b + 5/group
+        # bits/value instead of bf16
+        ("GSQ    4-8-8   (packed residuals)",
+         QuantPolicy.gsq(8, rank=16, residuals_packed=True)),
         ("GSQ    4-6-6   (GSE-INT6)", QuantPolicy.gsq(6, rank=16)),
         ("GSQ    4-5-5   (GSE-INT5)", QuantPolicy.gsq(5, rank=16)),
     ]

@@ -87,6 +87,20 @@ def qmax_for_bits(bits: int) -> int:
     return (1 << (bits - 1)) - 1
 
 
+def effective_group_size(k: int, group_size: int) -> int:
+    """Largest divisor of ``k`` that is <= group_size.
+
+    LoRA ranks (16, 32, ...) can be smaller than the group size; grouping then
+    degrades gracefully to per-``k`` granularity (more exponents, never less
+    precision). Lives here (not qcd.py) so kernels can import it without
+    pulling in the training-path module.
+    """
+    g = min(group_size, k)
+    while k % g != 0:
+        g -= 1
+    return g
+
+
 def exp2_int(e: jax.Array) -> jax.Array:
     """Exact fp32 ``2**e`` for integer ``e`` via IEEE-754 bit assembly.
 
@@ -97,6 +111,46 @@ def exp2_int(e: jax.Array) -> jax.Array:
     """
     biased = (e.astype(jnp.int32) + 127) << 23
     return jax.lax.bitcast_convert_type(biased, jnp.float32)
+
+
+def as_f32_exact(x: jax.Array) -> jax.Array:
+    """Upcast to fp32 so the quantizer sees exactly the values ``x.dtype``
+    declares.
+
+    XLA's excess-precision folding (on by default) can elide an
+    ``f32 -> bf16 -> f32`` convert pair, letting a downstream quantizer
+    observe a GEMM output *finer* than bf16 — and whether the fold fires
+    depends on the surrounding fusion, so the same quantize math in two
+    different programs can round the same logical tensor differently
+    (ties split the other way). For bf16 the fp32 view is therefore
+    CONSTRUCTED from the bf16 bit pattern (shift into the high half), which
+    forces the rounding to materialize in every program; other dtypes take
+    the ordinary convert (fp32 input has no excess precision to lose).
+    """
+    if x.dtype == jnp.bfloat16:
+        u = jax.lax.bitcast_convert_type(x, jnp.uint16).astype(jnp.uint32)
+        return jax.lax.bitcast_convert_type(u << 16, jnp.float32)
+    return x.astype(jnp.float32)
+
+
+def ceil_log2(y: jax.Array) -> jax.Array:
+    """Exact ``ceil(log2(y))`` for positive finite fp32, as int32, via the
+    IEEE-754 bit pattern: a normal ``y = 2^e * 1.m`` has ceil-log2 ``e``
+    when the mantissa bits are zero and ``e + 1`` otherwise.
+
+    XLA's ``log2`` is an approximation whose ulp error *varies with fusion
+    context*: the same ``ceil(log2(amax/qmax))`` traced in two different
+    programs can land on opposite sides of an exact power of two and flip
+    the shared exponent by one — which is fatal for the packed-residual /
+    fake-quant A/B parity contract (repro.core.qcd). Every shared-exponent
+    computation in the framework goes through this helper so the group
+    exponent is a pure function of the value, not of the surrounding HLO.
+    (Subnormal ``y`` returns ~-126; the GSE clip to EXP_MIN covers it.)
+    """
+    bits = jax.lax.bitcast_convert_type(jnp.asarray(y, jnp.float32),
+                                        jnp.int32)
+    e = ((bits >> 23) & 0xFF) - 127
+    return jnp.where((bits & 0x7FFFFF) == 0, e, e + 1).astype(jnp.int32)
 
 
 @jax.tree_util.register_pytree_node_class
@@ -336,12 +390,12 @@ def compute_group_exponent(x: jax.Array, bits: int, group_size: int) -> jax.Arra
     Returns int8 of shape (..., K // group_size).
     """
     qmax = qmax_for_bits(bits)
-    xg = _group_reshape(jnp.asarray(x, jnp.float32), group_size)
+    xg = _group_reshape(as_f32_exact(jnp.asarray(x)), group_size)
     amax = jnp.max(jnp.abs(xg), axis=-1)
-    # ceil(log2(amax/qmax)); zero groups pinned to EXP_MIN.
+    # exact ceil(log2(amax/qmax)) — see ceil_log2; zero groups -> EXP_MIN.
     safe = jnp.where(amax > 0, amax, 1.0)
-    e = jnp.ceil(jnp.log2(safe / qmax))
-    e = jnp.where(amax > 0, e, float(EXP_MIN))
+    e = ceil_log2(safe / qmax)
+    e = jnp.where(amax > 0, e, EXP_MIN)
     e = jnp.clip(e, EXP_MIN, EXP_MAX)
     return e.astype(jnp.int8)
 
@@ -371,10 +425,10 @@ def gse_quantize(
     exposed for the gradient-compression path.
     """
     qmax = qmax_for_bits(bits)
-    xf = jnp.asarray(x, jnp.float32)
+    xf = as_f32_exact(jnp.asarray(x))
     e = compute_group_exponent(xf, bits, group_size)
     xg = _group_reshape(xf, group_size)
-    scale = jnp.exp2(e.astype(jnp.float32))[..., None]
+    scale = exp2_int(e)[..., None]
     y = xg / scale
     if stochastic:
         if key is None:
@@ -390,8 +444,31 @@ def gse_quantize(
 @partial(jax.jit, static_argnames=("dtype",))
 def gse_dequantize(t: GSETensor, dtype=jnp.float32) -> jax.Array:
     mg = _group_reshape(t.mantissa.astype(jnp.float32), t.group_size)
-    scale = jnp.exp2(t.exponent.astype(jnp.float32))[..., None]
+    scale = exp2_int(t.exponent)[..., None]
     return (mg * scale).reshape(t.mantissa.shape).astype(dtype)
+
+
+def gse_dequantize_in(t, dtype) -> jax.Array:
+    """Dequantize with the *exact* op sequence of :func:`gse_fake_quant`'s
+    final multiply: mantissas cast to ``dtype``, the power-of-two scale
+    built exactly (``exp2_int``) in fp32 then cast to ``dtype``, and the
+    fat multiply performed in ``dtype``.
+
+    This is what makes the packed-residual QCD path bit-identical to the
+    fake-quant simulation: ``gse_dequantize_in(gse_quantize(x, b, g), x.dtype)
+    == gse_fake_quant(x, b, g)`` for every dtype whose mantissa holds qmax
+    exactly (bf16 and wider for b <= 8) — both sides use the exact-integer
+    exponent math (``ceil_log2``/``exp2_int``) and multiply in the same
+    dtype, so neither XLA's transcendental approximations nor fusion
+    context can break the parity.
+
+    Accepts a :class:`GSETensor` or a :class:`PackedGSETensor`.
+    """
+    if isinstance(t, PackedGSETensor):
+        t = gse_unpack(t)
+    mg = _group_reshape(t.mantissa.astype(dtype), t.group_size)
+    scale = exp2_int(t.exponent).astype(dtype)
+    return (mg * scale[..., None]).reshape(t.mantissa.shape)
 
 
 @partial(jax.jit, static_argnames=("bits", "group_size"))
@@ -399,22 +476,30 @@ def gse_fake_quant(x: jax.Array, bits: int = 6,
                    group_size: int = DEFAULT_GROUP) -> jax.Array:
     """Quantize-dequantize in one shot (same dtype in/out).
 
-    This is the simulation primitive used inside QCD matmuls. The fat
-    tensor math stays in the INPUT dtype (bf16 on the training path —
-    §Perf iteration 5): dividing by a power-of-two scale is exact in any
-    binary float, ``round`` of values <= qmax <= 127 is exact in bf16, and
-    only the per-group amax/exponent stats (tiny) run in fp32.
+    This is the simulation primitive used inside QCD matmuls. Every step is
+    value-exact: the fp32 working view is built from the input's bit
+    pattern (``as_f32_exact`` — an ordinary convert can be elided under
+    XLA's excess-precision folding, letting the quantizer see unrounded GEMM
+    outputs in a fusion-dependent way), the shared exponent and scales use
+    the exact-integer helpers (``ceil_log2``/``exp2_int``), the
+    power-of-two scaling and the final ``m * 2^e`` products are exact in
+    fp32 and in bf16 alike, so the trailing cast back to the input dtype is
+    lossless and the result is a pure function of the stored input values —
+    in any program, under any fusion. (This replaces the §Perf iter 5
+    stay-in-bf16 posture, which the packed-residual parity contract of
+    repro.core.qcd broke on: bf16 fat math is only bit-stable if the
+    compiler never keeps excess precision, which it does not guarantee.)
     """
     dtype = x.dtype
     qmax = qmax_for_bits(bits)
-    xg = _group_reshape(x, group_size)
-    amax = jnp.max(jnp.abs(xg.astype(jnp.float32)), axis=-1, keepdims=True)
+    xg = _group_reshape(as_f32_exact(x), group_size)
+    amax = jnp.max(jnp.abs(xg), axis=-1, keepdims=True)
     safe = jnp.where(amax > 0, amax, 1.0)
-    e = jnp.clip(jnp.ceil(jnp.log2(safe / qmax)), EXP_MIN, EXP_MAX)
-    inv = jnp.exp2(-e).astype(dtype)
+    e = jnp.clip(ceil_log2(safe / qmax), EXP_MIN, EXP_MAX)
+    inv = exp2_int(-e)
     # zero groups: scale = 0 folds the zeroing into the dequant multiply —
     # one fat elementwise pass fewer than a separate where (§Perf iter 8)
-    scale = jnp.where(amax > 0, jnp.exp2(e), 0.0).astype(dtype)
+    scale = jnp.where(amax > 0, exp2_int(e), 0.0)
     m = jnp.clip(jnp.round(xg * inv), -qmax, qmax)
     return (m * scale).reshape(x.shape).astype(dtype)
 

@@ -83,7 +83,8 @@ def _qmm(x, w, a_bits, w_bits, g_bits, policy: QuantPolicy):
         return jnp.matmul(x, w)
     if policy.fmt.startswith("fp8"):
         return _fp8_matmul(x, w, policy.fmt.split("_")[1], policy.group_size)
-    return quantized_matmul(x, w, a_bits, w_bits, g_bits, policy.group_size)
+    return quantized_matmul(x, w, a_bits, w_bits, g_bits, policy.group_size,
+                            policy.residuals_packed, policy.residual_bits)
 
 
 def apply_gsq_linear(frozen, train, x: jax.Array, policy: QuantPolicy,

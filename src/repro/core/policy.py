@@ -30,16 +30,27 @@ class QuantPolicy:
     group_size: int = DEFAULT_GROUP
     fmt: str = "gse"                  # "gse" | "fp8_e4m3" | "fp8_e5m2" | "none"
     stochastic_grad: bool = False
+    # QCD backward residuals: store the tensors saved for the backward GEMMs
+    # as packed GSE word streams (b-bit bit-planar mantissas + packed 5-bit
+    # shared exponents) instead of fake-quantized bf16 — the realized
+    # activation-memory claim. ``residual_bits=None`` stores residuals at
+    # the operand bit-width (backward is then bit-identical to the
+    # fake-quant path); setting it lower trades gradient fidelity for
+    # residual bytes (QFT-style low-bit activation checkpointing).
+    residuals_packed: bool = False
+    residual_bits: Optional[int] = None
     # rank of LoRA adapters (co-optimized with bits; Sec. 2.4)
     rank: int = 64
     lora_alpha: float = 16.0
 
     # ---- paper presets -------------------------------------------------
     @classmethod
-    def gsq(cls, bits: int, rank: int = 64, group_size: int = DEFAULT_GROUP):
+    def gsq(cls, bits: int, rank: int = 64, group_size: int = DEFAULT_GROUP,
+            residuals_packed: bool = False):
         """GSQ-Tuning ' 4-b-b / b-b-b ' row of Tab. 1/8."""
         return cls(a_bits=bits, w_bits=bits, g_bits=bits, adapter_bits=bits,
-                   rank=rank, group_size=group_size)
+                   rank=rank, group_size=group_size,
+                   residuals_packed=residuals_packed)
 
     @classmethod
     def qlora_bf16(cls, rank: int = 64):

@@ -13,11 +13,39 @@ GEMM** (so W is grouped along K for the forward, along N for dX — this is the
 standard FQT convention, cf. Jetfire), with the group-shared 5-bit exponent
 of :mod:`repro.core.gse`.
 
-Simulation note: we compute with fake-quantized fp32/bf16 operands and let
-XLA run the GEMM. On TPU the same math lowers to the Pallas int8 MXU kernel
+Residual wire format (``residuals_packed=True`` — docs/gse-format.md §5)
+------------------------------------------------------------------------
+The tensors saved for the backward GEMMs are **packed GSE word streams**
+(:class:`~repro.core.gse.PackedGSETensor`: b-bit bit-planar mantissas +
+packed 5-bit shared exponents), produced by the fused quantize+pack path:
+
+    qcd_xq : Q(X)   logical (..., K), grouped along K  — feeds dW
+    qcd_wq : Q(W)^T logical (N, K),   grouped along K  — feeds dX
+
+so the live residual footprint is ``b + 5/group`` bits/value instead of 16
+(the paper's activation-memory claim as observable bytes). The backward
+quantizes dY once (``g_bits``, grouped along N) and dispatches both GEMMs
+through :mod:`repro.kernels.ops`: on TPU the packed-operand Pallas matmuls
+with tile-local dequant (``gse_matmul_packed_nt/tn``); elsewhere an
+exact-dequant jnp fallback that runs the *same* XLA matmuls as the
+fake-quant simulation — loss and gradients are bit-identical between
+``residuals_packed`` on/off when the bit-widths match. ``residual_bits``
+stores the residuals at a different (lower) bit-width than the forward
+operands (QFT-style low-bit activation checkpointing; parity then no longer
+holds, by construction).
+
+The leaf names ``qcd_xq``/``qcd_wq`` are what the remat policy in
+``repro.models.model`` saves (``save_only_these_names``) — under
+rematerialization the *only* per-GEMM tensors carried from forward to
+backward are the packed words.
+
+Simulation note (``residuals_packed=False``, the legacy A/B path): we
+compute with fake-quantized fp32/bf16 operands and let XLA run the GEMM,
+saving the fake-quantized tensors themselves as full-width residuals. On
+TPU the same math lowers to the Pallas int8 MXU kernel
 (``repro.kernels.gse_matmul``); fp32 accumulation differs from exact int32
-accumulation by ~1e-7 relative — far below quantization noise. Tests compare
-both paths.
+accumulation by ~1e-7 relative — far below quantization noise. Tests
+compare both paths.
 """
 from __future__ import annotations
 
@@ -26,21 +54,15 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
 
-from repro.core.gse import gse_fake_quant, DEFAULT_GROUP
+from repro.core.gse import (DEFAULT_GROUP, effective_group_size,
+                            gse_fake_quant)
+from repro.distributed.sharding import shard
+from repro.kernels import ops
 
-
-def effective_group_size(k: int, group_size: int) -> int:
-    """Largest divisor of ``k`` that is <= group_size.
-
-    LoRA ranks (16, 32, ...) can be smaller than the group size; grouping then
-    degrades gracefully to per-``k`` granularity (more exponents, never less
-    precision).
-    """
-    g = min(group_size, k)
-    while k % g != 0:
-        g -= 1
-    return g
+__all__ = ["quantized_matmul", "quantized_einsum_btd_dn",
+           "effective_group_size"]
 
 
 def _fq(x: jax.Array, bits: Optional[int], group_size: int) -> jax.Array:
@@ -51,7 +73,37 @@ def _fq(x: jax.Array, bits: Optional[int], group_size: int) -> jax.Array:
     return gse_fake_quant(x, bits, g)
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
+def _quant_pack(x: jax.Array, bits: int, group_size: int):
+    """Fused quantize+pack along the last axis at the effective group."""
+    g = effective_group_size(x.shape[-1], group_size)
+    return ops.gse_quantize_pack(x, bits, g)
+
+
+def _name_leaves(t, name: str):
+    """checkpoint_name every array leaf (word + exponent streams) so the
+    remat policy can save the packed residual across the backward replay."""
+    return jax.tree.map(lambda a: checkpoint_name(a, name), t)
+
+
+def _shard_residual(p):
+    """Word-planar pspec constraint for the activation-residual streams
+    under SPMD: the leading (token) axis of the word rows follows the
+    ``qcd_residual`` rule; the flat 5-bit exponent stream is a 1-D
+    word-aligned split (every uint32 word is self-contained — same argument
+    as the opt_state rule in repro.distributed.sharding)."""
+    mw = shard(p.mantissa_words,
+               *(("qcd_residual",) + (None,) * (p.mantissa_words.ndim - 1)))
+    ew = shard(p.exponent_words, "qcd_residual")
+    return type(p)(mw, ew, p.bits, p.group_size, p.shape)
+
+
+def _use_packed(a_bits, w_bits, residuals_packed) -> bool:
+    """The packed residual path needs both forward operands quantized
+    (partially-quantized ablations keep the legacy full-width residuals)."""
+    return bool(residuals_packed) and a_bits is not None and w_bits is not None
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6, 7))
 def quantized_matmul(
     x: jax.Array,
     w: jax.Array,
@@ -59,6 +111,8 @@ def quantized_matmul(
     w_bits: Optional[int] = 6,
     g_bits: Optional[int] = 6,
     group_size: int = DEFAULT_GROUP,
+    residuals_packed: bool = False,
+    residual_bits: Optional[int] = None,
 ) -> jax.Array:
     """``x @ w`` with GSE-quantized operands and gradients.
 
@@ -66,27 +120,36 @@ def quantized_matmul(
       x: (..., K) activations — quantized to ``a_bits`` along K.
       w: (K, N) weights — quantized to ``w_bits`` along K (fwd) / N (bwd dX).
       g_bits: gradient bit-width for dY in the backward GEMMs.
-      group_size: GSE group size (contrab-axis groups).
+      group_size: GSE group size (contraction-axis groups).
+      residuals_packed: save the backward residuals Q(X)/Q(W) as packed GSE
+        word streams (``b + 5/group`` bits/value) and run the backward GEMMs
+        on the packed operands. Bit-identical to the fake-quant path at
+        matching bits; requires ``a_bits`` and ``w_bits``.
+      residual_bits: override the stored residual bit-width (None = operand
+        bits; lower values trade gradient fidelity for residual bytes).
 
     Any of the bit-widths may be None to keep that operand in full precision
     (used for ablations and the QLoRA BF16 baseline).
     """
-    y, _ = _qmm_fwd(x, w, a_bits, w_bits, g_bits, group_size)
+    y, _ = _qmm_fwd(x, w, a_bits, w_bits, g_bits, group_size,
+                    residuals_packed, residual_bits)
     return y
 
 
-def _qmm_fwd(x, w, a_bits, w_bits, g_bits, group_size):
+def _qmm_fwd(x, w, a_bits, w_bits, g_bits, group_size, residuals_packed,
+             residual_bits):
+    if _use_packed(a_bits, w_bits, residuals_packed):
+        return _qmm_fwd_packed(x, w, a_bits, w_bits, group_size,
+                               residual_bits)
     xq = _fq(x, a_bits, group_size)
     # w: (K, N); contraction axis K is first -> quantize along axis 0.
     # Named so the remat policy can SAVE the quantized weight instead of
     # re-running NF4-dequant + GSE-quant in the backward pass (§Perf iter 6).
-    from jax.ad_checkpoint import checkpoint_name
     wq = checkpoint_name(_fq(w.T, w_bits, group_size).T, "qcd_wq")
     # bf16 GEMM output: the MXU accumulates fp32 internally regardless; a
     # bf16 result halves the all-reduce payload of row-parallel partials
     # (§Perf iteration 1 — was preferred_element_type=f32).
-    import os as _os
-    if _os.environ.get("REPRO_QCD_F32_OUT"):
+    if ops.qcd_f32_out():
         y = jnp.matmul(xq, wq, preferred_element_type=jnp.float32
                        ).astype(x.dtype)
     else:
@@ -98,13 +161,44 @@ def _qmm_fwd(x, w, a_bits, w_bits, g_bits, group_size):
     return y, (xq, wq)
 
 
-def _qmm_bwd(a_bits, w_bits, g_bits, group_size, res, dy):
+def _qmm_fwd_packed(x, w, a_bits, w_bits, group_size, residual_bits):
+    """Forward with packed residuals: quantize+pack X along K and W^T along
+    K once (fused kernel path for 32-aligned K), save ONLY the word
+    streams, and compute Y from the packed operands."""
+    rb_x = residual_bits or a_bits
+    rb_w = residual_bits or w_bits
+    xp = _shard_residual(_quant_pack(x, rb_x, group_size))
+    wp = _quant_pack(w.T, rb_w, group_size)       # logical (N, K) along K
+    xp = _name_leaves(xp, "qcd_xq")
+    wp = _name_leaves(wp, "qcd_wq")
+    if rb_x == a_bits and rb_w == w_bits:
+        # the packed residual IS the forward operand: one quantization,
+        # bit-identical to the fake-quant simulation on the fallback path
+        y = ops.qcd_matmul_y(xp, wp, compute_dtype=x.dtype,
+                             f32_out=ops.qcd_f32_out())
+    else:
+        # compute at operand precision, store at residual precision
+        xq = _fq(x, a_bits, group_size)
+        wq = _fq(w.T, w_bits, group_size).T
+        if ops.qcd_f32_out():
+            y = jnp.matmul(xq, wq, preferred_element_type=jnp.float32
+                           ).astype(x.dtype)
+        else:
+            y = jnp.matmul(xq, wq)
+    # zero-length dtype token: the backward dequantizes Q(X) in x.dtype to
+    # reproduce the fake-quant op sequence exactly
+    return y, (xp, wp, jnp.zeros((0,), x.dtype))
+
+
+def _qmm_bwd(a_bits, w_bits, g_bits, group_size, residuals_packed,
+             residual_bits, res, dy):
+    if _use_packed(a_bits, w_bits, residuals_packed):
+        return _qmm_bwd_packed(g_bits, group_size, res, dy)
     xq, wq = res
     dyq = _fq(dy, g_bits, group_size)                        # grouped along N
     # dX = Q(dY) @ Q(W)^T : contraction over N, reusing the forward-grouped
     # Q(W) per the paper's dL/dX equation (no per-use re-grouping).
-    import os as _os
-    if _os.environ.get("REPRO_QCD_F32_OUT"):
+    if ops.qcd_f32_out():
         dx = jnp.matmul(dyq, wq.T, preferred_element_type=jnp.float32
                         ).astype(dy.dtype)
     else:
@@ -120,17 +214,39 @@ def _qmm_bwd(a_bits, w_bits, g_bits, group_size, res, dy):
     return dx, dw
 
 
-def _qmm_bwd_wrap(a_bits, w_bits, g_bits, group_size, res, dy):
-    dx, dw = _qmm_bwd(a_bits, w_bits, g_bits, group_size, res, dy)
+def _qmm_bwd_packed(g_bits, group_size, res, dy):
+    """Backward on packed residuals: quantize+pack dY once (grouped along
+    N), then both GEMMs consume packed operands directly — on TPU through
+    the transposed-contraction / token-contraction Pallas kernels, on the
+    simulation path through the exact-dequant fallback (bit-identical to
+    the fake-quant backward)."""
+    xp, wp, dt = res
+    x_dtype = dt.dtype
+    dyq = _quant_pack(dy, g_bits, group_size) if g_bits is not None else dy
+    # dX = Q(dY) @ Q(W)^T : wp already stores the (N, K) transposed layout.
+    dx = ops.qcd_matmul_dx(dyq, wp, compute_dtype=dy.dtype,
+                           f32_out=ops.qcd_f32_out())
+    # dW = Q(X)^T @ Q(dY) : contraction over tokens.
+    dw = ops.qcd_matmul_dw(xp, dyq, out_dtype=dy.dtype, x_dtype=x_dtype,
+                           dy_dtype=dy.dtype)
+    return dx, dw
+
+
+def _qmm_bwd_wrap(a_bits, w_bits, g_bits, group_size, residuals_packed,
+                  residual_bits, res, dy):
+    dx, dw = _qmm_bwd(a_bits, w_bits, g_bits, group_size, residuals_packed,
+                      residual_bits, res, dy)
     return (dx, dw)
 
 
 quantized_matmul.defvjp(_qmm_fwd, _qmm_bwd_wrap)
 
 
-def quantized_einsum_btd_dn(x, w, a_bits, w_bits, g_bits, group_size=DEFAULT_GROUP):
+def quantized_einsum_btd_dn(x, w, a_bits, w_bits, g_bits,
+                            group_size=DEFAULT_GROUP,
+                            residuals_packed=False, residual_bits=None):
     """Convenience: (B, T, D) @ (D, N) with QCD semantics."""
     b, t, d = x.shape
     y = quantized_matmul(x.reshape(b * t, d), w, a_bits, w_bits, g_bits,
-                         group_size)
+                         group_size, residuals_packed, residual_bits)
     return y.reshape(b, t, -1)

@@ -56,16 +56,24 @@ class ShardingRules:
     # storage sharding; the divisibility guard in resolve_pspec handles
     # stream lengths that don't divide the data axis.
     opt_state: AxisSpec = ("pod", "data")
+    # packed QCD backward residuals (repro.core.qcd, residuals_packed=True):
+    # the activation residual's word rows carry the flattened token axis in
+    # front, which follows the data-parallel batch split; the flat 5-bit
+    # exponent stream splits word-aligned like opt_state. Weight residuals
+    # (qcd_wq) are not annotated (replicated like the adapter weights).
+    qcd_residual: AxisSpec = ("pod", "data")
 
     @classmethod
     def single_pod(cls):
-        return cls(batch=("data",), opt_state=("data",))
+        return cls(batch=("data",), opt_state=("data",),
+                   qcd_residual=("data",))
 
     @classmethod
     def fsdp(cls, multi_pod: bool = True):
         """Zero-3-ish: additionally shard weight d_model dims over data."""
         dp = ("pod", "data") if multi_pod else ("data",)
-        return cls(batch=dp, w_embed=("data",), opt_state=dp)
+        return cls(batch=dp, w_embed=("data",), opt_state=dp,
+                   qcd_residual=dp)
 
 
 @dataclasses.dataclass(frozen=True)

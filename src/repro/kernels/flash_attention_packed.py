@@ -45,9 +45,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.gse import (_PACK_CHUNK, DEFAULT_GROUP, exp2_int,
-                            gse_quantize, pack_mantissas, unpack_mantissas)
-from repro.core.qcd import effective_group_size
+from repro.core.gse import (_PACK_CHUNK, DEFAULT_GROUP, effective_group_size,
+                            exp2_int, gse_quantize, pack_mantissas,
+                            unpack_mantissas)
 from repro.kernels.flash_attention import (NEG_INF, online_softmax_update,
                                            tile_position_mask)
 

@@ -24,6 +24,29 @@ Two entry points share the MAC body:
   shift/mask *inside* the kernel while the tile sits in VMEM. Weights
   therefore never materialize as int8 in HBM — HBM traffic for B is
   b bits/value, the paper's memory claim on the compute path.
+
+Backward-pass variants (packed residuals, paper Sec. 2.3)
+----------------------------------------------------------
+
+The QCD training path saves its backward residuals Q(X)/Q(W) as packed
+word streams; the two backward GEMMs contract over an axis that is *not*
+the grouping axis of one (dX) or either (dW) operand, so the rank-1
+integer rescale of the forward kernel does not apply. Both kernels
+instead dequantize each packed tile **in VMEM** (shift/mask unpack +
+exact power-of-two rescale — every dequantized value is exact in fp32)
+and run an fp32 MAC, accumulating contraction tiles sequentially in
+ascending order (the ordered-accumulation contract; oracles in
+``repro.kernels.ref`` replay the identical tile sequence, so parity is
+bit-exact, not allclose). HBM traffic for both operands stays at
+b bits/value — the unpacked residual never exists outside VMEM.
+
+* :func:`gse_matmul_packed_nt_pallas` — dX = Q(dY) @ Q(W)^T: A (M, N)
+  packed along the contraction axis N, B (N, K) packed along its *last*
+  axis K while the contraction runs over its leading axis (the
+  "transposed-contraction" access pattern).
+* :func:`gse_matmul_packed_tn_pallas` — dW = Q(X)^T @ Q(dY): both
+  operands packed along their last (output) axes, contraction over the
+  shared leading token axis.
 """
 from __future__ import annotations
 
@@ -182,3 +205,179 @@ def gse_matmul_packed_pallas(a_m, a_e, b_words, b_e, bits: int,
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
     )(a_m, a_e, b_words, b_e)
+
+
+# ---------------------------------------------------------------------------
+# Packed backward-residual matmuls (tile-local dequant, fp32 ordered MAC).
+# ---------------------------------------------------------------------------
+
+def dequant_packed_tile(words, e, bits: int, group: int,
+                        int32_shifts: bool = False):
+    """One VMEM tile: packed words (R, C//32*bits) uint32 + shared exponents
+    (R, C//group) int8 -> exactly-dequantized fp32 (R, C).
+
+    Shared by both backward kernels and the ref oracles: shift/mask unpack
+    (``unpack_tile``) then the exact ``exp2_int`` power-of-two rescale —
+    each value ``m * 2^e`` is exact in fp32 (|m| <= 127)."""
+    m = unpack_tile(words, bits, int32_shifts)            # (R, C) int8
+    r, c = m.shape
+    mg = m.astype(jnp.float32).reshape(r, c // group, group)
+    scale = exp2_int(e)                                   # (R, C//group) f32
+    return (mg * scale[:, :, None]).reshape(r, c)
+
+
+def _gse_matmul_packed_nt_kernel(aw_ref, ae_ref, bw_ref, be_ref, o_ref,
+                                 acc_ref, *, a_bits: int, b_bits: int,
+                                 a_group: int, b_group: int, n_steps: int,
+                                 int32_shifts: bool):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    adeq = dequant_packed_tile(aw_ref[...], ae_ref[...], a_bits, a_group,
+                               int32_shifts)              # (bm, bn)
+    bdeq = dequant_packed_tile(bw_ref[...], be_ref[...], b_bits, b_group,
+                               int32_shifts)              # (bn, bk)
+    acc_ref[...] = acc_ref[...] + jnp.dot(
+        adeq, bdeq, preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == n_steps - 1)
+    def _store():
+        o_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("a_bits", "b_bits", "a_group", "b_group",
+                                    "bm", "bn", "bk", "interpret",
+                                    "int32_shifts"))
+def gse_matmul_packed_nt_pallas(a_words, a_e, b_words, b_e, a_bits: int,
+                                b_bits: int, a_group: int = 32,
+                                b_group: int = 32,
+                                bm: int = DEFAULT_BM, bn: int = DEFAULT_BK,
+                                bk: int = DEFAULT_BN, interpret: bool = True,
+                                int32_shifts: bool = False):
+    """dX-shaped packed matmul: A (M, N) @ B (N, K) -> (M, K) fp32,
+    contracting over N.
+
+    a_words (M, N//32*a_bits) uint32 — A mantissas packed along N (the
+    contraction axis; for dX this is Q(dY), grouped along N per the paper);
+    a_e (M, N//a_group) int8. b_words (N, K//32*b_bits) uint32 — B packed
+    along its last axis K (the saved Q(W)^T residual, forward-grouped along
+    K); b_e (N, K//b_group) int8 (the two operands' grouping axes differ,
+    hence separate group sizes). ``bn`` tiles the contraction axis: per grid step
+    both tiles are dequantized in VMEM and fp32-MAC'd, tiles accumulated in
+    ascending N order (the ordered-accumulation contract —
+    ``ref.gse_matmul_packed_nt_ref`` replays the same sequence).
+    """
+    m_dim, naw = a_words.shape
+    n_dim, nbw = b_words.shape
+    assert naw * _PACK_CHUNK == n_dim * a_bits, (a_words.shape, n_dim, a_bits)
+    k_dim = nbw // b_bits * _PACK_CHUNK
+    bm = min(bm, m_dim)
+    bn = min(bn, n_dim)
+    bk = min(bk, k_dim)
+    assert m_dim % bm == 0 and n_dim % bn == 0 and k_dim % bk == 0, (
+        (m_dim, n_dim, k_dim), (bm, bn, bk))
+    assert bn % a_group == 0 and bn % _PACK_CHUNK == 0
+    assert bk % b_group == 0 and bk % _PACK_CHUNK == 0
+    bnw = bn // _PACK_CHUNK * a_bits
+    bkw = bk // _PACK_CHUNK * b_bits
+    n_steps = n_dim // bn
+    grid = (m_dim // bm, k_dim // bk, n_steps)
+    kernel = functools.partial(_gse_matmul_packed_nt_kernel, a_bits=a_bits,
+                               b_bits=b_bits, a_group=a_group,
+                               b_group=b_group, n_steps=n_steps,
+                               int32_shifts=int32_shifts)
+    from jax.experimental.pallas import tpu as pltpu
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bnw), lambda i, j, n: (i, n)),
+            pl.BlockSpec((bm, bn // a_group), lambda i, j, n: (i, n)),
+            pl.BlockSpec((bn, bkw), lambda i, j, n: (n, j)),
+            pl.BlockSpec((bn, bk // b_group), lambda i, j, n: (n, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bk), lambda i, j, n: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m_dim, k_dim), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bk), jnp.float32)],
+        interpret=interpret,
+    )(a_words, a_e, b_words, b_e)
+
+
+def _gse_matmul_packed_tn_kernel(aw_ref, ae_ref, bw_ref, be_ref, o_ref,
+                                 acc_ref, *, a_bits: int, b_bits: int,
+                                 a_group: int, b_group: int, m_steps: int,
+                                 int32_shifts: bool):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    adeq = dequant_packed_tile(aw_ref[...], ae_ref[...], a_bits, a_group,
+                               int32_shifts)              # (bm, bk)
+    bdeq = dequant_packed_tile(bw_ref[...], be_ref[...], b_bits, b_group,
+                               int32_shifts)              # (bm, bn)
+    acc_ref[...] = acc_ref[...] + jax.lax.dot_general(
+        adeq, bdeq, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)               # (bk, bn)
+
+    @pl.when(pl.program_id(2) == m_steps - 1)
+    def _store():
+        o_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("a_bits", "b_bits", "a_group", "b_group",
+                                    "bm", "bn", "bk", "interpret",
+                                    "int32_shifts"))
+def gse_matmul_packed_tn_pallas(a_words, a_e, b_words, b_e, a_bits: int,
+                                b_bits: int, a_group: int = 32,
+                                b_group: int = 32,
+                                bm: int = DEFAULT_BK, bn: int = DEFAULT_BN,
+                                bk: int = DEFAULT_BM, interpret: bool = True,
+                                int32_shifts: bool = False):
+    """dW-shaped packed matmul: A (M, K)^T @ B (M, N) -> (K, N) fp32,
+    contracting over the shared leading token axis M of both packed
+    operands (for dW: A is the saved Q(X) residual grouped along K, B the
+    freshly packed Q(dY) grouped along N).
+
+    a_words (M, K//32*a_bits), a_e (M, K//a_group); b_words
+    (M, N//32*b_bits), b_e (M, N//b_group). ``bm`` tiles the contraction axis; tiles are
+    dequantized in VMEM, fp32-MAC'd with a dim-0 x dim-0 ``dot_general``,
+    and accumulated in ascending M order (ordered-accumulation contract).
+    """
+    m_dim, naw = a_words.shape
+    m2, nbw = b_words.shape
+    assert m_dim == m2, (a_words.shape, b_words.shape)
+    k_dim = naw // a_bits * _PACK_CHUNK
+    n_dim = nbw // b_bits * _PACK_CHUNK
+    bm = min(bm, m_dim)
+    bn = min(bn, n_dim)
+    bk = min(bk, k_dim)
+    assert m_dim % bm == 0 and n_dim % bn == 0 and k_dim % bk == 0, (
+        (m_dim, n_dim, k_dim), (bm, bn, bk))
+    assert bk % a_group == 0 and bk % _PACK_CHUNK == 0
+    assert bn % b_group == 0 and bn % _PACK_CHUNK == 0
+    bkw = bk // _PACK_CHUNK * a_bits
+    bnw = bn // _PACK_CHUNK * b_bits
+    m_steps = m_dim // bm
+    grid = (k_dim // bk, n_dim // bn, m_steps)
+    kernel = functools.partial(_gse_matmul_packed_tn_kernel, a_bits=a_bits,
+                               b_bits=b_bits, a_group=a_group,
+                               b_group=b_group, m_steps=m_steps,
+                               int32_shifts=int32_shifts)
+    from jax.experimental.pallas import tpu as pltpu
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bkw), lambda i, j, s: (s, i)),
+            pl.BlockSpec((bm, bk // a_group), lambda i, j, s: (s, i)),
+            pl.BlockSpec((bm, bnw), lambda i, j, s: (s, j)),
+            pl.BlockSpec((bm, bn // b_group), lambda i, j, s: (s, j)),
+        ],
+        out_specs=pl.BlockSpec((bk, bn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((k_dim, n_dim), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bk, bn), jnp.float32)],
+        interpret=interpret,
+    )(a_words, a_e, b_words, b_e)

@@ -14,7 +14,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.gse import EXP_MIN, EXP_MAX, qmax_for_bits
+from repro.core.gse import (EXP_MIN, EXP_MAX, as_f32_exact, ceil_log2,
+                            exp2_int, qmax_for_bits)
 
 DEFAULT_BM = 256
 DEFAULT_BK = 512
@@ -29,16 +30,18 @@ def quantize_tile(x: jax.Array, bits: int, group: int):
     kernel and the fused quantize+pack kernel, which both carry the
     bit-exact parity contract vs ``repro.core.gse.gse_quantize``.
     """
-    x = x.astype(jnp.float32)
+    x = as_f32_exact(x)
     bm, bk = x.shape
     qmax = qmax_for_bits(bits)
     xg = x.reshape(bm, bk // group, group)
     amax = jnp.max(jnp.abs(xg), axis=-1)                  # (BM, BK/G)
     safe = jnp.where(amax > 0, amax, 1.0)
-    e = jnp.ceil(jnp.log2(safe / qmax))
-    e = jnp.where(amax > 0, e, float(EXP_MIN))
+    # exact exponent math (repro.core.gse.ceil_log2/exp2_int): identical in
+    # any fusion context — the cross-program bit-exact parity contract
+    e = ceil_log2(safe / qmax)
+    e = jnp.where(amax > 0, e, EXP_MIN)
     e = jnp.clip(e, EXP_MIN, EXP_MAX)
-    scale = jnp.exp2(e)[..., None]                        # (BM, BK/G, 1)
+    scale = exp2_int(e)[..., None]                        # (BM, BK/G, 1)
     m = jnp.clip(jnp.round(xg / scale), -qmax, qmax)
     return m.reshape(bm, bk), e
 

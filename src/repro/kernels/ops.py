@@ -14,13 +14,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.gse import PackedGSETensor, unpack_exponents
+from repro.core.gse import (PackedGSETensor, _PACK_CHUNK, gse_dequantize_in,
+                            unpack_exponents)
 from repro.kernels.gse_quant import gse_quantize_pallas
-from repro.kernels.gse_quant_pack import (gse_quant_pack_pallas,
+from repro.kernels.gse_quant_pack import (_fit_block, gse_quant_pack_pallas,
                                           gse_quantize_pack as
                                           _gse_quantize_pack)
 from repro.kernels.gse_matmul import (gse_matmul_pallas,
-                                      gse_matmul_packed_pallas)
+                                      gse_matmul_packed_pallas,
+                                      gse_matmul_packed_nt_pallas,
+                                      gse_matmul_packed_tn_pallas)
 from repro.kernels.gse_unpack import gse_unpack_pallas
 from repro.kernels.nf4_dequant import nf4_dequant_pallas
 from repro.kernels import flash_attention_packed as fap
@@ -30,6 +33,16 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def _env_tristate(name: str, default_fn) -> bool:
+    """Shared 1/0/auto env-flag reader for the kernel-path toggles."""
+    env = os.environ.get(name, "auto").lower()
+    if env in ("1", "true", "on"):
+        return True
+    if env in ("0", "false", "off"):
+        return False
+    return default_fn()
+
+
 # uint32 shifts are not lowered by every Mosaic version; the packed kernels
 # can run the identical shift/mask math on bitcast int32 words instead
 # (bit-identical output — see repro.core.gse.pack_unsigned). "auto" enables
@@ -37,12 +50,28 @@ def _on_tpu() -> bool:
 
 
 def int32_shift_fallback() -> bool:
-    env = os.environ.get("REPRO_GSE_INT32_SHIFTS", "auto").lower()
-    if env in ("1", "true", "on"):
-        return True
-    if env in ("0", "false", "off"):
-        return False
-    return _on_tpu()
+    return _env_tristate("REPRO_GSE_INT32_SHIFTS", _on_tpu)
+
+
+def qcd_f32_out() -> bool:
+    """Single reader for REPRO_QCD_F32_OUT (the fp32-GEMM-output ablation of
+    the QCD training path — repro.core.qcd); read at trace time. Any
+    non-empty value enables it (the flag's historical truthiness) EXCEPT
+    the explicit disables 0/false/off, so both =1 and =0 mean what they
+    say alongside the sibling tristate flags."""
+    env = os.environ.get("REPRO_QCD_F32_OUT", "").lower()
+    return env not in ("", "0", "false", "off")
+
+
+def qcd_packed_kernels() -> bool:
+    """Route the packed-residual QCD GEMMs through the Pallas kernels.
+
+    "auto" = TPU only (the jnp dequant fallback is the CPU simulation path
+    and is bit-identical to the fake-quant training math); force with
+    REPRO_QCD_PACKED_KERNELS=1 to exercise the kernel path in interpret
+    mode (tests/benches — fp32 tile-ordered accumulation, no longer
+    bit-identical to the bf16 simulation)."""
+    return _env_tristate("REPRO_QCD_PACKED_KERNELS", _on_tpu)
 
 
 def gse_quantize(x, bits: int = 6, group: int = 32, **block_kw):
@@ -87,6 +116,28 @@ def gse_matmul_packed(a_m, a_e, b_words, b_e, bits: int, group: int = 32,
     block_kw.setdefault("int32_shifts", int32_shift_fallback())
     return gse_matmul_packed_pallas(a_m, a_e, b_words, b_e, bits, group,
                                     interpret=not _on_tpu(), **block_kw)
+
+
+def gse_matmul_packed_nt(a_words, a_e, b_words, b_e, a_bits: int,
+                         b_bits: int, a_group: int = 32, b_group: int = 32,
+                         **block_kw):
+    """Transposed-contraction packed matmul (the dX backward GEMM): both
+    operands arrive as packed word streams, tiles dequantized in VMEM."""
+    block_kw.setdefault("int32_shifts", int32_shift_fallback())
+    return gse_matmul_packed_nt_pallas(a_words, a_e, b_words, b_e, a_bits,
+                                       b_bits, a_group, b_group,
+                                       interpret=not _on_tpu(), **block_kw)
+
+
+def gse_matmul_packed_tn(a_words, a_e, b_words, b_e, a_bits: int,
+                         b_bits: int, a_group: int = 32, b_group: int = 32,
+                         **block_kw):
+    """Token-contraction packed matmul (the dW backward GEMM): contraction
+    over the shared leading axis of two packed operands."""
+    block_kw.setdefault("int32_shifts", int32_shift_fallback())
+    return gse_matmul_packed_tn_pallas(a_words, a_e, b_words, b_e, a_bits,
+                                       b_bits, a_group, b_group,
+                                       interpret=not _on_tpu(), **block_kw)
 
 
 def nf4_dequant(codes, absmax, out_dtype=jnp.bfloat16, **block_kw):
@@ -150,6 +201,127 @@ def flash_attention_packed(q, k_words, k_exp, v_words, v_exp, *,
         q, k_words, k_exp, v_words, v_exp, causal=causal, window=window,
         q_offset=q_offset, is_global=is_global, k_chunk=bk,
         int32_shifts=int32_shift_fallback())
+
+
+# ---------------------------------------------------------------------------
+# QCD packed-residual GEMM dispatchers (the training path, repro.core.qcd).
+#
+# Each takes packed GSE operands (PackedGSETensor — or a raw array for an
+# unquantized operand) and routes: Pallas kernels when qcd_packed_kernels()
+# (TPU, or forced via REPRO_QCD_PACKED_KERNELS=1 for interpret-mode tests),
+# otherwise an exact-dequant jnp fallback whose op sequence is the SAME XLA
+# matmul the fake-quant simulation runs — bit-identical training math, which
+# is what makes the packed/fake-quant A/B parity an array_equal, not an
+# allclose. The kernel path instead follows the ordered-accumulation
+# contract (fp32 tile MACs), bit-exact vs the ref.py oracles.
+# ---------------------------------------------------------------------------
+
+
+def _is_packed(t) -> bool:
+    return isinstance(t, PackedGSETensor)
+
+
+def _rows_packable(p: PackedGSETensor) -> bool:
+    """Per-row word layout (last axis 32-aligned) — reshapeable to the 2-D
+    kernel ABI. The ragged flat-stream layout always takes the fallback."""
+    return p.shape[-1] % _PACK_CHUNK == 0
+
+
+def _words_2d(p: PackedGSETensor):
+    return p.mantissa_words.reshape(-1, p.mantissa_words.shape[-1])
+
+
+def _exps_2d(p: PackedGSETensor):
+    e = unpack_exponents(p.exponent_words, p.exponent_shape)
+    return e.reshape(-1, e.shape[-1])
+
+
+def _deq(t, dtype):
+    """Exact dequant of a packed operand in ``dtype`` (raw arrays pass
+    through) — repro.core.gse.gse_dequantize_in, the fake-quant-identical
+    multiply."""
+    return gse_dequantize_in(t, dtype) if _is_packed(t) else t
+
+
+def _fit(dim: int, want: int, group: int = 1) -> int:
+    return _fit_block(dim, want, multiple=int(np.lcm(_PACK_CHUNK, group)))
+
+
+def qcd_matmul_y(xq, wq, *, compute_dtype, f32_out: bool = False):
+    """Forward Y = Q(X) @ Q(W) from packed operands.
+
+    xq: logical (..., K) grouped/packed along K; wq: logical (N, K) packed
+    along K — the W^T layout the residual stores. Returns (..., N).
+    Kernel route: the fused packed-dequant int8 MXU matmul (weights stream
+    HBM->VMEM at b bits/value; the activation unpacks to a transient int8
+    working array, never to float)."""
+    if (_is_packed(xq) and _is_packed(wq) and qcd_packed_kernels()
+            and _rows_packable(xq) and _rows_packable(wq)
+            and xq.group_size == wq.group_size):
+        k = xq.shape[-1]
+        g = xq.group_size
+        xm = gse_unpack(_words_2d(xq), xq.bits,
+                        bm=_fit_block(int(np.prod(xq.shape[:-1])), 256),
+                        bk=_fit(k, 512))
+        y = gse_matmul_packed(
+            xm, _exps_2d(xq), wq.mantissa_words, _exps_2d(wq), wq.bits, g,
+            bm=_fit_block(xm.shape[0], 128), bn=_fit_block(wq.shape[0], 128),
+            bk=_fit(k, 512, g))
+        return y.reshape(*xq.shape[:-1], -1).astype(compute_dtype)
+    xd = _deq(xq, compute_dtype)
+    wd = _deq(wq, compute_dtype)            # (N, K) -> contract as x @ wd.T
+    if f32_out:
+        return jnp.matmul(xd, wd.T, preferred_element_type=jnp.float32
+                          ).astype(compute_dtype)
+    return jnp.matmul(xd, wd.T)
+
+
+def qcd_matmul_dx(dyq, wq, *, compute_dtype, f32_out: bool = False):
+    """Backward dX = Q(dY) @ Q(W)^T — contraction over N.
+
+    dyq: logical (..., N) grouped/packed along N (raw array when g_bits is
+    None); wq: logical (N, K) packed along K (the saved forward-grouped
+    residual — no per-use re-grouping). Kernel route: the
+    transposed-contraction packed matmul, both operands tile-dequantized in
+    VMEM."""
+    if (_is_packed(dyq) and _is_packed(wq) and qcd_packed_kernels()
+            and _rows_packable(dyq) and _rows_packable(wq)):
+        n, k = wq.shape
+        dx = gse_matmul_packed_nt(
+            _words_2d(dyq), _exps_2d(dyq), wq.mantissa_words, _exps_2d(wq),
+            dyq.bits, wq.bits, a_group=dyq.group_size, b_group=wq.group_size,
+            bm=_fit_block(int(np.prod(dyq.shape[:-1])), 128),
+            bn=_fit(n, 512, dyq.group_size), bk=_fit(k, 128, wq.group_size))
+        return dx.reshape(*dyq.shape[:-1], k).astype(compute_dtype)
+    dyd = _deq(dyq, compute_dtype)
+    wd = _deq(wq, compute_dtype)            # (N, K) == Q(W)^T already
+    if f32_out:
+        return jnp.matmul(dyd, wd, preferred_element_type=jnp.float32
+                          ).astype(compute_dtype)
+    return jnp.matmul(dyd, wd)
+
+
+def qcd_matmul_dw(xq, dyq, *, out_dtype, x_dtype=None, dy_dtype=None):
+    """Backward dW = Q(X)^T @ Q(dY) — contraction over tokens, fp32
+    accumulation (the fake-quant path's preferred_element_type), cast to
+    ``out_dtype``. Leading dims of both operands are flattened. Kernel
+    route: the token-contraction packed matmul."""
+    if (_is_packed(xq) and _is_packed(dyq) and qcd_packed_kernels()
+            and _rows_packable(xq) and _rows_packable(dyq)):
+        k, n = xq.shape[-1], dyq.shape[-1]
+        m = int(np.prod(xq.shape[:-1]))
+        dw = gse_matmul_packed_tn(
+            _words_2d(xq), _exps_2d(xq), _words_2d(dyq), _exps_2d(dyq),
+            xq.bits, dyq.bits, a_group=xq.group_size, b_group=dyq.group_size,
+            bm=_fit_block(m, 512), bn=_fit(n, 128, dyq.group_size),
+            bk=_fit(k, 128, xq.group_size))
+        return dw.astype(out_dtype)
+    xd = _deq(xq, x_dtype or out_dtype)
+    dyd = _deq(dyq, dy_dtype or out_dtype)
+    x2 = xd.reshape(-1, xd.shape[-1])
+    dy2 = dyd.reshape(-1, dyd.shape[-1])
+    return jnp.matmul(x2.T, dy2, preferred_element_type=jnp.float32
+                      ).astype(out_dtype)
 
 
 def gse_linear_packed(x, w_packed: PackedGSETensor, **block_kw):

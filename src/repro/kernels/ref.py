@@ -5,8 +5,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.gse import (EXP_MIN, EXP_MAX, exp2_int, qmax_for_bits,
-                            unpack_mantissas)
+from repro.core.gse import (EXP_MIN, EXP_MAX, as_f32_exact, ceil_log2,
+                            exp2_int, qmax_for_bits, unpack_mantissas)
 from repro.core.nf4 import NF4_CODE, BLOCK
 
 
@@ -15,13 +15,13 @@ def gse_quantize_ref(x: jax.Array, bits: int = 6, group: int = 32):
     repro.core.gse.gse_quantize but returns raw arrays (kernel ABI)."""
     m_dim, k_dim = x.shape
     qmax = qmax_for_bits(bits)
-    xf = x.astype(jnp.float32).reshape(m_dim, k_dim // group, group)
+    xf = as_f32_exact(x).reshape(m_dim, k_dim // group, group)
     amax = jnp.max(jnp.abs(xf), axis=-1)
     safe = jnp.where(amax > 0, amax, 1.0)
-    e = jnp.ceil(jnp.log2(safe / qmax))
-    e = jnp.where(amax > 0, e, float(EXP_MIN))
+    e = ceil_log2(safe / qmax)
+    e = jnp.where(amax > 0, e, EXP_MIN)
     e = jnp.clip(e, EXP_MIN, EXP_MAX)
-    m = jnp.clip(jnp.round(xf / jnp.exp2(e)[..., None]), -qmax, qmax)
+    m = jnp.clip(jnp.round(xf / exp2_int(e)[..., None]), -qmax, qmax)
     return (m.reshape(m_dim, k_dim).astype(jnp.int8), e.astype(jnp.int8))
 
 
@@ -67,6 +67,55 @@ def gse_matmul_packed_ref(a_m, a_e, b_words, b_e, bits: int,
     """Oracle for gse_matmul_packed_pallas: unpack then exact GSE matmul."""
     b_m = gse_unpack_ref(b_words, bits)
     return gse_matmul_ref(a_m, a_e, b_m, b_e, group)
+
+
+def _dequant_rows_ref(words, e, bits: int, group: int):
+    """Unpack + exact dequant of a whole packed operand: (R, C//32*bits)
+    uint32 + (R, C//G) int8 -> fp32 (R, C). Same math as the kernels'
+    ``dequant_packed_tile`` but via the host-side ``unpack_mantissas``."""
+    c = words.shape[-1] // bits * 32
+    m = unpack_mantissas(words, bits, c).astype(jnp.float32)
+    mg = m.reshape(*m.shape[:-1], c // group, group)
+    return (mg * exp2_int(e)[..., None]).reshape(m.shape)
+
+
+def gse_matmul_packed_nt_ref(a_words, a_e, b_words, b_e, a_bits: int,
+                             b_bits: int, group: int = 32, bn: int = 512):
+    """Oracle for gse_matmul_packed_nt_pallas: dequantize both packed
+    operands exactly in fp32 and replay the kernel's contraction schedule —
+    one fp32 dot per ``bn``-wide N tile, tiles accumulated sequentially in
+    ascending order (the ordered-accumulation contract; bit-exact vs the
+    kernel at the same ``bn``)."""
+    m_dim = a_words.shape[0]
+    n_dim = b_words.shape[0]
+    k_dim = b_words.shape[-1] // b_bits * 32
+    adeq = _dequant_rows_ref(a_words, a_e, a_bits, group)   # (M, N)
+    bdeq = _dequant_rows_ref(b_words, b_e, b_bits, group)   # (N, K)
+    bn = min(bn, n_dim)
+    acc = jnp.zeros((m_dim, k_dim), jnp.float32)
+    for n0 in range(0, n_dim, bn):
+        acc = acc + jnp.dot(adeq[:, n0:n0 + bn], bdeq[n0:n0 + bn, :],
+                            preferred_element_type=jnp.float32)
+    return acc
+
+
+def gse_matmul_packed_tn_ref(a_words, a_e, b_words, b_e, a_bits: int,
+                             b_bits: int, group: int = 32, bm: int = 512):
+    """Oracle for gse_matmul_packed_tn_pallas: exact fp32 dequant of both
+    packed operands, then the dim-0 x dim-0 contraction replayed one
+    ``bm``-wide M tile at a time in ascending order."""
+    m_dim = a_words.shape[0]
+    k_dim = a_words.shape[-1] // a_bits * 32
+    n_dim = b_words.shape[-1] // b_bits * 32
+    adeq = _dequant_rows_ref(a_words, a_e, a_bits, group)   # (M, K)
+    bdeq = _dequant_rows_ref(b_words, b_e, b_bits, group)   # (M, N)
+    bm = min(bm, m_dim)
+    acc = jnp.zeros((k_dim, n_dim), jnp.float32)
+    for m0 in range(0, m_dim, bm):
+        acc = acc + jax.lax.dot_general(
+            adeq[m0:m0 + bm], bdeq[m0:m0 + bm], (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+    return acc
 
 
 def nf4_dequant_ref(codes, absmax, out_dtype=jnp.bfloat16):

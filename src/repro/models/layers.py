@@ -284,7 +284,9 @@ def _quantized_bmm(x, w, policy: QuantPolicy):
         return jnp.einsum("eck,ekn->ecn", x, w)
     from repro.core.qcd import quantized_matmul
     f = partial(quantized_matmul, a_bits=policy.a_bits, w_bits=policy.w_bits,
-                g_bits=policy.g_bits, group_size=policy.group_size)
+                g_bits=policy.g_bits, group_size=policy.group_size,
+                residuals_packed=policy.residuals_packed,
+                residual_bits=policy.residual_bits)
     return jax.vmap(lambda a, b: f(a, b))(x, w)
 
 

@@ -38,6 +38,31 @@ def _attn_cache_view(layer_cache):
     return {k: layer_cache[k] for k in _ATTN_CACHE_KEYS if k in layer_cache}
 
 
+def _remat_policy(policy: QuantPolicy):
+    """Checkpoint policy for the layer-stack remat.
+
+    With packed QCD residuals the blocks carry their backward GEMM operands
+    as ``qcd_xq``/``qcd_wq``-named packed word streams (b + 5/group
+    bits/value — repro.core.qcd); saving exactly those across the replay
+    skips the re-quantize+pack of every GEMM input at a storage cost far
+    below one bf16 activation. (§Perf iter 6 measured save_only_these_names
+    WORSE when the named residual was the full bf16 ``qcd_wq`` — packing is
+    what flips the trade.) Legacy fake-quant residuals are full-width, so
+    there the old full-remat posture stays — and partially-quantized
+    ablations (any GEMM bit-width None) fall back to that legacy path,
+    whose full-width ``qcd_wq`` name must NOT be pinned across the replay:
+    the names policy applies only when every QCD GEMM in the model
+    (base a/w bits, and adapter bits when adapters exist) runs packed."""
+    every_gemm_packed = (
+        policy.residuals_packed and policy.fmt == "gse"
+        and policy.a_bits is not None and policy.w_bits is not None
+        and (policy.rank == 0 or policy.adapter_bits is not None))
+    if every_gemm_packed:
+        return jax.checkpoint_policies.save_only_these_names(
+            "qcd_xq", "qcd_wq")
+    return jax.checkpoint_policies.nothing_saveable
+
+
 # --------------------------------------------------------------------------
 # Per-layer init / apply by family
 # --------------------------------------------------------------------------
@@ -204,11 +229,7 @@ def _scan_stack(fz_stack, tr_stack, x, cfg, policy, *, positions,
                 use_rope=use_rope, is_global=ig, enc_kv=enc_kv)
 
         if remat:
-            # (§Perf iter 6 tried save_only_these_names("qcd_wq") to keep
-            # quantized weights across the bwd replay — measured WORSE on
-            # the HLO-walk memory term; reverted to full remat.)
-            run = jax.checkpoint(
-                run, policy=jax.checkpoint_policies.nothing_saveable)
+            run = jax.checkpoint(run, policy=_remat_policy(policy))
         h, new_cache_l = run(h, fz_l, tr_l, cache_l)
         return h, new_cache_l
 
@@ -392,8 +413,7 @@ def _scan_stack_encdec(fz, tr, x, enc_out, cfg, policy, *, positions,
                 nc = dict(nc, **{k: cache_l[k] for k in cross_keys})
             return h, nc
         if remat:
-            run = jax.checkpoint(
-                run, policy=jax.checkpoint_policies.nothing_saveable)
+            run = jax.checkpoint(run, policy=_remat_policy(policy))
         h, nc = run(h, fz_l, tr_l, cache_l)
         return h, nc
 

@@ -62,27 +62,37 @@ def _microbatch(batch, i, n):
 def accumulate_grads(train, frozen, batch, cfg: ModelConfig,
                      policy: QuantPolicy, accum_steps: int):
     """Mean loss/grads over ``accum_steps`` microbatches via lax.scan —
-    activations live for one microbatch only (DESIGN §5 memory posture)."""
+    activations live for one microbatch only (DESIGN §5 memory posture).
+
+    With ``policy.residuals_packed`` the per-microbatch backward residuals
+    the scan body carries between its forward and backward are the packed
+    ``qcd_xq``/``qcd_wq`` word streams (b + 5/group bits per value — the
+    remat policy in repro.models.model saves exactly those names), so the
+    live residual footprint of a microbatch is the packed bytes
+    ``benchmarks/memory_model.py`` reports, not bf16 tensors.
+
+    Returns the same metrics dict on both paths: ``tokens`` accumulates
+    across microbatches so it matches the single-shot count."""
     loss_grad = jax.value_and_grad(lm_loss, has_aux=True)
     if accum_steps <= 1:
         (loss, aux), grads = loss_grad(train, frozen, batch, cfg, policy)
         return loss, aux, grads
 
     def body(carry, i):
-        g_acc, l_acc = carry
+        g_acc, l_acc, t_acc = carry
         mb = _microbatch(batch, i, accum_steps)
-        (loss, _), grads = loss_grad(train, frozen, mb, cfg, policy)
+        (loss, aux), grads = loss_grad(train, frozen, mb, cfg, policy)
         g_acc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32),
                              g_acc, grads)
-        return (g_acc, l_acc + loss), None
+        return (g_acc, l_acc + loss, t_acc + aux["tokens"]), None
 
     g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), train)
-    (g_sum, l_sum), _ = jax.lax.scan(body, (g0, jnp.zeros(())),
-                                     jnp.arange(accum_steps))
+    (g_sum, l_sum, t_sum), _ = jax.lax.scan(
+        body, (g0, jnp.zeros(()), jnp.zeros(())), jnp.arange(accum_steps))
     inv = 1.0 / accum_steps
     grads = jax.tree.map(lambda g: g * inv, g_sum)
     loss = l_sum * inv
-    return loss, {"loss": loss}, grads
+    return loss, {"loss": loss, "tokens": t_sum}, grads
 
 
 def clip_by_global_norm(grads, max_norm: float):

@@ -74,6 +74,71 @@ def test_gse_matmul_parity_packed_and_unpacked(mkn, bits):
         np.testing.assert_array_equal(np.asarray(y_p), ref_out)
 
 
+def _packed_operand(seed, shape, bits, group=32):
+    """Quantize along the last axis and return (words, int8 exps)."""
+    from repro.core.gse import gse_pack, gse_quantize, unpack_exponents
+    x = jax.random.normal(jax.random.PRNGKey(seed), shape) * 0.4
+    p = gse_pack(gse_quantize(x, bits, group))
+    return (p.mantissa_words,
+            unpack_exponents(p.exponent_words, p.exponent_shape))
+
+
+@pytest.mark.parametrize("bits", [(4, 4), (6, 8), (8, 5)])
+@pytest.mark.parametrize("mnk", [(32, 128, 64), (64, 256, 128)])
+def test_gse_matmul_packed_nt_vs_oracle(bits, mnk):
+    """dX-shaped transposed-contraction packed matmul (both operands
+    packed, tile-local dequant) is bit-exact vs the ref oracle at matching
+    contraction tiling — incl. mixed a/b bit-widths."""
+    from repro.kernels.gse_matmul import gse_matmul_packed_nt_pallas
+    ab, bb = bits
+    m, n, k = mnk
+    aw, ae = _packed_operand(1 + ab, (m, n), ab)      # dY along N
+    bw, be = _packed_operand(2 + bb, (n, k), bb)      # W^T along K
+    y1 = gse_matmul_packed_nt_pallas(aw, ae, bw, be, ab, bb, 32, 32,
+                                     bm=min(32, m), bn=64, bk=64)
+    y2 = ref.gse_matmul_packed_nt_ref(aw, ae, bw, be, ab, bb, 32, bn=64)
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+
+
+@pytest.mark.parametrize("bits", [(4, 4), (6, 8)])
+@pytest.mark.parametrize("mnk", [(128, 64, 128), (256, 128, 64)])
+def test_gse_matmul_packed_tn_vs_oracle(bits, mnk):
+    """dW-shaped token-contraction packed matmul vs the ref oracle —
+    contraction over the shared leading axis of two packed operands."""
+    from repro.kernels.gse_matmul import gse_matmul_packed_tn_pallas
+    ab, bb = bits
+    m, n, k = mnk
+    aw, ae = _packed_operand(3 + ab, (m, k), ab)      # X along K
+    bw, be = _packed_operand(4 + bb, (m, n), bb)      # dY along N
+    y1 = gse_matmul_packed_tn_pallas(aw, ae, bw, be, ab, bb, 32, 32,
+                                     bm=64, bn=min(64, n), bk=64)
+    y2 = ref.gse_matmul_packed_tn_ref(aw, ae, bw, be, ab, bb, 32, bm=64)
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+def test_transposed_packed_matmul_int32_shift_parity(bits):
+    """The bitcast-int32 shift fallback is bit-identical on both new
+    backward kernels (transposed-contraction and token-contraction)."""
+    from repro.kernels.gse_matmul import (gse_matmul_packed_nt_pallas,
+                                          gse_matmul_packed_tn_pallas)
+    aw, ae = _packed_operand(11, (32, 128), bits)
+    bw, be = _packed_operand(12, (128, 64), bits)
+    kw = dict(bm=32, bn=64, bk=64)
+    y1 = gse_matmul_packed_nt_pallas(aw, ae, bw, be, bits, bits, 32, 32,
+                                     **kw)
+    y2 = gse_matmul_packed_nt_pallas(aw, ae, bw, be, bits, bits, 32, 32,
+                                     int32_shifts=True, **kw)
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+    xw, xe = _packed_operand(13, (128, 64), bits)
+    dw, de = _packed_operand(14, (128, 96), bits)
+    y1 = gse_matmul_packed_tn_pallas(xw, xe, dw, de, bits, bits, 32, 32,
+                                     bm=64, bn=32, bk=32)
+    y2 = gse_matmul_packed_tn_pallas(xw, xe, dw, de, bits, bits, 32, 32,
+                                     bm=64, bn=32, bk=32, int32_shifts=True)
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+
+
 @pytest.mark.parametrize("shape", [(64, 128), (32, 256), (8, 64)])
 @pytest.mark.parametrize("bits", [2, 5, 6, 8])
 def test_gse_quant_pack_kernel_exact(shape, bits):

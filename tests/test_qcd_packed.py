@@ -1,0 +1,285 @@
+"""Packed QCD backward residuals (paper Sec. 2.3 on the real storage
+substrate): bit-identical A/B parity vs the fake-quant simulation, packed
+residual leaves in the vjp, the remat save-names policy, and the
+QuantPolicy knobs."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+# Real hypothesis when installed; deterministic reduced sweep otherwise
+# (keeps collection green in bare environments -- see _hypothesis_compat).
+from _hypothesis_compat import given, settings, st
+
+from repro.core.gse import gse_dequantize_in, gse_fake_quant, gse_quantize
+from repro.core.policy import QuantPolicy
+from repro.core.qcd import quantized_matmul
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.train.step import accumulate_grads, lm_loss
+
+BITS = [4, 6, 8]
+# (k, group): 128/32 is the aligned per-row layout; 40/32 degrades to the
+# ragged flat-stream pack with effective group 20 (largest divisor <= 32)
+K_GROUP = [(128, 32), (40, 32)]
+
+CFG = ModelConfig(name="t", family="dense", n_layers=2, d_model=64,
+                  n_heads=4, n_kv_heads=2, d_ff=256, vocab=64,
+                  vocab_pad_multiple=32, remat=True)
+POL_FAKE = QuantPolicy.gsq(8, rank=8)
+POL_PACK = dataclasses.replace(POL_FAKE, residuals_packed=True)
+
+
+def _pair(m, k, n, seed=0, dtype=jnp.float32):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (m, k)).astype(dtype)
+    w = (jax.random.normal(jax.random.PRNGKey(seed + 1), (k, n)) * 0.1
+         ).astype(dtype)
+    return x, w
+
+
+def _grads(x, w, ct, bits, group, packed, residual_bits=None):
+    y, vjp = jax.vjp(
+        lambda a, b: quantized_matmul(a, b, bits, bits, bits, group,
+                                      packed, residual_bits), x, w)
+    dx, dw = vjp(ct)
+    return y, dx, dw
+
+
+def _assert_all_equal(a, b):
+    for u, v in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(u, np.float32),
+                                      np.asarray(v, np.float32))
+
+
+# ---------------- bit-identical A/B parity vs fake-quant ------------------
+
+@pytest.mark.parametrize("bits", BITS)
+@pytest.mark.parametrize("k,group", K_GROUP)
+def test_packed_parity_bit_identical(bits, k, group):
+    """Forward output AND both backward GEMM outputs are bit-identical to
+    the fake-quant simulation at matching bits — aligned and ragged-K
+    (flat-stream) residual layouts alike."""
+    x, w = _pair(32, k, 64, seed=bits)
+    ct = jax.random.normal(jax.random.PRNGKey(9), (32, 64))
+    _assert_all_equal(_grads(x, w, ct, bits, group, False),
+                      _grads(x, w, ct, bits, group, True))
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+def test_packed_parity_bf16(bits):
+    """Same parity in the training dtype (bf16 activations/weights)."""
+    x, w = _pair(64, 128, 32, seed=bits, dtype=jnp.bfloat16)
+    ct = jax.random.normal(jax.random.PRNGKey(3), (64, 32)
+                           ).astype(jnp.bfloat16)
+    _assert_all_equal(_grads(x, w, ct, bits, 32, False),
+                      _grads(x, w, ct, bits, 32, True))
+
+
+@settings(max_examples=20, deadline=None)
+@given(bits=st.sampled_from(BITS), seed=st.integers(0, 2 ** 16),
+       scale=st.floats(1e-3, 1e2))
+def test_property_backward_parity(bits, seed, scale):
+    """Property sweep: packed-residual vjp vs the fake-quant oracle across
+    magnitudes spanning the exponent range."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (16, 64)) * scale
+    w = jax.random.normal(jax.random.PRNGKey(seed + 1), (64, 32)) * 0.1
+    ct = jax.random.normal(jax.random.PRNGKey(seed + 2), (16, 32))
+    _assert_all_equal(_grads(x, w, ct, bits, 32, False),
+                      _grads(x, w, ct, bits, 32, True))
+
+
+def test_f32_out_env_parity(monkeypatch):
+    monkeypatch.setenv("REPRO_QCD_F32_OUT", "1")
+    x, w = _pair(16, 128, 32, seed=7)
+    ct = jnp.ones((16, 32))
+    _assert_all_equal(_grads(x, w, ct, 6, 32, False),
+                      _grads(x, w, ct, 6, 32, True))
+
+
+def test_dequantize_in_matches_fake_quant():
+    """The dtype-matched dequant of the working/packed forms reproduces
+    gse_fake_quant bit-for-bit — the identity the whole parity rests on."""
+    for dtype in (jnp.float32, jnp.bfloat16):
+        x = (jax.random.normal(jax.random.PRNGKey(0), (32, 128)) * 3.0
+             ).astype(dtype)
+        t = gse_quantize(x, 6, 32)
+        np.testing.assert_array_equal(
+            np.asarray(gse_dequantize_in(t, dtype), np.float32),
+            np.asarray(gse_fake_quant(x, 6, 32), np.float32))
+
+
+# ---------------- residual wire format --------------------------------- --
+
+def test_vjp_residuals_are_packed_words_only():
+    """With residuals_packed=True the saved-for-backward set contains NO
+    full-precision tensors: every residual leaf is a uint32 word stream
+    (the zero-length dtype token is the only float leaf, and it is empty)."""
+    x, w = _pair(32, 128, 64)
+    _, vjp = jax.vjp(
+        lambda a, b: quantized_matmul(a, b, 6, 6, 6, 32, True), x, w)
+    leaves = jax.tree_util.tree_leaves(vjp)
+    float_leaves = [l for l in leaves
+                    if jnp.issubdtype(l.dtype, jnp.floating) and l.size]
+    assert not float_leaves, [(l.shape, l.dtype) for l in float_leaves]
+    words = [l for l in leaves if l.dtype == jnp.uint32]
+    assert words, "expected packed word-stream residuals"
+    # x residual: (32, 128) at 6 bits -> (32, 128/32*6) words
+    assert any(l.shape == (32, 24) for l in words)
+
+
+def test_vjp_residual_bytes_match_bits_per_value():
+    """Residual words scale with b: the (M, K) activation residual holds
+    K/32*b words per row — the b + 5/group bits/value claim as shapes."""
+    x, w = _pair(32, 128, 64)
+    for bits in (4, 8):
+        _, vjp = jax.vjp(lambda a, b: quantized_matmul(
+            a, b, bits, bits, bits, 32, True), x, w)
+        words = [l for l in jax.tree_util.tree_leaves(vjp)
+                 if l.dtype == jnp.uint32]
+        assert any(l.shape == (32, 128 // 32 * bits) for l in words)
+
+
+def test_residual_bits_knob():
+    """residual_bits stores the residuals at a lower width than the
+    forward operands: forward output is unchanged (still computed at the
+    operand bits), grads stay finite/aligned but are no longer
+    bit-identical, and the word streams shrink."""
+    x, w = _pair(64, 128, 32, seed=11)
+    ct = jax.random.normal(jax.random.PRNGKey(12), (64, 32))
+    y8, dx8, dw8 = _grads(x, w, ct, 8, 32, True)
+    y4, dx4, dw4 = _grads(x, w, ct, 8, 32, True, residual_bits=4)
+    np.testing.assert_array_equal(np.asarray(y8), np.asarray(y4))
+    assert bool(jnp.all(jnp.isfinite(dx4))) and bool(
+        jnp.all(jnp.isfinite(dw4)))
+    cos = float(jnp.sum(dw4 * dw8) /
+                (jnp.linalg.norm(dw4) * jnp.linalg.norm(dw8)))
+    assert cos > 0.95, cos
+    _, vjp4 = jax.vjp(lambda a, b: quantized_matmul(
+        a, b, 8, 8, 8, 32, True, 4), x, w)
+    words4 = sum(l.size for l in jax.tree_util.tree_leaves(vjp4)
+                 if l.dtype == jnp.uint32)
+    _, vjp8 = jax.vjp(lambda a, b: quantized_matmul(
+        a, b, 8, 8, 8, 32, True), x, w)
+    words8 = sum(l.size for l in jax.tree_util.tree_leaves(vjp8)
+                 if l.dtype == jnp.uint32)
+    assert words4 < words8
+
+
+def test_partial_quant_falls_back_to_legacy():
+    """a_bits=None ablations keep the legacy full-width residual path even
+    when residuals_packed is requested (documented degradation)."""
+    x, w = _pair(16, 64, 32)
+    y0 = quantized_matmul(x, w, None, None, None, 32, True)
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(x @ w),
+                               rtol=2e-6, atol=2e-6)
+
+
+# ---------------- kernel-route dispatch (interpret mode) ------------------
+
+def test_forced_kernel_route_close_to_fallback(monkeypatch):
+    """REPRO_QCD_PACKED_KERNELS=1 sends fwd/dX/dW through the Pallas
+    kernels (interpret on CPU). Accumulation differs (fp32 ordered tiles vs
+    one XLA GEMM) so parity is allclose here, not array_equal."""
+    x, w = _pair(64, 128, 64, seed=21)
+    ct = jax.random.normal(jax.random.PRNGKey(22), (64, 64))
+    ref = _grads(x, w, ct, 6, 32, True)
+    monkeypatch.setenv("REPRO_QCD_PACKED_KERNELS", "1")
+    ker = _grads(x, w, ct, 6, 32, True)
+    for a, b in zip(ref, ker):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-5)
+
+
+# ---------------- model integration: remat policy + sharding --------------
+
+def _batch(b=4, t=32, seed=1):
+    toks = jax.random.randint(jax.random.PRNGKey(seed), (b, t), 4, 64)
+    return {"tokens": toks, "labels": jnp.roll(toks, -1, axis=1),
+            "loss_mask": jnp.ones((b, t), jnp.float32)}
+
+
+def test_train_grads_bit_identical_and_residuals_packed():
+    """Acceptance: on the tier-1-style config with remat active, a full
+    loss+grad step under residuals_packed=True is bit-identical to the
+    fake-quant policy, and the saved-for-backward set contains the packed
+    qcd word streams (uint32, stacked per layer) with no full-precision
+    QCD residual leaves (nothing activation-residual-sized in float)."""
+    fz, tr = M.init_model(jax.random.PRNGKey(0), CFG, POL_FAKE)
+    batch = _batch()
+    l0, a0, g0 = accumulate_grads(tr, fz, batch, CFG, POL_FAKE, 1)
+    l1, a1, g1 = accumulate_grads(tr, fz, batch, CFG, POL_PACK, 1)
+    assert float(l0) == float(l1)
+    assert float(a0["tokens"]) == float(a1["tokens"])
+    for a, b in zip(jax.tree.leaves(g0), jax.tree.leaves(g1)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    _, vjp = jax.vjp(lambda t: lm_loss(t, fz, batch, CFG, POL_PACK)[0], tr)
+    leaves = jax.tree_util.tree_leaves(vjp)
+    words = [l for l in leaves if l.dtype == jnp.uint32]
+    assert words, "remat must save the packed qcd_xq/qcd_wq streams"
+    # stacked (L, ...) word streams from the scanned layers
+    assert any(l.ndim >= 2 and l.shape[0] == CFG.n_layers for l in words)
+    # no float leaf as large as the smallest per-GEMM activation residual
+    # (B*T, d_ff) — layer-boundary carries (L, B, T, d_model) are smaller
+    # by construction in this config
+    res_size = 4 * 32 * CFG.d_ff
+    big = [l.shape for l in leaves
+           if jnp.issubdtype(l.dtype, jnp.floating) and l.size >= res_size]
+    assert not big, big
+
+
+def test_layers_grad_flow_with_remat_policy():
+    """Grad flow through models.layers GEMMs under an explicit
+    jax.checkpoint with the packed-residual save-names policy: finite and
+    bit-identical to the legacy full-remat fake-quant baseline."""
+    from repro.models import layers as L
+    fz, tr = L.mlp_init(jax.random.PRNGKey(0), CFG, POL_FAKE)
+    x = (jax.random.normal(jax.random.PRNGKey(1), (4, 32, CFG.d_model))
+         ).astype(jnp.bfloat16)
+
+    def make_loss(pol):
+        body = jax.checkpoint(lambda t, x: L.mlp_apply(fz, t, x, CFG, pol),
+                              policy=M._remat_policy(pol))
+
+        def loss(t):
+            return jnp.sum(body(t, x).astype(jnp.float32) ** 2)
+        return loss
+
+    g0 = jax.grad(make_loss(POL_FAKE))(tr)
+    g1 = jax.grad(make_loss(POL_PACK))(tr)
+    for a, b in zip(jax.tree.leaves(g0), jax.tree.leaves(g1)):
+        assert bool(jnp.all(jnp.isfinite(b)))
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_moe_quantized_bmm_packed():
+    """The vmapped expert GEMMs (MoE path) run the packed residual path
+    under vmap — forward and grads bit-identical to fake-quant."""
+    from repro.models.layers import _quantized_bmm
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 16, 64))
+    w = jax.random.normal(jax.random.PRNGKey(1), (4, 64, 32)) * 0.1
+    y0 = _quantized_bmm(x, w, POL_FAKE)
+    y1 = _quantized_bmm(x, w, POL_PACK)
+    np.testing.assert_array_equal(np.asarray(y0), np.asarray(y1))
+    g0 = jax.grad(lambda a: jnp.sum(_quantized_bmm(a, w, POL_FAKE)))(x)
+    g1 = jax.grad(lambda a: jnp.sum(_quantized_bmm(a, w, POL_PACK)))(x)
+    np.testing.assert_array_equal(np.asarray(g0), np.asarray(g1))
+
+
+def test_residual_sharding_rule_resolves():
+    """The qcd_residual pspec rule annotates the word-planar residual
+    leaves under a mesh without breaking compile (single-device mesh: the
+    constraint resolves to replicated via the divisibility guard)."""
+    import numpy as onp
+    from jax.sharding import Mesh
+    from repro.distributed.sharding import ShardingRules, use_sharding
+    mesh = Mesh(onp.asarray(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+    x, w = _pair(32, 128, 64)
+    with use_sharding(mesh, ShardingRules.single_pod()):
+        y, vjp = jax.vjp(
+            lambda a, b: quantized_matmul(a, b, 6, 6, 6, 32, True), x, w)
+        dx, dw = vjp(jnp.ones_like(y))
+    assert dx.shape == x.shape and dw.shape == w.shape

@@ -50,6 +50,18 @@ def test_accum_invariance():
             assert cos > 0.995, cos
 
 
+def test_accum_tokens_metric_matches_single_shot():
+    """The scan path accumulates the token count across microbatches so
+    metrics match the accum_steps<=1 path (it used to drop the key)."""
+    fz, tr = _mk()
+    batch = _batch(b=8)
+    _, aux1, _ = accumulate_grads(tr, fz, batch, CFG, POL, 1)
+    _, aux4, _ = accumulate_grads(tr, fz, batch, CFG, POL, 4)
+    assert set(aux4) == set(aux1)
+    assert float(aux4["tokens"]) == pytest.approx(float(aux1["tokens"]))
+    assert float(aux4["tokens"]) == 8 * 64
+
+
 def test_clip_by_global_norm():
     g = {"a": jnp.full((4,), 10.0)}
     clipped, gn = clip_by_global_norm(g, 1.0)
