@@ -5,6 +5,7 @@ derived bytes/value. Pallas-interpret timings are not meaningful wall-clock
 """
 from __future__ import annotations
 
+import os
 import time
 
 import jax
@@ -171,6 +172,45 @@ def run(smoke: bool = False):
     rows.append(csv_row(
         f"kernel/packed_kv_decode_roundtrip_s{s_max}_b{kb}", usr,
         f"transient_unpacked={full_bytes}"))
+
+    # GQA decode step through the ops dispatcher, both routes, at the
+    # shape above (heads/kvh = gqa ratio 2) with a TRACED q_offset — the
+    # decode scan's cache["index"]. The kernel row runs the Pallas path
+    # (scalar-prefetch offset + GQA grid) in interpret mode: correctness
+    # path only, not wall-representative; the fallback row is the jnp
+    # CPU serving path. Both run in --smoke so CI exercises the new grids
+    # every PR.
+    from repro.kernels import ops as _ops
+    offt = jnp.asarray(off, jnp.int32)
+
+    def _disp(route):
+        os.environ["REPRO_FAP_ROUTE"] = route
+
+        @jax.jit
+        def step(q, kw, ke, vw, ve, o):
+            return _ops.flash_attention_packed(q, kw, ke, vw, ve,
+                                               causal=True, q_offset=o,
+                                               bk=bk)
+        return step
+
+    prev_route = os.environ.get("REPRO_FAP_ROUTE")
+    try:
+        us_k = _time(_disp("kernel"), qd, kwp, kep, vwp, vep, offt, iters=3)
+        assert _ops.last_fap_route()[0] == "kernel"
+        us_j = _time(_disp("fallback"), qd, kwp, kep, vwp, vep, offt,
+                     iters=3)
+    finally:
+        if prev_route is None:
+            os.environ.pop("REPRO_FAP_ROUTE", None)
+        else:
+            os.environ["REPRO_FAP_ROUTE"] = prev_route
+    rows.append(csv_row(
+        f"kernel/packed_kv_decode_gqa_kernel_interpret_s{s_max}_b{kb}", us_k,
+        f"correctness-path-only scalar-prefetch-offset "
+        f"gqa_ratio={heads // kvh} fallback_us={us_j:.0f}"))
+    rows.append(csv_row(
+        f"kernel/packed_kv_decode_gqa_fallback_s{s_max}_b{kb}", us_j,
+        f"gqa_ratio={heads // kvh} traced-offset"))
 
     # fused packed-dequant matmul, interpret mode (correctness path)
     xa = jax.random.normal(key, (128, 512))

@@ -31,11 +31,29 @@ the fused kernel is **bit-identical** to unpack-everything-then-
 ``flash_attention_pallas`` at the same tiling (the ordered-accumulation
 contract; oracle in ``repro.kernels.ref``).
 
-:func:`flash_attention_packed_jnp` is the GQA-aware jnp fallback
-(interpret/CPU serving path): a ``lax.scan`` over KV tiles that unpacks one
-(B, bk, Kv) tile per step — tile-local like the kernel, trace-safe
-``q_offset``/``is_global`` (decode), ragged sequence lengths via masked
-padding.
+The kernel serves the real decode workload directly:
+
+* ``q_offset`` is a **scalar-prefetch** operand
+  (``pltpu.PrefetchScalarGridSpec``): the causal/window mask reads the
+  offset from SMEM, so the traced ``cache["index"]`` a decode scan carries
+  reaches the kernel without retracing or falling back to jnp.
+* **GQA grid**: q arrives folded by kv-head as ``(B*Kv, G, T, D)`` and the
+  kernel walks all ``G`` query heads of a group against each packed K/V
+  tile — every packed plane row is read (and dequantized) exactly once per
+  kv-head, never expanded ``G``-fold in memory.
+* Optional **fp tail rows** (``k_tail``/``v_tail``): the current decode
+  step's not-yet-quantized k/v, attended after the packed tiles at
+  positions ``q_offset + arange(Tt)`` while packed positions ``>=
+  q_offset`` are masked. This is the quantize-after-attend append: the
+  cache stores the quantized rows, but the current token attends to its
+  own k/v at full precision — exactly what the round-trip A/B path sees.
+
+:func:`flash_attention_packed_jnp` is the jnp fallback (interpret/CPU
+serving path, plus traced ``is_global`` and ragged S): a ``lax.scan`` over
+KV tiles that unpacks one (B, bk, Kv) tile per step — tile-local like the
+kernel, same tile order and float sequence (bit-identical at matching
+tiles), trace-safe ``q_offset``/``is_global``, ragged sequence lengths via
+masked padding, and the same optional fp tail step.
 """
 from __future__ import annotations
 
@@ -116,15 +134,49 @@ def dequant_kv_rows(words: jax.Array, exps: jax.Array, head_dim: int,
 
 
 # ---------------------------------------------------------------------------
-# Pallas kernel: (BH, T, D) q against (BH, S, ·) packed planes.
+# Pallas kernel: (BKv, G, T, D) q against (BKv, S, ·) packed planes.
+# q_offset rides in SMEM (scalar prefetch); optional fp tail rows close the
+# quantize-after-attend append (decode).
 # ---------------------------------------------------------------------------
 
-def _flash_packed_kernel(q_ref, kw_ref, ke_ref, vw_ref, ve_ref, o_ref,
-                         m_scr, l_scr, acc_scr, *, head_dim: int, bq: int,
-                         bk: int, k_steps: int, causal: bool, window: int,
-                         q_offset: int, scale: float, int32_shifts: bool):
+def _group_mask(mask, groups: int):
+    """Repeat a (bq, bk) tile mask over the q-head group axis -> (G*bq, bk).
+    All heads of a group share positions, so the mask is position-only."""
+    if mask is None or groups == 1:
+        return mask
+    return jnp.broadcast_to(mask[None], (groups, *mask.shape)).reshape(
+        groups * mask.shape[0], mask.shape[1])
+
+
+def tail_position_mask(bq: int, tail_len: int, qi, causal: bool,
+                       window: int, q_offset, is_global=None):
+    """(bq, tail_len) mask for the fp tail rows, which sit at absolute
+    positions ``q_offset + arange(tail_len)`` (the current decode step's
+    own tokens). Shared by the kernel and the jnp fallback."""
+    qpos = q_offset + qi * bq + jax.lax.broadcasted_iota(
+        jnp.int32, (bq, tail_len), 0)
+    tpos = q_offset + jax.lax.broadcasted_iota(
+        jnp.int32, (bq, tail_len), 1)
+    mask = jnp.ones((bq, tail_len), jnp.bool_)
+    if causal:
+        mask = mask & (tpos <= qpos)
+    if window:
+        local = tpos > qpos - window
+        mask = mask & (local if is_global is None else (local | is_global))
+    return mask
+
+
+def _flash_packed_kernel(qoff_ref, q_ref, kw_ref, ke_ref, vw_ref, ve_ref,
+                         *rest, head_dim: int, groups: int, bq: int,
+                         bk: int, k_steps: int, tail_len: int, causal: bool,
+                         window: int, scale: float, int32_shifts: bool):
+    if tail_len:
+        kt_ref, vt_ref, o_ref, m_scr, l_scr, acc_scr = rest
+    else:
+        o_ref, m_scr, l_scr, acc_scr = rest
     qi = pl.program_id(1)
     ki = pl.program_id(2)
+    q_offset = qoff_ref[0]                    # SMEM scalar (traced decode)
 
     @pl.when(ki == 0)
     def _init():
@@ -138,34 +190,74 @@ def _flash_packed_kernel(q_ref, kw_ref, ke_ref, vw_ref, ve_ref, o_ref,
                         int32_shifts=int32_shifts)          # (bk, D) fp32
     v = dequant_kv_rows(vw_ref[0], ve_ref[0], head_dim,
                         int32_shifts=int32_shifts)
-    q = q_ref[0].astype(jnp.float32)                        # (bq, D)
+    q = q_ref[0].reshape(groups * bq, head_dim).astype(jnp.float32)
     mask = tile_position_mask(bq, bk, qi, ki, causal, window, q_offset)
-    online_softmax_update(q, k, v, mask, m_scr, l_scr, acc_scr, scale)
+    if tail_len:
+        # tail rows own positions >= q_offset; the packed planes only the
+        # history (rows there may hold the already-quantized append)
+        kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        hist = kpos < q_offset
+        mask = hist if mask is None else mask & hist
+
+        # the fp tail joins the LAST packed tile's update: one score GEMM
+        # of bk + Tt columns — the tile shape stays non-degenerate (a
+        # Tt-column GEMM reduces in a different order than the wide one,
+        # which would break kernel-vs-fallback bit parity)
+        @pl.when(ki < k_steps - 1)
+        def _update():
+            online_softmax_update(q, k, v, _group_mask(mask, groups),
+                                  m_scr, l_scr, acc_scr, scale)
+
+        @pl.when(ki == k_steps - 1)
+        def _last_with_tail():
+            kt = kt_ref[0].astype(jnp.float32)              # (Tt, D)
+            vt = vt_ref[0].astype(jnp.float32)
+            tmask = tail_position_mask(bq, tail_len, qi, causal, window,
+                                       q_offset)
+            online_softmax_update(
+                q, jnp.concatenate([k, kt]), jnp.concatenate([v, vt]),
+                _group_mask(jnp.concatenate([mask, tmask], axis=1), groups),
+                m_scr, l_scr, acc_scr, scale)
+    else:
+        online_softmax_update(q, k, v, _group_mask(mask, groups), m_scr,
+                              l_scr, acc_scr, scale)
 
     @pl.when(ki == k_steps - 1)
     def _store():
-        o_ref[0] = (acc_scr[...] /
-                    jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+        o = acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = o.reshape(groups, bq, head_dim).astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("causal", "window", "q_offset", "bq",
-                                    "bk", "interpret", "int32_shifts"))
+                   static_argnames=("causal", "window", "bq", "bk",
+                                    "interpret", "int32_shifts"))
 def flash_attention_packed_pallas(q, k_words, k_exp, v_words, v_exp,
                                   causal: bool = True, window: int = 0,
-                                  q_offset: int = 0, bq: int = DEFAULT_BQ,
-                                  bk: int = DEFAULT_BK,
-                                  interpret: bool = True,
+                                  q_offset=0, bq: int = DEFAULT_BQ,
+                                  bk: int = DEFAULT_BK, k_tail=None,
+                                  v_tail=None, interpret: bool = True,
                                   int32_shifts: bool = False):
-    """q (BH, T, D) float; k/v planes (BH, S, W) uint32 + (BH, S, G) int8
-    (row-planar packed layout) -> (BH, T, D).
+    """q (BH, T, D) float (MHA) or (B*Kv, G, T, D) (GQA, folded by
+    kv-head); k/v planes (BH|B*Kv, S, W) uint32 + (·, S, G) int8
+    (row-planar packed layout) -> same leading layout as q.
 
-    GQA callers fold/expand heads like ``flash_attention_pallas``;
-    ``q_offset`` is static here (the decode path threads traced offsets
-    through :func:`flash_attention_packed_jnp`; a TPU decode deployment
-    would move it to scalar prefetch).
+    ``q_offset`` may be a python int **or a traced scalar** (the decode
+    scan's ``cache["index"]``): it is threaded into the kernel via scalar
+    prefetch and the position masks read it from SMEM. On the GQA grid the
+    q block walks its whole head group against each packed K/V tile, so
+    every plane row is dequantized once per kv-head (never expanded).
+    ``k_tail``/``v_tail`` (·, Tt, D) fp rows, when given, are attended
+    *after* the packed tiles at positions ``q_offset + arange(Tt)`` while
+    packed positions ``>= q_offset`` are masked — the quantize-after-attend
+    decode append.
     """
-    bh, t, d = q.shape
+    if q.ndim == 3:                           # MHA layout: group size 1
+        o = flash_attention_packed_pallas(
+            q[:, None], k_words, k_exp, v_words, v_exp, causal=causal,
+            window=window, q_offset=q_offset, bq=bq, bk=bk, k_tail=k_tail,
+            v_tail=v_tail, interpret=interpret, int32_shifts=int32_shifts)
+        return o[:, 0]
+    bkv, groups, t, d = q.shape
     s_len = k_words.shape[1]
     wpr, gexp = k_words.shape[-1], k_exp.shape[-1]
     assert kv_row_bits(wpr, d) and v_words.shape[-1] == wpr, (
@@ -174,31 +266,46 @@ def flash_attention_packed_pallas(q, k_words, k_exp, v_words, v_exp,
     bk = min(bk, s_len)
     assert t % bq == 0 and s_len % bk == 0, (t, bq, s_len, bk)
     k_steps = s_len // bk
-    grid = (bh, t // bq, k_steps)
+    tail_len = 0 if k_tail is None else k_tail.shape[1]
+    grid = (bkv, t // bq, k_steps)
     kernel = functools.partial(
-        _flash_packed_kernel, head_dim=d, bq=bq, bk=bk, k_steps=k_steps,
-        causal=causal, window=window, q_offset=q_offset, scale=d ** -0.5,
-        int32_shifts=int32_shifts)
+        _flash_packed_kernel, head_dim=d, groups=groups, bq=bq, bk=bk,
+        k_steps=k_steps, tail_len=tail_len, causal=causal, window=window,
+        scale=d ** -0.5, int32_shifts=int32_shifts)
     from jax.experimental.pallas import tpu as pltpu
+    in_specs = [
+        pl.BlockSpec((1, groups, bq, d), lambda b, i, j, off: (b, 0, i, 0)),
+        pl.BlockSpec((1, bk, wpr), lambda b, i, j, off: (b, j, 0)),
+        pl.BlockSpec((1, bk, gexp), lambda b, i, j, off: (b, j, 0)),
+        pl.BlockSpec((1, bk, wpr), lambda b, i, j, off: (b, j, 0)),
+        pl.BlockSpec((1, bk, gexp), lambda b, i, j, off: (b, j, 0)),
+    ]
+    operands = [q, k_words, k_exp, v_words, v_exp]
+    if tail_len:
+        in_specs += [
+            pl.BlockSpec((1, tail_len, d), lambda b, i, j, off: (b, 0, 0)),
+            pl.BlockSpec((1, tail_len, d), lambda b, i, j, off: (b, 0, 0)),
+        ]
+        operands += [k_tail, v_tail]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, groups, bq, d),
+                               lambda b, i, j, off: (b, 0, i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((groups * bq, 1), jnp.float32),
+            pltpu.VMEM((groups * bq, 1), jnp.float32),
+            pltpu.VMEM((groups * bq, d), jnp.float32),
+        ],
+    )
+    off = jnp.asarray(q_offset, jnp.int32).reshape(1)
     return pl.pallas_call(
         kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
-            pl.BlockSpec((1, bk, wpr), lambda b, i, j: (b, j, 0)),
-            pl.BlockSpec((1, bk, gexp), lambda b, i, j: (b, j, 0)),
-            pl.BlockSpec((1, bk, wpr), lambda b, i, j: (b, j, 0)),
-            pl.BlockSpec((1, bk, gexp), lambda b, i, j: (b, j, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((bh, t, d), q.dtype),
-        scratch_shapes=[
-            pltpu.VMEM((bq, 1), jnp.float32),
-            pltpu.VMEM((bq, 1), jnp.float32),
-            pltpu.VMEM((bq, d), jnp.float32),
-        ],
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bkv, groups, t, d), q.dtype),
         interpret=interpret,
-    )(q, k_words, k_exp, v_words, v_exp)
+    )(off, *operands)
 
 
 # ---------------------------------------------------------------------------
@@ -216,6 +323,7 @@ def _pad_seq(x, pad):
 def flash_attention_packed_jnp(q, k_words, k_exp, v_words, v_exp,
                                causal: bool = True, window: int = 0,
                                q_offset=0, is_global=None,
+                               k_tail=None, v_tail=None,
                                k_chunk: int = DEFAULT_BK,
                                int32_shifts: bool = False):
     """q (B, T, H, D); planes (B, S, Kv, ·) -> (B, T, H, D).
@@ -224,6 +332,10 @@ def flash_attention_packed_jnp(q, k_words, k_exp, v_words, v_exp,
     peak live unpacked KV is one tile, matching the kernel's VMEM
     residency claim. ``q_offset`` and ``is_global`` may be traced (decode);
     ragged S pads to a whole tile with positions masked by ``kpos < S``.
+    ``k_tail``/``v_tail`` (B, Tt, Kv, D) fp rows run one extra
+    online-softmax step after the packed tiles, at positions ``q_offset +
+    arange(Tt)``, with packed positions ``>= q_offset`` masked — the same
+    quantize-after-attend semantics as the kernel.
     """
     b, t, h, d = q.shape
     s_len, kv = k_words.shape[1], k_words.shape[2]
@@ -243,29 +355,17 @@ def flash_attention_packed_jnp(q, k_words, k_exp, v_words, v_exp,
     xs = (chunked(k_words), chunked(k_exp), chunked(v_words),
           chunked(v_exp), jnp.arange(nk))
     qg = q.reshape(b, t, kv, g, d).astype(jnp.float32)
-    qpos = jnp.asarray(q_offset, jnp.int32) + jnp.arange(t)
+    qoff = jnp.asarray(q_offset, jnp.int32)
+    qpos = qoff + jnp.arange(t)
+    has_tail = k_tail is not None
     scale = d ** -0.5
 
-    def k_step(carry, inp):
-        kwb, keb, vwb, veb, ki = inp
+    def tile_update(carry, kblk, vblk, mask):
+        """One online-softmax tile against fp K/V (B, kc, Kv, D) — the
+        single float sequence shared by the packed tiles and the tail."""
         m_prev, l_prev, acc = carry
-        kblk = dequant_kv_rows(kwb, keb, d,
-                               int32_shifts=int32_shifts)  # (B, kc, Kv, D)
-        vblk = dequant_kv_rows(vwb, veb, d, int32_shifts=int32_shifts)
-        kpos = ki * kc + jnp.arange(kc)
         sblk = jnp.einsum("btkgd,bskd->bkgts", qg, kblk,
                           preferred_element_type=jnp.float32) * scale
-        # same structural mask as models.attention.block_mask, plus the
-        # ragged-tail validity term (padded rows never win the softmax)
-        mask = jnp.ones((t, kc), bool)
-        if causal:
-            mask = mask & (kpos[None, :] <= qpos[:, None])
-        if window:
-            local = kpos[None, :] > (qpos[:, None] - window)
-            mask = mask & (local if is_global is None
-                           else (local | is_global))
-        if ragged:
-            mask = mask & (kpos < s_len)[None, :]
         sblk = jnp.where(mask[None, None, None], sblk, NEG_INF)
         m_new = jnp.maximum(m_prev, jnp.max(sblk, axis=-1))
         p = jnp.exp(sblk - m_new[..., None])
@@ -274,12 +374,57 @@ def flash_attention_packed_jnp(q, k_words, k_exp, v_words, v_exp,
         pv = jnp.einsum("bkgts,bskd->bkgtd", p, vblk,
                         preferred_element_type=jnp.float32)
         acc = acc * corr[..., None] + pv
-        return (m_new, l_new, acc), None
+        return (m_new, l_new, acc)
+
+    def tile_mask(kpos):
+        # same structural mask as models.attention.block_mask, plus the
+        # ragged-tail validity term (padded rows never win the softmax)
+        # and, under a tail, the history term (packed rows at the current
+        # step's positions may hold the already-quantized append)
+        mask = jnp.ones((t, kpos.shape[0]), bool)
+        if causal:
+            mask = mask & (kpos[None, :] <= qpos[:, None])
+        if window:
+            local = kpos[None, :] > (qpos[:, None] - window)
+            mask = mask & (local if is_global is None
+                           else (local | is_global))
+        if ragged:
+            mask = mask & (kpos < s_len)[None, :]
+        if has_tail:
+            mask = mask & (kpos[None, :] < qoff)
+        return mask
+
+    def dequant_tile(kwb, keb, vwb, veb):
+        return (dequant_kv_rows(kwb, keb, d, int32_shifts=int32_shifts),
+                dequant_kv_rows(vwb, veb, d, int32_shifts=int32_shifts))
+
+    def k_step(carry, inp):
+        kwb, keb, vwb, veb, ki = inp
+        kblk, vblk = dequant_tile(kwb, keb, vwb, veb)   # (B, kc, Kv, D)
+        return tile_update(carry, kblk, vblk,
+                           tile_mask(ki * kc + jnp.arange(kc))), None
 
     m0 = jnp.full((b, kv, g, t), NEG_INF, jnp.float32)
     l0 = jnp.zeros((b, kv, g, t), jnp.float32)
     a0 = jnp.zeros((b, kv, g, t, d), jnp.float32)
-    (_, l_f, acc), _ = jax.lax.scan(k_step, (m0, l0, a0), xs)
+    # with a tail, the last packed tile and the fp tail merge into ONE
+    # update whose score GEMM has kc + Tt columns — the same float
+    # sequence as the kernel's merged last step (a Tt-column GEMM would
+    # reduce in a different order and break bit parity)
+    n_scan = nk - 1 if has_tail else nk
+    carry, _ = jax.lax.scan(k_step, (m0, l0, a0),
+                            jax.tree.map(lambda x: x[:n_scan], xs))
+    if has_tail:
+        kblk, vblk = dequant_tile(*(x[nk - 1] for x in xs[:4]))
+        tmask = tail_position_mask(t, k_tail.shape[1], 0, causal, window,
+                                   qoff, is_global)
+        carry = tile_update(
+            carry,
+            jnp.concatenate([kblk, k_tail.astype(jnp.float32)], axis=1),
+            jnp.concatenate([vblk, v_tail.astype(jnp.float32)], axis=1),
+            jnp.concatenate([tile_mask((nk - 1) * kc + jnp.arange(kc)),
+                             tmask], axis=1))
+    _, l_f, acc = carry
     out = acc / jnp.maximum(l_f, 1e-30)[..., None]
     # (B, KV, G, T, D) -> (B, T, KV, G, D) -> (B, T, H, D)
     return out.transpose(0, 3, 1, 2, 4).reshape(b, t, h, d).astype(q.dtype)

@@ -8,6 +8,7 @@ fuses into the surrounding HLO for the dry-run analysis).
 from __future__ import annotations
 
 import functools
+import logging
 import os
 
 import jax
@@ -172,35 +173,124 @@ def dequant_kv_rows(words, exps, head_dim: int, dtype=jnp.float32):
                                int32_shifts=int32_shift_fallback())
 
 
+# ---------------------------------------------------------------------------
+# Packed-KV flash attention dispatch. The kernel serves GQA shapes and
+# traced decode offsets (scalar prefetch); the jnp fallback keeps the cases
+# the static grid cannot take (traced is_global, ragged tile lengths) and
+# the CPU simulation default. REPRO_FAP_ROUTE=kernel|fallback|auto forces
+# either side ("kernel" runs interpret mode off-TPU); every dispatch
+# records its decision (last_fap_route) and debug-logs the reason.
+# ---------------------------------------------------------------------------
+
+_fap_log = logging.getLogger("repro.kernels.flash_attention_packed")
+_LAST_FAP_ROUTE = ("", "never dispatched")
+
+
+def fap_route() -> str:
+    """REPRO_FAP_ROUTE reader: 'kernel' | 'fallback' | 'auto'."""
+    env = os.environ.get("REPRO_FAP_ROUTE", "auto").lower()
+    if env in ("kernel", "pallas", "1", "true", "on"):
+        return "kernel"
+    if env in ("fallback", "jnp", "0", "false", "off"):
+        return "fallback"
+    return "auto"
+
+
+def last_fap_route():
+    """(route, reason) of the most recent flash_attention_packed dispatch
+    — the observable half of the routing contract (tests/debugging)."""
+    return _LAST_FAP_ROUTE
+
+
+def concrete_scalar_int(x):
+    """int for any *concrete* 0-d offset — python/np ints, 0-d np arrays,
+    concrete jax scalars (weak-typed included) — else None (tracers).
+    Normalizing here keeps concrete offsets on one jit cache key and makes
+    the routing independent of which scalar flavor the caller held."""
+    if isinstance(x, (int, np.integer)):
+        return int(x)
+    if isinstance(x, np.ndarray) and x.ndim == 0:
+        return int(x)
+    if isinstance(x, jax.Array) and x.ndim == 0 and jax.core.is_concrete(x):
+        return int(x)
+    return None
+
+
+def fap_route_decision(t: int, s_len: int, h: int, kv: int, *,
+                       has_is_global: bool, bq: int, bk: int):
+    """Pure routing decision for :func:`flash_attention_packed`.
+
+    Returns (use_kernel, reason). Traced ``q_offset`` and GQA shapes are
+    kernel-eligible (scalar prefetch / GQA grid); only traced ``is_global``
+    overrides, ragged tile lengths, and non-grouping head counts force the
+    fallback regardless of REPRO_FAP_ROUTE.
+    """
+    mode = fap_route()
+    if has_is_global:
+        return False, ("traced is_global override (per-layer global "
+                       f"attention) needs the jnp fallback [mode={mode}]")
+    if kv == 0 or h % kv:
+        return False, (f"q heads {h} not a multiple of kv heads {kv} "
+                       f"[mode={mode}]")
+    if t % min(bq, t) or s_len % min(bk, s_len):
+        return False, (f"ragged tiles: T={t} S={s_len} vs bq={bq} bk={bk} "
+                       f"[mode={mode}]")
+    if mode == "kernel":
+        return True, "forced by REPRO_FAP_ROUTE=kernel"
+    if mode == "fallback":
+        return False, "forced by REPRO_FAP_ROUTE=fallback"
+    if _on_tpu():
+        return True, "auto: tpu backend"
+    return False, "auto: non-tpu backend runs the jnp simulation path"
+
+
 def flash_attention_packed(q, k_words, k_exp, v_words, v_exp, *,
                            causal: bool = True, window: int = 0,
                            q_offset=0, is_global=None,
+                           k_tail=None, v_tail=None,
                            bq: int = 256, bk: int = 512):
     """Fused packed-KV flash attention dispatcher.
 
-    q (B, T, H, D); planes (B, S, Kv, ·) in the row-planar packed layout.
-    On TPU with MHA-shaped static inputs the Pallas kernel runs (K/V tiles
-    unpacked in VMEM only); everywhere else — GQA, traced decode offsets,
-    per-layer ``is_global`` overrides, ragged lengths, interpret/CPU — the
-    tile-local jnp fallback runs the same math one KV tile at a time.
+    q (B, T, H, D); planes (B, S, Kv, ·) in the row-planar packed layout;
+    optional ``k_tail``/``v_tail`` (B, Tt, Kv, D) fp rows for the
+    quantize-after-attend decode append. The Pallas kernel serves GQA
+    shapes (folded by kv-head — packed planes are never expanded) and
+    traced decode offsets (scalar prefetch); traced ``is_global`` and
+    ragged tile lengths run the tile-local jnp fallback, which computes
+    the identical float sequence one KV tile at a time.
     """
+    global _LAST_FAP_ROUTE
     b, t, h, d = q.shape
     s_len, kv = k_words.shape[1], k_words.shape[2]
-    static_off = isinstance(q_offset, (int, np.integer))
-    fits = (t % min(bq, t) == 0 and s_len % min(bk, s_len) == 0)
-    if _on_tpu() and h == kv and static_off and is_global is None and fits:
-        def fold(x):                      # (B, S, H, ·) -> (B*H, S, ·)
-            return x.transpose(0, 2, 1, 3).reshape(b * h, x.shape[1], -1)
+    off = concrete_scalar_int(q_offset)
+    if off is not None:
+        q_offset = off
+    use_kernel, reason = fap_route_decision(
+        t, s_len, h, kv, has_is_global=is_global is not None, bq=bq, bk=bk)
+    _LAST_FAP_ROUTE = ("kernel" if use_kernel else "fallback", reason)
+    _fap_log.debug("flash_attention_packed -> %s (%s)",
+                   _LAST_FAP_ROUTE[0], reason)
+    if use_kernel:
+        g = h // kv
+
+        def fold(x):                      # (B, S, Kv, ·) -> (B*Kv, S, ·)
+            return x.transpose(0, 2, 1, 3).reshape(b * kv, x.shape[1], -1)
+        qf = q.reshape(b, t, kv, g, d).transpose(0, 2, 3, 1, 4).reshape(
+            b * kv, g, t, d)
+        tails = {}
+        if k_tail is not None:
+            tails = dict(k_tail=fold(k_tail), v_tail=fold(v_tail))
         o = fap.flash_attention_packed_pallas(
-            fold(q), fold(k_words), fold(k_exp), fold(v_words),
-            fold(v_exp), causal=causal, window=window,
-            q_offset=int(q_offset), bq=bq, bk=bk, interpret=False,
-            int32_shifts=int32_shift_fallback())
-        return o.reshape(b, h, t, d).transpose(0, 2, 1, 3)
+            qf, fold(k_words), fold(k_exp), fold(v_words), fold(v_exp),
+            causal=causal, window=window, q_offset=q_offset, bq=bq, bk=bk,
+            interpret=not _on_tpu(), int32_shifts=int32_shift_fallback(),
+            **tails)
+        return o.reshape(b, kv, g, t, d).transpose(0, 3, 1, 2, 4).reshape(
+            b, t, h, d)
     return fap.flash_attention_packed_jnp(
         q, k_words, k_exp, v_words, v_exp, causal=causal, window=window,
-        q_offset=q_offset, is_global=is_global, k_chunk=bk,
-        int32_shifts=int32_shift_fallback())
+        q_offset=q_offset, is_global=is_global, k_tail=k_tail,
+        v_tail=v_tail, k_chunk=bk, int32_shifts=int32_shift_fallback())
 
 
 # ---------------------------------------------------------------------------

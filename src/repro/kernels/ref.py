@@ -181,3 +181,27 @@ def flash_attention_packed_oracle(q, k_words, k_exp, v_words, v_exp,
     return flash_attention_pallas(q, k, v, causal=causal, window=window,
                                   q_offset=q_offset, bq=bq, bk=bk,
                                   interpret=True)
+
+
+def flash_attention_packed_gqa_oracle(q, k_words, k_exp, v_words, v_exp,
+                                      causal=True, window=0, q_offset=0,
+                                      bq=256, bk=512):
+    """Expand-then-attend oracle for the GQA grid: replicate every packed
+    K/V plane row ``G = H // Kv`` times (exactly the memory expansion the
+    GQA grid exists to avoid) and run the MHA oracle head-by-head. The GQA
+    kernel — which dequantizes each plane row once per kv-head while the q
+    block walks its group — must match this **bit-exactly**.
+
+    q (B, T, H, D); planes (B, S, Kv, ·) -> (B, T, H, D)."""
+    b, t, h, d = q.shape
+    s, kv = k_words.shape[1], k_words.shape[2]
+    g = h // kv
+
+    def expand(x):                    # (B, S, Kv, ·) -> (B*Kv*G, S, ·)
+        return jnp.repeat(x.transpose(0, 2, 1, 3), g, axis=1).reshape(
+            b * h, s, -1)
+    qm = q.transpose(0, 2, 1, 3).reshape(b * h, t, d)
+    o = flash_attention_packed_oracle(
+        qm, expand(k_words), expand(k_exp), expand(v_words), expand(v_exp),
+        causal=causal, window=window, q_offset=q_offset, bq=bq, bk=bk)
+    return o.reshape(b, h, t, d).transpose(0, 2, 1, 3)

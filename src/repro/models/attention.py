@@ -312,12 +312,20 @@ def attention(q, k, v, info: MaskInfo, *, q_chunk: int = 512,
 
 
 def packed_attention(q, k_words, k_exp, v_words, v_exp, info: MaskInfo, *,
-                     k_chunk: int = 512):
+                     k_tail=None, v_tail=None, k_chunk: int = 512):
     """Attention against a **bit-packed** GSE KV cache (row-planar planes,
     see ``repro.kernels.flash_attention_packed``) — the packed decode call
     path. K/V stay packed end to end; only one KV tile is ever dequantized
     at a time (VMEM tile on TPU, scan-local tile on CPU). ``info`` fields
-    may be traced (decode ``q_offset``, hymba ``is_global``).
+    may be traced (decode ``q_offset``, hymba ``is_global``) — both the
+    kernel (scalar-prefetch offset, GQA grid) and the jnp fallback serve
+    traced decode offsets; routing is ``repro.kernels.ops``'s job.
+
+    ``k_tail``/``v_tail`` (B, Tt, Kv, D): the current decode step's fp
+    k/v rows, attended at positions ``info.q_offset + arange(Tt)`` while
+    packed positions ``>= q_offset`` are masked (quantize-after-attend
+    append — the current token is never attended through its own
+    quantization).
 
     q (B, T, H, D); planes (B, S, Kv, ·) -> (B, T, H, D).
     """
@@ -325,4 +333,5 @@ def packed_attention(q, k_words, k_exp, v_words, v_exp, info: MaskInfo, *,
     return flash_attention_packed(
         q, k_words, k_exp, v_words, v_exp, causal=info.causal,
         window=info.window, q_offset=info.q_offset,
-        is_global=info.is_global, bk=k_chunk)
+        is_global=info.is_global, k_tail=k_tail, v_tail=v_tail,
+        bk=k_chunk)

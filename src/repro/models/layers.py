@@ -169,8 +169,17 @@ def attn_apply(fz, tr, x, cfg: ModelConfig, policy: QuantPolicy, *,
         ve = jax.lax.dynamic_update_slice(ve, nve, at)
         new_cache = dict(layer_cache, k_words=kw, k_exp=ke, v_words=vw,
                          v_exp=ve, index=idx + t)
+        # quantize-after-attend: the cache stores the quantized rows, but
+        # the current token attends to its own k/v at full precision (the
+        # fp tail) — token-identical to the round-trip A/B path, which
+        # only quantizes the new rows at the post-step re-pack. Not under
+        # ring_buffer: the tail's history mask works on absolute positions
+        # (kpos < q_offset) and cannot exclude a wrapped write slot, so the
+        # current token would be attended twice — ring mode keeps attending
+        # its just-quantized rows instead.
+        tails = {} if ring_buffer else dict(k_tail=k, v_tail=v)
         o = packed_attention(q, kw, ke, vw, ve, mask_info,
-                             k_chunk=cfg.attn_k_chunk)
+                             k_chunk=cfg.attn_k_chunk, **tails)
     else:
         if layer_cache is not None:
             ck, cv, idx = (layer_cache["k"], layer_cache["v"],

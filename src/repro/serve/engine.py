@@ -281,11 +281,12 @@ def greedy_generate(fz, tr, prompt, cfg: ModelConfig, policy: QuantPolicy,
     packed cache — the full unpacked cache is never materialized at any
     step. ``kv_inplace=False`` keeps the legacy round-trip (unpack the
     whole cache, attend, re-pack flat PackedGSETensor leaves) as the A/B
-    reference; both paths quantize each token exactly once (re-packing
-    GSE-exact values is lossless), so they produce identical tokens up to
-    the step where the in-place path attends to the current token's
-    already-quantized k/v (b>=8 makes that difference sub-argmax in
-    practice).
+    reference. Both paths quantize each token exactly once (re-packing
+    GSE-exact values is lossless) and both attend the current token's
+    k/v at full precision — the in-place path passes the fresh fp rows
+    as an attention tail (quantize-after-attend append) — so they are
+    **token-identical at every bit-width** (asserted exactly in
+    tests/test_attention_packed.py).
     """
     b, t = prompt.shape
     max_len = max_len or (t + max_new)
@@ -301,7 +302,12 @@ def greedy_generate(fz, tr, prompt, cfg: ModelConfig, policy: QuantPolicy,
     def body(carry, _):
         tok, cache = carry
         if roundtrip:
-            cache = unpack_decode_cache(cache)
+            # fp32: GSE dequant is exact in fp32, and the appended row must
+            # not round through bf16 — the in-place path quantizes and
+            # attends the fp row directly, and the A/B identity holds only
+            # if this path sees the same values (a bf16 working cache made
+            # the two paths quantize *different* current-token values)
+            cache = unpack_decode_cache(cache, dtype=jnp.float32)
         logits, cache = decode_step(fz, tr, tok, cache, cfg, policy)
         if roundtrip:
             cache = pack_decode_cache(cache, kv_quant_bits, kv_group)
