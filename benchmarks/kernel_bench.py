@@ -2,9 +2,15 @@
 (value-space jnp simulation, the path the framework executes on CPU) and
 derived bytes/value. Pallas-interpret timings are not meaningful wall-clock
 (Python interpreter loop) and are reported only as correctness-path info.
+
+Besides the printed csv rows, every measurement is collected as a
+structured record (kernel, shape, bits, route, wall_ms) and can be written
+to ``BENCH_kernels.json`` with ``--json`` — the persisted perf trajectory
+CI uploads per PR (``--smoke`` always writes it).
 """
 from __future__ import annotations
 
+import json
 import os
 import time
 
@@ -15,6 +21,11 @@ from benchmarks.common import csv_row
 from repro.core.gse import gse_fake_quant, gse_quantize
 from repro.core.nf4 import nf4_dequantize, nf4_quantize
 from repro.core.qcd import quantized_matmul
+
+BENCH_SCHEMA = "repro/kernel_bench/v1"
+DEFAULT_JSON = os.path.normpath(
+    os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                 os.pardir, "BENCH_kernels.json"))
 
 
 def _time(fn, *args, iters=20):
@@ -27,11 +38,32 @@ def _time(fn, *args, iters=20):
     return (time.perf_counter() - t0) / iters * 1e6
 
 
-def run(smoke: bool = False):
+def write_json(records, path: str, smoke: bool):
+    """Write the schema'd trajectory file (one self-describing object; rows
+    carry kernel/shape/bits/route/wall_ms so successive check-ins diff)."""
+    doc = {"schema": BENCH_SCHEMA, "smoke": bool(smoke),
+           "backend": jax.default_backend(), "rows": records}
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+        f.write("\n")
+    return path
+
+
+def run(smoke: bool = False, records=None):
     """Full sweep by default; ``smoke`` shrinks shapes/iters to a CI-sized
     pass that still exercises every row (incl. the fused quantize+pack
-    kernel and realized packed bytes) in a few seconds."""
+    kernel, the integer-MAC modes and realized packed bytes) in a few
+    seconds. Pass ``records`` (a list) to collect the structured rows."""
     rows = []
+    if records is None:
+        records = []
+
+    def add(name, us, derived="", *, shape="", bits=None, route="jnp"):
+        rows.append(csv_row(name, us, derived))
+        records.append({"kernel": name, "shape": shape, "bits": bits,
+                        "route": route, "wall_ms": round(us / 1e3, 4),
+                        "derived": derived})
+
     key = jax.random.PRNGKey(0)
     big = (128, 512) if smoke else (512, 2048)
     x = jax.random.normal(key, big)
@@ -39,24 +71,26 @@ def run(smoke: bool = False):
     tag = f"{big[0]}x{big[1]}"
 
     us = _time(jax.jit(lambda v: gse_fake_quant(v, 6, 32)), x)
-    rows.append(csv_row(f"kernel/gse_fake_quant_{tag}", us,
-                        f"GBps={x.nbytes / us * 1e6 / 1e9:.2f}"))
+    add(f"kernel/gse_fake_quant_{tag}", us,
+        f"GBps={x.nbytes / us * 1e6 / 1e9:.2f}", shape=tag, bits=6)
     us = _time(jax.jit(lambda v: gse_quantize(v, 6, 32).mantissa), x)
-    rows.append(csv_row(f"kernel/gse_quantize_{tag}", us,
-                        f"GBps={x.nbytes / us * 1e6 / 1e9:.2f}"))
+    add(f"kernel/gse_quantize_{tag}", us,
+        f"GBps={x.nbytes / us * 1e6 / 1e9:.2f}", shape=tag, bits=6)
     us = _time(jax.jit(
         lambda a, b: quantized_matmul(a, b, 6, 6, 6, 32)), x, w)
     flops = 2 * big[0] * big[1] * big[0]
-    rows.append(csv_row(f"kernel/qcd_matmul_{tag}x{big[0]}", us,
-                        f"GFLOPs={flops / us * 1e6 / 1e9:.1f}"))
+    add(f"kernel/qcd_matmul_{tag}x{big[0]}", us,
+        f"GFLOPs={flops / us * 1e6 / 1e9:.1f}",
+        shape=f"{tag}x{big[0]}", bits=6)
     us = _time(jax.jit(lambda a, b: a @ b), x, w)
-    rows.append(csv_row("kernel/bf16_matmul_baseline", us,
-                        f"GFLOPs={flops / us * 1e6 / 1e9:.1f}"))
+    add("kernel/bf16_matmul_baseline", us,
+        f"GFLOPs={flops / us * 1e6 / 1e9:.1f}", shape=f"{tag}x{big[0]}")
 
     t = nf4_quantize(w)
     us = _time(jax.jit(nf4_dequantize), t)
-    rows.append(csv_row(f"kernel/nf4_dequant_{big[1]}x{big[0]}", us,
-                        f"GBps={w.nbytes / us * 1e6 / 1e9:.2f}"))
+    add(f"kernel/nf4_dequant_{big[1]}x{big[0]}", us,
+        f"GBps={w.nbytes / us * 1e6 / 1e9:.2f}",
+        shape=f"{big[1]}x{big[0]}", bits=4)
 
     # flash attention (jnp chunked) vs direct at prefill-ish shape
     from repro.models.attention import (MaskInfo, direct_attention,
@@ -73,28 +107,29 @@ def run(smoke: bool = False):
                 q, kk, vv, iters=5)
     us2 = _time(jax.jit(lambda q, k, v: direct_attention(q, k, v, info)),
                 q, kk, vv, iters=5)
-    rows.append(csv_row(f"kernel/flash_attn_{t_attn}", us1,
-                        f"direct_us={us2:.0f} ratio={us2 / us1:.2f}"))
+    add(f"kernel/flash_attn_{t_attn}", us1,
+        f"direct_us={us2:.0f} ratio={us2 / us1:.2f}", shape=f"t{t_attn}d64")
 
     # Pallas interpret-mode correctness path (not wall-representative)
     from repro.kernels import ops
     xs = jax.random.normal(key, (128, 512))
     us = _time(lambda v: ops.gse_quantize(v, 6, 32)[0], xs, iters=3)
-    rows.append(csv_row("kernel/pallas_gse_quant_interpret", us,
-                        "correctness-path-only"))
+    add("kernel/pallas_gse_quant_interpret", us, "correctness-path-only",
+        shape="128x512", bits=6, route="kernel-interpret")
 
     # packed storage: jnp pack/unpack wall time and realized bytes
     from repro.core.gse import gse_pack, gse_quantize as gq, gse_unpack
     t = gq(w.T, 6, 32)                            # (M, K) along K
     us = _time(jax.jit(lambda v: gse_pack(v).mantissa_words), t)
     p = gse_pack(t)
-    rows.append(csv_row(
-        f"kernel/gse_pack_{tag}_b6", us,
+    add(f"kernel/gse_pack_{tag}_b6", us,
         f"GBps={t.mantissa.nbytes / us * 1e6 / 1e9:.2f} "
-        f"packed_bytes={p.nbytes} int8_bytes={t.mantissa.nbytes + t.exponent.nbytes}"))
+        f"packed_bytes={p.nbytes} "
+        f"int8_bytes={t.mantissa.nbytes + t.exponent.nbytes}",
+        shape=tag, bits=6)
     us = _time(jax.jit(lambda v: gse_unpack(v).mantissa), p)
-    rows.append(csv_row(f"kernel/gse_unpack_{tag}_b6", us,
-                        f"GBps={t.mantissa.nbytes / us * 1e6 / 1e9:.2f}"))
+    add(f"kernel/gse_unpack_{tag}_b6", us,
+        f"GBps={t.mantissa.nbytes / us * 1e6 / 1e9:.2f}", shape=tag, bits=6)
 
     # fused quantize+pack vs the two-dispatch storage path. The fused row
     # credits the removed HBM round-trip: the old path writes+reads the
@@ -104,15 +139,14 @@ def run(smoke: bool = False):
     two = jax.jit(lambda v: gse_pack(gq(v, 6, 32)).mantissa_words)
     us2d = _time(two, x)
     int8_roundtrip = 2 * x.size                   # int8 write + read bytes
-    rows.append(csv_row(
-        f"kernel/gse_quant_then_pack_{tag}_b6", us2d,
+    add(f"kernel/gse_quant_then_pack_{tag}_b6", us2d,
         f"GBps={x.nbytes / us2d * 1e6 / 1e9:.2f} "
-        f"hbm_intermediate_bytes={int8_roundtrip}"))
+        f"hbm_intermediate_bytes={int8_roundtrip}", shape=tag, bits=6)
     usf = _time(lambda v: ops.gse_quant_pack(v, 6, 32)[0], x, iters=3)
-    rows.append(csv_row(
-        f"kernel/pallas_gse_quant_pack_fused_{tag}_b6", usf,
+    add(f"kernel/pallas_gse_quant_pack_fused_{tag}_b6", usf,
         f"correctness-path-only hbm_intermediate_bytes=0 "
-        f"two_dispatch_us={us2d:.0f}"))
+        f"two_dispatch_us={us2d:.0f}", shape=tag, bits=6,
+        route="kernel-interpret")
 
     # packed-KV decode step: fused tile-local attention + in-place append
     # vs the legacy round-trip (unpack the WHOLE cache, attend, re-pack).
@@ -134,6 +168,7 @@ def run(smoke: bool = False):
     newk = jax.random.normal(jax.random.PRNGKey(23), (bsz, 1, kvh, hd))
     newv = jax.random.normal(jax.random.PRNGKey(24), (bsz, 1, kvh, hd))
     off = s_max - 1
+    shape_kv = f"s{s_max}kv{kvh}d{hd}"
 
     @jax.jit
     def fused_step(q, kw, ke, vw, ve, nk, nv):
@@ -165,13 +200,12 @@ def run(smoke: bool = False):
     cache_bytes = 2 * (kwp.nbytes + kep.nbytes)
     tile_bytes = 2 * bsz * bk * kvh * hd * 4
     full_bytes = 2 * kc.astype(jnp.bfloat16).nbytes
-    rows.append(csv_row(
-        f"kernel/packed_kv_decode_fused_s{s_max}_b{kb}", usf,
+    add(f"kernel/packed_kv_decode_fused_s{s_max}_b{kb}", usf,
         f"roundtrip_us={usr:.0f} speedup={usr / usf:.2f} "
-        f"packed_bytes={cache_bytes} transient_unpacked={tile_bytes}"))
-    rows.append(csv_row(
-        f"kernel/packed_kv_decode_roundtrip_s{s_max}_b{kb}", usr,
-        f"transient_unpacked={full_bytes}"))
+        f"packed_bytes={cache_bytes} transient_unpacked={tile_bytes}",
+        shape=shape_kv, bits=kb)
+    add(f"kernel/packed_kv_decode_roundtrip_s{s_max}_b{kb}", usr,
+        f"transient_unpacked={full_bytes}", shape=shape_kv, bits=kb)
 
     # GQA decode step through the ops dispatcher, both routes, at the
     # shape above (heads/kvh = gqa ratio 2) with a TRACED q_offset — the
@@ -183,14 +217,14 @@ def run(smoke: bool = False):
     from repro.kernels import ops as _ops
     offt = jnp.asarray(off, jnp.int32)
 
-    def _disp(route):
+    def _disp(route, int_mac=False):
         os.environ["REPRO_FAP_ROUTE"] = route
 
         @jax.jit
         def step(q, kw, ke, vw, ve, o):
             return _ops.flash_attention_packed(q, kw, ke, vw, ve,
                                                causal=True, q_offset=o,
-                                               bk=bk)
+                                               bk=bk, int_mac=int_mac)
         return step
 
     prev_route = os.environ.get("REPRO_FAP_ROUTE")
@@ -199,18 +233,30 @@ def run(smoke: bool = False):
         assert _ops.last_fap_route()[0] == "kernel"
         us_j = _time(_disp("fallback"), qd, kwp, kep, vwp, vep, offt,
                      iters=3)
+        # integer-MAC score GEMM (exact tier: same output bits as fp32) on
+        # both routes — the int-vs-fp32 MAC comparison rows.
+        us_ki = _time(_disp("kernel", int_mac=True), qd, kwp, kep, vwp, vep,
+                      offt, iters=3)
+        us_ji = _time(_disp("fallback", int_mac=True), qd, kwp, kep, vwp,
+                      vep, offt, iters=3)
     finally:
         if prev_route is None:
             os.environ.pop("REPRO_FAP_ROUTE", None)
         else:
             os.environ["REPRO_FAP_ROUTE"] = prev_route
-    rows.append(csv_row(
-        f"kernel/packed_kv_decode_gqa_kernel_interpret_s{s_max}_b{kb}", us_k,
+    add(f"kernel/packed_kv_decode_gqa_kernel_interpret_s{s_max}_b{kb}", us_k,
         f"correctness-path-only scalar-prefetch-offset "
-        f"gqa_ratio={heads // kvh} fallback_us={us_j:.0f}"))
-    rows.append(csv_row(
-        f"kernel/packed_kv_decode_gqa_fallback_s{s_max}_b{kb}", us_j,
-        f"gqa_ratio={heads // kvh} traced-offset"))
+        f"gqa_ratio={heads // kvh} fallback_us={us_j:.0f}",
+        shape=shape_kv, bits=kb, route="kernel-interpret")
+    add(f"kernel/packed_kv_decode_gqa_fallback_s{s_max}_b{kb}", us_j,
+        f"gqa_ratio={heads // kvh} traced-offset", shape=shape_kv, bits=kb,
+        route="fallback")
+    add(f"kernel/packed_kv_decode_int_mac_kernel_interpret_s{s_max}_b{kb}",
+        us_ki, f"correctness-path-only exact-tier fp32_us={us_k:.0f}",
+        shape=shape_kv, bits=kb, route="kernel-interpret")
+    add(f"kernel/packed_kv_decode_int_mac_fallback_s{s_max}_b{kb}", us_ji,
+        f"exact-tier int8-score-GEMM fp32_us={us_j:.0f}",
+        shape=shape_kv, bits=kb, route="fallback")
 
     # fused packed-dequant matmul, interpret mode (correctness path)
     xa = jax.random.normal(key, (128, 512))
@@ -221,8 +267,9 @@ def run(smoke: bool = False):
     us = _time(lambda m, e: ops.gse_matmul_packed(
         m, e, pw.mantissa_words, wq.exponent, 6, 32,
         bm=128, bn=128, bk=512), qa.mantissa, qa.exponent, iters=3)
-    rows.append(csv_row("kernel/pallas_gse_matmul_packed_interpret", us,
-                        "correctness-path-only"))
+    add("kernel/pallas_gse_matmul_packed_interpret", us,
+        "correctness-path-only", shape="128x512x256", bits=6,
+        route="kernel-interpret")
 
     # packed-backward QCD step: full fwd+bwd of quantized_matmul with the
     # residuals saved as packed GSE word streams vs the legacy bf16
@@ -234,12 +281,14 @@ def run(smoke: bool = False):
     xb = jax.random.normal(jax.random.PRNGKey(30), (mq, kq))
     wb = jax.random.normal(jax.random.PRNGKey(31), (kq, nq)) * 0.05
     ct = jax.random.normal(jax.random.PRNGKey(32), (mq, nq))
+    shape_q = f"{mq}x{kq}x{nq}"
 
-    def _qcd_step(packed):
+    def _qcd_step(packed, int_mac=False):
         @jax.jit
         def step(x, w, ct):
             y, vjp = jax.vjp(
-                lambda a, b: quantized_matmul(a, b, 6, 6, 6, 32, packed),
+                lambda a, b: quantized_matmul(a, b, 6, 6, 6, 32, packed,
+                                              None, int_mac),
                 x, w)
             dx, dw = vjp(ct)
             return y, dx, dw
@@ -250,17 +299,17 @@ def run(smoke: bool = False):
     from repro.core.gse import gse_bits_per_value
     packed_bytes = int(gse_bits_per_value(6, 32) / 8 * (xb.size + wb.size))
     bf16_bytes = 2 * (xb.size + wb.size)
-    rows.append(csv_row(
-        f"kernel/qcd_bwd_packed_residuals_{mq}x{kq}x{nq}", us_pk,
+    add(f"kernel/qcd_bwd_packed_residuals_{mq}x{kq}x{nq}", us_pk,
         f"bf16_residual_us={us_bf:.0f} residual_bytes={packed_bytes} "
         f"bf16_residual_bytes={bf16_bytes} "
-        f"bytes_saving={1 - packed_bytes / bf16_bytes:.1%}"))
-    rows.append(csv_row(
-        f"kernel/qcd_bwd_bf16_residuals_{mq}x{kq}x{nq}", us_bf,
-        f"residual_bytes={bf16_bytes}"))
+        f"bytes_saving={1 - packed_bytes / bf16_bytes:.1%}",
+        shape=shape_q, bits=6, route=ops.last_qcd_route("dx")[0])
+    add(f"kernel/qcd_bwd_bf16_residuals_{mq}x{kq}x{nq}", us_bf,
+        f"residual_bytes={bf16_bytes}", shape=shape_q, bits=6)
 
     # transposed-contraction / token-contraction packed matmuls (the dX/dW
-    # backward kernels), interpret mode (correctness path)
+    # backward kernels), interpret mode (correctness path), fp32 tile MACs
+    # vs the realigned int32 MAC mode (bounded tier) on the same operands.
     dyq = gq(jax.random.normal(jax.random.PRNGKey(33), (128, 256)), 6, 32)
     pdy = gse_pack(dyq)
     xq2 = gq(jax.random.normal(jax.random.PRNGKey(34), (128, 512)), 6, 32)
@@ -268,18 +317,34 @@ def run(smoke: bool = False):
     wq2 = gq(jax.random.normal(jax.random.PRNGKey(35), (256, 512)) * 0.05,
              6, 32)
     pw2 = gse_pack(wq2)
-    us = _time(lambda aw, bw: ops.gse_matmul_packed_nt(
-        aw, dyq.exponent, bw, wq2.exponent, 6, 6, 32, 32,
-        bm=128, bn=256, bk=128), pdy.mantissa_words, pw2.mantissa_words,
-        iters=3)
-    rows.append(csv_row("kernel/pallas_gse_matmul_packed_nt_interpret", us,
-                        "correctness-path-only dX-shaped"))
-    us = _time(lambda aw, bw: ops.gse_matmul_packed_tn(
-        aw, xq2.exponent, bw, dyq.exponent, 6, 6, 32, 32,
-        bm=128, bn=128, bk=128), px2.mantissa_words, pdy.mantissa_words,
-        iters=3)
-    rows.append(csv_row("kernel/pallas_gse_matmul_packed_tn_interpret", us,
-                        "correctness-path-only dW-shaped"))
+
+    def _nt(int_mac):
+        return _time(lambda aw, bw: ops.gse_matmul_packed_nt(
+            aw, dyq.exponent, bw, wq2.exponent, 6, 6, 32, 32,
+            bm=128, bn=256, bk=128, int_mac=int_mac),
+            pdy.mantissa_words, pw2.mantissa_words, iters=3)
+
+    def _tn(int_mac):
+        return _time(lambda aw, bw: ops.gse_matmul_packed_tn(
+            aw, xq2.exponent, bw, dyq.exponent, 6, 6, 32, 32,
+            bm=128, bn=128, bk=128, int_mac=int_mac),
+            px2.mantissa_words, pdy.mantissa_words, iters=3)
+
+    us_nt, us_tn = _nt(False), _tn(False)
+    add("kernel/pallas_gse_matmul_packed_nt_interpret", us_nt,
+        "correctness-path-only dX-shaped", shape="128x256x512", bits=6,
+        route="kernel-interpret")
+    add("kernel/pallas_gse_matmul_packed_tn_interpret", us_tn,
+        "correctness-path-only dW-shaped", shape="128x512x256", bits=6,
+        route="kernel-interpret")
+    us = _nt(True)
+    add("kernel/pallas_gse_matmul_packed_nt_int_mac_interpret", us,
+        f"correctness-path-only dX-shaped bounded-tier fp32_us={us_nt:.0f}",
+        shape="128x256x512", bits=6, route="kernel-interpret")
+    us = _tn(True)
+    add("kernel/pallas_gse_matmul_packed_tn_int_mac_interpret", us,
+        f"correctness-path-only dW-shaped bounded-tier fp32_us={us_tn:.0f}",
+        shape="128x512x256", bits=6, route="kernel-interpret")
     return rows
 
 
@@ -288,5 +353,14 @@ if __name__ == "__main__":
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
-                    help="CI-sized pass: small shapes, every row exercised")
-    print("\n".join(run(smoke=ap.parse_args().smoke)))
+                    help="CI-sized pass: small shapes, every row exercised; "
+                         "also writes the JSON trajectory file")
+    ap.add_argument("--json", nargs="?", const=DEFAULT_JSON, default=None,
+                    metavar="PATH",
+                    help=f"write structured rows (default {DEFAULT_JSON})")
+    args = ap.parse_args()
+    recs = []
+    print("\n".join(run(smoke=args.smoke, records=recs)))
+    json_path = args.json or (DEFAULT_JSON if args.smoke else None)
+    if json_path:
+        print(f"wrote {write_json(recs, json_path, args.smoke)}")

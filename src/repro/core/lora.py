@@ -84,7 +84,8 @@ def _qmm(x, w, a_bits, w_bits, g_bits, policy: QuantPolicy):
     if policy.fmt.startswith("fp8"):
         return _fp8_matmul(x, w, policy.fmt.split("_")[1], policy.group_size)
     return quantized_matmul(x, w, a_bits, w_bits, g_bits, policy.group_size,
-                            policy.residuals_packed, policy.residual_bits)
+                            policy.residuals_packed, policy.residual_bits,
+                            policy.int_mac)
 
 
 def apply_gsq_linear(frozen, train, x: jax.Array, policy: QuantPolicy,

@@ -39,6 +39,13 @@ class QuantPolicy:
     # residual bytes (QFT-style low-bit activation checkpointing).
     residuals_packed: bool = False
     residual_bits: Optional[int] = None
+    # Integer MACs in the packed backward matmuls (bounded tier): realign
+    # mantissas to a tile-shared exponent in VMEM and accumulate in int32
+    # instead of dequantizing tiles to fp32 — the paper's integer-compute
+    # claim on the dX/dW GEMMs. NOT bit-exact (realignment drops low bits;
+    # worst-case bound in docs/architecture.md), hence default off; the
+    # fp32 kernels remain the oracle. REPRO_INT_MAC=1/0 overrides.
+    int_mac: bool = False
     # rank of LoRA adapters (co-optimized with bits; Sec. 2.4)
     rank: int = 64
     lora_alpha: float = 16.0

@@ -103,7 +103,7 @@ def _use_packed(a_bits, w_bits, residuals_packed) -> bool:
     return bool(residuals_packed) and a_bits is not None and w_bits is not None
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6, 7))
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6, 7, 8))
 def quantized_matmul(
     x: jax.Array,
     w: jax.Array,
@@ -113,6 +113,7 @@ def quantized_matmul(
     group_size: int = DEFAULT_GROUP,
     residuals_packed: bool = False,
     residual_bits: Optional[int] = None,
+    int_mac: bool = False,
 ) -> jax.Array:
     """``x @ w`` with GSE-quantized operands and gradients.
 
@@ -127,17 +128,21 @@ def quantized_matmul(
         matching bits; requires ``a_bits`` and ``w_bits``.
       residual_bits: override the stored residual bit-width (None = operand
         bits; lower values trade gradient fidelity for residual bytes).
+      int_mac: run the packed backward GEMMs (dX/dW) with realigned int32
+        MACs instead of fp32 tile dequant (bounded tier — parity within the
+        documented bound, not bit-exact; requires ``residuals_packed`` and
+        only affects the kernel route). REPRO_INT_MAC=1/0 overrides.
 
     Any of the bit-widths may be None to keep that operand in full precision
     (used for ablations and the QLoRA BF16 baseline).
     """
     y, _ = _qmm_fwd(x, w, a_bits, w_bits, g_bits, group_size,
-                    residuals_packed, residual_bits)
+                    residuals_packed, residual_bits, int_mac)
     return y
 
 
 def _qmm_fwd(x, w, a_bits, w_bits, g_bits, group_size, residuals_packed,
-             residual_bits):
+             residual_bits, int_mac=False):
     if _use_packed(a_bits, w_bits, residuals_packed):
         return _qmm_fwd_packed(x, w, a_bits, w_bits, group_size,
                                residual_bits)
@@ -191,9 +196,9 @@ def _qmm_fwd_packed(x, w, a_bits, w_bits, group_size, residual_bits):
 
 
 def _qmm_bwd(a_bits, w_bits, g_bits, group_size, residuals_packed,
-             residual_bits, res, dy):
+             residual_bits, res, dy, int_mac=False):
     if _use_packed(a_bits, w_bits, residuals_packed):
-        return _qmm_bwd_packed(g_bits, group_size, res, dy)
+        return _qmm_bwd_packed(g_bits, group_size, res, dy, int_mac)
     xq, wq = res
     dyq = _fq(dy, g_bits, group_size)                        # grouped along N
     # dX = Q(dY) @ Q(W)^T : contraction over N, reusing the forward-grouped
@@ -214,28 +219,29 @@ def _qmm_bwd(a_bits, w_bits, g_bits, group_size, residuals_packed,
     return dx, dw
 
 
-def _qmm_bwd_packed(g_bits, group_size, res, dy):
+def _qmm_bwd_packed(g_bits, group_size, res, dy, int_mac=False):
     """Backward on packed residuals: quantize+pack dY once (grouped along
     N), then both GEMMs consume packed operands directly — on TPU through
     the transposed-contraction / token-contraction Pallas kernels, on the
     simulation path through the exact-dequant fallback (bit-identical to
-    the fake-quant backward)."""
+    the fake-quant backward). ``int_mac`` selects the realigned-int32 MAC
+    mode of the kernels (bounded tier; inert on the fallback)."""
     xp, wp, dt = res
     x_dtype = dt.dtype
     dyq = _quant_pack(dy, g_bits, group_size) if g_bits is not None else dy
     # dX = Q(dY) @ Q(W)^T : wp already stores the (N, K) transposed layout.
     dx = ops.qcd_matmul_dx(dyq, wp, compute_dtype=dy.dtype,
-                           f32_out=ops.qcd_f32_out())
+                           f32_out=ops.qcd_f32_out(), int_mac=int_mac)
     # dW = Q(X)^T @ Q(dY) : contraction over tokens.
     dw = ops.qcd_matmul_dw(xp, dyq, out_dtype=dy.dtype, x_dtype=x_dtype,
-                           dy_dtype=dy.dtype)
+                           dy_dtype=dy.dtype, int_mac=int_mac)
     return dx, dw
 
 
 def _qmm_bwd_wrap(a_bits, w_bits, g_bits, group_size, residuals_packed,
-                  residual_bits, res, dy):
+                  residual_bits, int_mac, res, dy):
     dx, dw = _qmm_bwd(a_bits, w_bits, g_bits, group_size, residuals_packed,
-                      residual_bits, res, dy)
+                      residual_bits, res, dy, int_mac)
     return (dx, dw)
 
 
@@ -244,9 +250,11 @@ quantized_matmul.defvjp(_qmm_fwd, _qmm_bwd_wrap)
 
 def quantized_einsum_btd_dn(x, w, a_bits, w_bits, g_bits,
                             group_size=DEFAULT_GROUP,
-                            residuals_packed=False, residual_bits=None):
+                            residuals_packed=False, residual_bits=None,
+                            int_mac=False):
     """Convenience: (B, T, D) @ (D, N) with QCD semantics."""
     b, t, d = x.shape
     y = quantized_matmul(x.reshape(b * t, d), w, a_bits, w_bits, g_bits,
-                         group_size, residuals_packed, residual_bits)
+                         group_size, residuals_packed, residual_bits,
+                         int_mac)
     return y.reshape(b, t, -1)

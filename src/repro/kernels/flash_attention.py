@@ -41,6 +41,15 @@ def tile_position_mask(bq: int, bk: int, qi, ki, causal: bool, window: int,
     return mask
 
 
+def attention_scores(q, k, scale: float):
+    """The fp32 score GEMM of one tile: q (bq, D) x k (bk, D) -> (bq, bk).
+    Factored out of :func:`online_softmax_update` so the packed-KV kernel
+    can swap in the integer-MAC score path while the softmax recurrence
+    stays the single shared definition."""
+    return jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                               preferred_element_type=jnp.float32) * scale
+
+
 def online_softmax_update(q, k, v, mask, m_scr, l_scr, acc_scr,
                           scale: float):
     """One KV tile of the online-softmax recurrence, updating the VMEM
@@ -51,8 +60,15 @@ def online_softmax_update(q, k, v, mask, m_scr, l_scr, acc_scr,
     the packed-KV kernel/fallback in ``flash_attention_packed``, which is
     what makes fused-vs-oracle parity bit-exact rather than allclose.
     """
-    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                            preferred_element_type=jnp.float32) * scale
+    online_softmax_update_scores(attention_scores(q, k, scale), v, mask,
+                                 m_scr, l_scr, acc_scr)
+
+
+def online_softmax_update_scores(s, v, mask, m_scr, l_scr, acc_scr):
+    """The softmax/PV half of :func:`online_softmax_update`, taking the
+    score tile ``s`` (bq, bk) fp32 pre-computed — the entry point for the
+    packed kernel's integer-MAC score mode (same float sequence from the
+    masking onward, whichever MAC produced ``s``)."""
     if mask is not None:
         s = jnp.where(mask, s, NEG_INF)
     m_prev = m_scr[...]                                   # (bq, 1)

@@ -66,8 +66,11 @@ from jax.experimental import pallas as pl
 from repro.core.gse import (_PACK_CHUNK, DEFAULT_GROUP, effective_group_size,
                             exp2_int, gse_quantize, pack_mantissas,
                             unpack_mantissas)
-from repro.kernels.flash_attention import (NEG_INF, online_softmax_update,
+from repro.kernels.flash_attention import (NEG_INF, attention_scores,
+                                           online_softmax_update_scores,
                                            tile_position_mask)
+from repro.kernels.gse_matmul import gse_score_tile
+from repro.kernels.gse_quant import quantize_tile
 
 DEFAULT_BQ = 256
 DEFAULT_BK = 512
@@ -115,6 +118,28 @@ def quant_pack_kv_rows(x: jax.Array, bits: int, group: int = DEFAULT_GROUP,
     t = gse_quantize(x, bits, g)
     return (pack_mantissas(t.mantissa, bits, int32_shifts=int32_shifts),
             t.exponent)
+
+
+def unpack_kv_row_mantissas(words: jax.Array, head_dim: int,
+                            int32_shifts: bool = False):
+    """Row-planar word planes -> int8 mantissas (..., D), NO rescale — the
+    integer-MAC score path consumes mantissas and exponents separately
+    (the rank-1 ``2^(eq+ek)`` rescale happens after the int32 MAC)."""
+    d32 = -(-head_dim // _PACK_CHUNK) * _PACK_CHUNK
+    bits = kv_row_bits(words.shape[-1], head_dim)
+    return unpack_mantissas(words, bits, d32,
+                            int32_shifts=int32_shifts)[..., :head_dim]
+
+
+def dequant_q_rows(qm: jax.Array, qe: jax.Array, group: int):
+    """Exact fp32 dequant of in-flight quantized q rows (fp-valued
+    mantissas (..., D) x exponents (..., D/G)) — the tail columns of the
+    int-MAC score mode attend through Q(q) so packed and tail scores see
+    the same query values."""
+    ng = qe.shape[-1]
+    scale = exp2_int(qe.astype(jnp.int32))
+    vals = qm.astype(jnp.float32).reshape(*qm.shape[:-1], ng, group)
+    return (vals * scale[..., None]).reshape(qm.shape)
 
 
 def dequant_kv_rows(words: jax.Array, exps: jax.Array, head_dim: int,
@@ -169,7 +194,8 @@ def tail_position_mask(bq: int, tail_len: int, qi, causal: bool,
 def _flash_packed_kernel(qoff_ref, q_ref, kw_ref, ke_ref, vw_ref, ve_ref,
                          *rest, head_dim: int, groups: int, bq: int,
                          bk: int, k_steps: int, tail_len: int, causal: bool,
-                         window: int, scale: float, int32_shifts: bool):
+                         window: int, scale: float, int32_shifts: bool,
+                         int_mac: bool, bits: int):
     if tail_len:
         kt_ref, vt_ref, o_ref, m_scr, l_scr, acc_scr = rest
     else:
@@ -186,11 +212,34 @@ def _flash_packed_kernel(qoff_ref, q_ref, kw_ref, ke_ref, vw_ref, ve_ref,
 
     # tile-local dequant: only this (bk, D) K/V tile ever exists unpacked,
     # and only in VMEM — HBM holds b-bit words + int8 exponents
-    k = dequant_kv_rows(kw_ref[0], ke_ref[0], head_dim,
-                        int32_shifts=int32_shifts)          # (bk, D) fp32
     v = dequant_kv_rows(vw_ref[0], ve_ref[0], head_dim,
                         int32_shifts=int32_shifts)
     q = q_ref[0].reshape(groups * bq, head_dim).astype(jnp.float32)
+    if int_mac:
+        # exact tier: quantize q once per tile at the cache's bits/group,
+        # keep K as raw int8 mantissas, and run the score GEMM as the
+        # forward kernel's group-batched int8 MXU MAC + rank-1 rescale
+        # (head_dim is the grouping axis). The V/PV GEMM stays fp32.
+        km = unpack_kv_row_mantissas(kw_ref[0], head_dim,
+                                     int32_shifts=int32_shifts)  # (bk, D)
+        g_sz = head_dim // ke_ref.shape[-1]
+        qm, qe = quantize_tile(q, bits, g_sz)
+        qm8, qe8 = qm.astype(jnp.int8), qe.astype(jnp.int8)
+
+        def packed_scores():
+            return gse_score_tile(qm8, qe8, km, ke_ref[0],
+                                  group=g_sz) * scale
+        # tail columns (when present) attend through the dequantized Q(q)
+        # in fp32, as their own update — see the int_mac tail branch below
+    else:
+        k = dequant_kv_rows(kw_ref[0], ke_ref[0], head_dim,
+                            int32_shifts=int32_shifts)      # (bk, D) fp32
+
+        def packed_scores():
+            return attention_scores(q, k, scale)
+
+        def merged_scores(kt):
+            return attention_scores(q, jnp.concatenate([k, kt]), scale)
     mask = tile_position_mask(bq, bk, qi, ki, causal, window, q_offset)
     if tail_len:
         # tail rows own positions >= q_offset; the packed planes only the
@@ -199,28 +248,54 @@ def _flash_packed_kernel(qoff_ref, q_ref, kw_ref, ke_ref, vw_ref, ve_ref,
         hist = kpos < q_offset
         mask = hist if mask is None else mask & hist
 
-        # the fp tail joins the LAST packed tile's update: one score GEMM
-        # of bk + Tt columns — the tile shape stays non-degenerate (a
-        # Tt-column GEMM reduces in a different order than the wide one,
-        # which would break kernel-vs-fallback bit parity)
-        @pl.when(ki < k_steps - 1)
-        def _update():
-            online_softmax_update(q, k, v, _group_mask(mask, groups),
-                                  m_scr, l_scr, acc_scr, scale)
+        if int_mac:
+            # int mode runs the packed tile and the fp tail as TWO
+            # sequential fixed-shape updates. Merging them (the fp-mode
+            # shape below) concatenates two separately-produced score
+            # blocks, and XLA rounds the downstream fp32 recurrence
+            # differently per compilation of that concat graph (ulp-level
+            # mul+add fusion) — two plain updates are the one structure
+            # the kernel and the jnp fallback reproduce bitwise.
+            online_softmax_update_scores(packed_scores(), v,
+                                         _group_mask(mask, groups),
+                                         m_scr, l_scr, acc_scr)
 
-        @pl.when(ki == k_steps - 1)
-        def _last_with_tail():
-            kt = kt_ref[0].astype(jnp.float32)              # (Tt, D)
-            vt = vt_ref[0].astype(jnp.float32)
-            tmask = tail_position_mask(bq, tail_len, qi, causal, window,
-                                       q_offset)
-            online_softmax_update(
-                q, jnp.concatenate([k, kt]), jnp.concatenate([v, vt]),
-                _group_mask(jnp.concatenate([mask, tmask], axis=1), groups),
-                m_scr, l_scr, acc_scr, scale)
+            @pl.when(ki == k_steps - 1)
+            def _tail_update():
+                kt = kt_ref[0].astype(jnp.float32)          # (Tt, D)
+                vt = vt_ref[0].astype(jnp.float32)
+                tmask = tail_position_mask(bq, tail_len, qi, causal,
+                                           window, q_offset)
+                s_tail = attention_scores(dequant_q_rows(qm, qe, g_sz),
+                                          kt, scale)
+                online_softmax_update_scores(s_tail, vt,
+                                             _group_mask(tmask, groups),
+                                             m_scr, l_scr, acc_scr)
+        else:
+            # fp mode: the fp tail joins the LAST packed tile's update —
+            # ONE softmax update over bk + Tt score columns, matching the
+            # fallback's merged single-GEMM last step bit-for-bit
+            @pl.when(ki < k_steps - 1)
+            def _update():
+                online_softmax_update_scores(packed_scores(), v,
+                                             _group_mask(mask, groups),
+                                             m_scr, l_scr, acc_scr)
+
+            @pl.when(ki == k_steps - 1)
+            def _last_with_tail():
+                kt = kt_ref[0].astype(jnp.float32)          # (Tt, D)
+                vt = vt_ref[0].astype(jnp.float32)
+                tmask = tail_position_mask(bq, tail_len, qi, causal,
+                                           window, q_offset)
+                online_softmax_update_scores(
+                    merged_scores(kt), jnp.concatenate([v, vt]),
+                    _group_mask(jnp.concatenate([mask, tmask], axis=1),
+                                groups),
+                    m_scr, l_scr, acc_scr)
     else:
-        online_softmax_update(q, k, v, _group_mask(mask, groups), m_scr,
-                              l_scr, acc_scr, scale)
+        online_softmax_update_scores(packed_scores(), v,
+                                     _group_mask(mask, groups), m_scr,
+                                     l_scr, acc_scr)
 
     @pl.when(ki == k_steps - 1)
     def _store():
@@ -230,13 +305,14 @@ def _flash_packed_kernel(qoff_ref, q_ref, kw_ref, ke_ref, vw_ref, ve_ref,
 
 @functools.partial(jax.jit,
                    static_argnames=("causal", "window", "bq", "bk",
-                                    "interpret", "int32_shifts"))
+                                    "interpret", "int32_shifts", "int_mac"))
 def flash_attention_packed_pallas(q, k_words, k_exp, v_words, v_exp,
                                   causal: bool = True, window: int = 0,
                                   q_offset=0, bq: int = DEFAULT_BQ,
                                   bk: int = DEFAULT_BK, k_tail=None,
                                   v_tail=None, interpret: bool = True,
-                                  int32_shifts: bool = False):
+                                  int32_shifts: bool = False,
+                                  int_mac: bool = False):
     """q (BH, T, D) float (MHA) or (B*Kv, G, T, D) (GQA, folded by
     kv-head); k/v planes (BH|B*Kv, S, W) uint32 + (·, S, G) int8
     (row-planar packed layout) -> same leading layout as q.
@@ -250,12 +326,19 @@ def flash_attention_packed_pallas(q, k_words, k_exp, v_words, v_exp,
     *after* the packed tiles at positions ``q_offset + arange(Tt)`` while
     packed positions ``>= q_offset`` are masked — the quantize-after-attend
     decode append.
+
+    ``int_mac=True`` runs the score GEMM on the MXU in int8: q is
+    quantized in-kernel to the cache's bits/group (head_dim is the
+    grouping axis, so the forward matmul's exact rank-1-rescale recipe
+    applies — exact tier, bit-equal to the grouped fp32 score oracle);
+    tail columns attend through the dequantized Q(q) in fp32.
     """
     if q.ndim == 3:                           # MHA layout: group size 1
         o = flash_attention_packed_pallas(
             q[:, None], k_words, k_exp, v_words, v_exp, causal=causal,
             window=window, q_offset=q_offset, bq=bq, bk=bk, k_tail=k_tail,
-            v_tail=v_tail, interpret=interpret, int32_shifts=int32_shifts)
+            v_tail=v_tail, interpret=interpret, int32_shifts=int32_shifts,
+            int_mac=int_mac)
         return o[:, 0]
     bkv, groups, t, d = q.shape
     s_len = k_words.shape[1]
@@ -271,7 +354,8 @@ def flash_attention_packed_pallas(q, k_words, k_exp, v_words, v_exp,
     kernel = functools.partial(
         _flash_packed_kernel, head_dim=d, groups=groups, bq=bq, bk=bk,
         k_steps=k_steps, tail_len=tail_len, causal=causal, window=window,
-        scale=d ** -0.5, int32_shifts=int32_shifts)
+        scale=d ** -0.5, int32_shifts=int32_shifts, int_mac=int_mac,
+        bits=kv_row_bits(wpr, d))
     from jax.experimental.pallas import tpu as pltpu
     in_specs = [
         pl.BlockSpec((1, groups, bq, d), lambda b, i, j, off: (b, 0, i, 0)),
@@ -319,13 +403,14 @@ def _pad_seq(x, pad):
 
 @functools.partial(jax.jit,
                    static_argnames=("causal", "window", "k_chunk",
-                                    "int32_shifts"))
+                                    "int32_shifts", "int_mac"))
 def flash_attention_packed_jnp(q, k_words, k_exp, v_words, v_exp,
                                causal: bool = True, window: int = 0,
                                q_offset=0, is_global=None,
                                k_tail=None, v_tail=None,
                                k_chunk: int = DEFAULT_BK,
-                               int32_shifts: bool = False):
+                               int32_shifts: bool = False,
+                               int_mac: bool = False):
     """q (B, T, H, D); planes (B, S, Kv, ·) -> (B, T, H, D).
 
     Per scan step exactly one (B, kc, Kv, D) K/V tile is dequantized —
@@ -336,6 +421,11 @@ def flash_attention_packed_jnp(q, k_words, k_exp, v_words, v_exp,
     online-softmax step after the packed tiles, at positions ``q_offset +
     arange(Tt)``, with packed positions ``>= q_offset`` masked — the same
     quantize-after-attend semantics as the kernel.
+
+    ``int_mac=True`` replays the kernel's integer-MAC score recipe (q
+    quantized once to the cache's bits/group, per-group int MAC + rank-1
+    rescale summed in ascending group order, fp32 tail against Q(q)) —
+    bit-identical to the kernel's int mode at matching tiles.
     """
     b, t, h, d = q.shape
     s_len, kv = k_words.shape[1], k_words.shape[2]
@@ -360,12 +450,61 @@ def flash_attention_packed_jnp(q, k_words, k_exp, v_words, v_exp,
     has_tail = k_tail is not None
     scale = d ** -0.5
 
-    def tile_update(carry, kblk, vblk, mask):
-        """One online-softmax tile against fp K/V (B, kc, Kv, D) — the
-        single float sequence shared by the packed tiles and the tail."""
+    if int_mac:
+        # quantize q ONCE at the cache's bits/group (same quantize_tile as
+        # the kernel); packed scores run the per-group int MAC + rank-1
+        # rescale in ascending group order, tail scores the fp32 GEMM
+        # against the dequantized Q(q) — the kernel's exact float sequence.
+        kb_bits = kv_row_bits(k_words.shape[-1], d)
+        g_sz = d // k_exp.shape[-1]
+        ngr = d // g_sz
+        qm, qe = quantize_tile(qg.reshape(-1, d), kb_bits, g_sz)
+        qdq = dequant_q_rows(qm, qe, g_sz).reshape(b, t, kv, g, d)
+        qmg = qm.astype(jnp.int32).reshape(b, t, kv, g, ngr, g_sz)
+        sq = jnp.moveaxis(exp2_int(qe.astype(jnp.int32))
+                          .reshape(b, t, kv, g, ngr), -1, 0)  # (n,b,t,kv,g)
+        sqn = sq.transpose(0, 1, 3, 4, 2)                     # (n,b,kv,g,t)
+
+        def packed_scores(kwb, keb):
+            km = unpack_kv_row_mantissas(
+                kwb, d, int32_shifts=int32_shifts)      # (B, kc, Kv, D)
+            kmg = km.astype(jnp.int32).reshape(b, -1, kv, ngr, g_sz)
+            prod = jnp.einsum("btkgnc,bsknc->nbkgts", qmg, kmg)   # int32
+            sk = jnp.moveaxis(exp2_int(keb.astype(jnp.int32)), -1, 0)
+            skn = sk.transpose(0, 1, 3, 2)                    # (n,b,kv,s)
+            scaled = (prod.astype(jnp.float32) * sqn[..., None]
+                      * skn[:, :, :, None, None, :])
+            acc = jnp.zeros(scaled.shape[1:], jnp.float32)
+            for gi in range(ngr):           # ordered group sum (contract)
+                acc = acc + scaled[gi]
+            return acc * scale
+
+        def tail_scores(ktail):
+            # fp32 tail GEMM against Q(q) — its own softmax update, the
+            # same split-step structure as the kernel's int_mac tail
+            return jnp.einsum("btkgd,bskd->bkgts", qdq,
+                              ktail.astype(jnp.float32),
+                              preferred_element_type=jnp.float32) * scale
+    else:
+        def packed_scores(kwb, keb):
+            kblk = dequant_kv_rows(kwb, keb, d, int32_shifts=int32_shifts)
+            return jnp.einsum("btkgd,bskd->bkgts", qg, kblk,
+                              preferred_element_type=jnp.float32) * scale
+
+        def merged_scores(kwb, keb, ktail):
+            # one score GEMM over kc + Tt columns (the kernel's merged
+            # last step — same float sequence)
+            kblk = dequant_kv_rows(kwb, keb, d, int32_shifts=int32_shifts)
+            kcat = jnp.concatenate([kblk, ktail.astype(jnp.float32)],
+                                   axis=1)
+            return jnp.einsum("btkgd,bskd->bkgts", qg, kcat,
+                              preferred_element_type=jnp.float32) * scale
+
+    def tile_update(carry, sblk, vblk, mask):
+        """One online-softmax tile from precomputed scores (B, Kv, G, T, S)
+        against fp V (B, kc, Kv, D) — the single float sequence shared by
+        the packed tiles and the tail, whichever MAC produced the scores."""
         m_prev, l_prev, acc = carry
-        sblk = jnp.einsum("btkgd,bskd->bkgts", qg, kblk,
-                          preferred_element_type=jnp.float32) * scale
         sblk = jnp.where(mask[None, None, None], sblk, NEG_INF)
         m_new = jnp.maximum(m_prev, jnp.max(sblk, axis=-1))
         p = jnp.exp(sblk - m_new[..., None])
@@ -394,36 +533,38 @@ def flash_attention_packed_jnp(q, k_words, k_exp, v_words, v_exp,
             mask = mask & (kpos[None, :] < qoff)
         return mask
 
-    def dequant_tile(kwb, keb, vwb, veb):
-        return (dequant_kv_rows(kwb, keb, d, int32_shifts=int32_shifts),
-                dequant_kv_rows(vwb, veb, d, int32_shifts=int32_shifts))
-
     def k_step(carry, inp):
         kwb, keb, vwb, veb, ki = inp
-        kblk, vblk = dequant_tile(kwb, keb, vwb, veb)   # (B, kc, Kv, D)
-        return tile_update(carry, kblk, vblk,
+        vblk = dequant_kv_rows(vwb, veb, d, int32_shifts=int32_shifts)
+        return tile_update(carry, packed_scores(kwb, keb), vblk,
                            tile_mask(ki * kc + jnp.arange(kc))), None
 
     m0 = jnp.full((b, kv, g, t), NEG_INF, jnp.float32)
     l0 = jnp.zeros((b, kv, g, t), jnp.float32)
     a0 = jnp.zeros((b, kv, g, t, d), jnp.float32)
-    # with a tail, the last packed tile and the fp tail merge into ONE
-    # update whose score GEMM has kc + Tt columns — the same float
-    # sequence as the kernel's merged last step (a Tt-column GEMM would
-    # reduce in a different order and break bit parity)
-    n_scan = nk - 1 if has_tail else nk
+    # fp mode with a tail: the last packed tile and the fp tail merge into
+    # ONE softmax update over kc + Tt score columns — the same m/l/acc
+    # recurrence as the kernel's merged last step. int mode instead scans
+    # ALL packed tiles and runs the tail as its own update (the kernel's
+    # split-step int_mac structure — see its comment on concat rounding).
+    n_scan = nk if (not has_tail or int_mac) else nk - 1
     carry, _ = jax.lax.scan(k_step, (m0, l0, a0),
                             jax.tree.map(lambda x: x[:n_scan], xs))
     if has_tail:
-        kblk, vblk = dequant_tile(*(x[nk - 1] for x in xs[:4]))
         tmask = tail_position_mask(t, k_tail.shape[1], 0, causal, window,
                                    qoff, is_global)
-        carry = tile_update(
-            carry,
-            jnp.concatenate([kblk, k_tail.astype(jnp.float32)], axis=1),
-            jnp.concatenate([vblk, v_tail.astype(jnp.float32)], axis=1),
-            jnp.concatenate([tile_mask((nk - 1) * kc + jnp.arange(kc)),
-                             tmask], axis=1))
+        if int_mac:
+            carry = tile_update(carry, tail_scores(k_tail),
+                                v_tail.astype(jnp.float32), tmask)
+        else:
+            kwb, keb, vwb, veb = (x[nk - 1] for x in xs[:4])
+            vblk = dequant_kv_rows(vwb, veb, d, int32_shifts=int32_shifts)
+            carry = tile_update(
+                carry,
+                merged_scores(kwb, keb, k_tail),
+                jnp.concatenate([vblk, v_tail.astype(jnp.float32)], axis=1),
+                jnp.concatenate([tile_mask((nk - 1) * kc + jnp.arange(kc)),
+                                 tmask], axis=1))
     _, l_f, acc = carry
     out = acc / jnp.maximum(l_f, 1e-30)[..., None]
     # (B, KV, G, T, D) -> (B, T, KV, G, D) -> (B, T, H, D)

@@ -56,23 +56,48 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.gse import _PACK_CHUNK, exp2_int
+from repro.core.gse import _PACK_CHUNK, exp2_int, qmax_for_bits
 from repro.kernels.gse_unpack import unpack_tile
 
 DEFAULT_BM = 128
 DEFAULT_BN = 128
 DEFAULT_BK = 512
 
+# Static overflow guard for the realigned int-MAC mode: the int32
+# accumulator of one contraction tile must hold depth * qmax_a * qmax_b in
+# the worst case (every realigned mantissa at full scale). Module-level so
+# tests can shrink it to exercise the guard without a 2^18-deep GEMM.
+INT32_ACC_MAX = 2 ** 31 - 1
 
-def _mac_accumulate(am, ae, bm, be, acc_ref, *, group: int):
-    """One K-tile of the GSE MAC: int8 group-batched dot on the MXU, then
-    the rank-1 ``2^(eA+eB)`` rescale, accumulated into fp32 ``acc_ref``.
 
-    Groups are accumulated **sequentially in ascending order** (static
-    unrolled loop) — the ordered-accumulation contract of
-    ``gse_matmul_reference``; the K grid walks tiles in ascending order, so
-    the global fp32 add sequence matches the oracle exactly and parity is
-    bit-exact, not just allclose."""
+def int_mac_max_depth(a_bits: int, b_bits: int) -> int:
+    """Largest contraction-tile depth whose realigned int32 accumulation
+    cannot wrap: depth * qmax_a * qmax_b <= INT32_ACC_MAX."""
+    return INT32_ACC_MAX // (qmax_for_bits(a_bits) * qmax_for_bits(b_bits))
+
+
+def check_int_mac_depth(depth: int, a_bits: int, b_bits: int) -> None:
+    """Reject (at trace time) a tile configuration whose realigned int-MAC
+    accumulation could overflow int32. ``depth`` is the contraction extent
+    of ONE kernel tile (the int32 accumulator is rescaled to fp32 at every
+    tile boundary, so only the in-tile depth counts)."""
+    limit = int_mac_max_depth(a_bits, b_bits)
+    if depth > limit:
+        raise ValueError(
+            f"int-MAC tile depth {depth} can overflow int32 accumulation at "
+            f"{a_bits}x{b_bits} bits (max safe depth {limit}); shrink the "
+            "contraction tile or disable int_mac")
+
+
+def gse_group_products(am, ae, bm, be, *, group: int):
+    """The shared-exponent integer MAC of one tile, group-batched: int8
+    mantissas am (BM, BK) x bm (BN, BK) with per-group exponents
+    ae (BM, BK/G) / be (BN, BK/G) -> fp32 scaled products (ng, BM, BN).
+
+    int8 x int8 -> int32 ``dot_general`` with the group axis batched (the
+    MXU form), then the rank-1 ``2^(eA+eB)`` rescale. Every scaled term is
+    exact in fp32: the group MAC is an integer < 2^24 and ``exp2_int``
+    builds the power of two exactly (XLA exp2 can be an ulp off)."""
     bm_sz, bk = am.shape
     bn_sz = bm.shape[0]
     ng = bk // group
@@ -84,15 +109,75 @@ def _mac_accumulate(am, ae, bm, be, acc_ref, *, group: int):
         ag, bg, (((2,), (2,)), ((0,), (0,))),
         preferred_element_type=jnp.int32)             # (ng, BM, BN)
 
-    # per-group rank-1 exponent rescale; each scaled term is exact in fp32
-    # (exp2_int builds the power of two exactly — XLA exp2 can be an ulp off)
     sa = exp2_int(ae).transpose(1, 0)                 # (ng, BM)
     sb = exp2_int(be).transpose(1, 0)                 # (ng, BN)
-    scaled = prod.astype(jnp.float32) * sa[:, :, None] * sb[:, None, :]
+    return prod.astype(jnp.float32) * sa[:, :, None] * sb[:, None, :]
+
+
+def _mac_accumulate(am, ae, bm, be, acc_ref, *, group: int):
+    """One K-tile of the GSE MAC: int8 group-batched dot on the MXU, then
+    the rank-1 ``2^(eA+eB)`` rescale, accumulated into fp32 ``acc_ref``.
+
+    Groups are accumulated **sequentially in ascending order** (static
+    unrolled loop) — the ordered-accumulation contract of
+    ``gse_matmul_reference``; the K grid walks tiles in ascending order, so
+    the global fp32 add sequence matches the oracle exactly and parity is
+    bit-exact, not just allclose."""
+    scaled = gse_group_products(am, ae, bm, be, group=group)
     acc = acc_ref[...]
-    for gi in range(ng):              # ordered fp32 accumulation (contract)
+    for gi in range(scaled.shape[0]):  # ordered fp32 accumulation (contract)
         acc = acc + scaled[gi]
     acc_ref[...] = acc
+
+
+def gse_score_tile(qm, qe, km, ke, *, group: int):
+    """Integer-MAC attention score tile: q mantissas (R, D) int8 with
+    exponents (R, D/G) x k mantissas (S, D) / (S, D/G) -> scores (R, S)
+    fp32, **before** the softmax scale.
+
+    head_dim D is the row-planar grouping axis, so the forward matmul
+    kernel's exact recipe applies verbatim: per-group int8 MXU MAC, rank-1
+    ``2^(eq+ek)`` rescale, groups summed in ascending order from zero (the
+    ordered-accumulation contract — equal to the grouped fp32 oracle
+    ``ref.gse_score_int_ref`` bit-for-bit, since every within-group partial
+    sum shares one power-of-two scale and fits 24 mantissa bits)."""
+    scaled = gse_group_products(qm, qe, km, ke, group=group)
+    acc = jnp.zeros(scaled.shape[1:], jnp.float32)
+    for gi in range(scaled.shape[0]):
+        acc = acc + scaled[gi]
+    return acc
+
+
+def realign_rows(m, e, *, group: int):
+    """Realign GSE mantissas of each ROW onto that row's max exponent:
+    m (R, C) int8 grouped along C (e (R, C/G) int8) -> (m' int8 (R, C),
+    e_max (R,) int32) with m' = m >> (e_max - e) (arithmetic shift = floor
+    division by the power of two — low bits shift out; this is the lossy
+    half of the bounded-tier contract)."""
+    e32 = e.astype(jnp.int32)
+    e_max = jnp.max(e32, axis=-1)                     # (R,)
+    s = e_max[:, None] - e32                          # (R, C/G)
+    r, c = m.shape
+    mg = m.astype(jnp.int32).reshape(r, c // group, group)
+    mg = jax.lax.shift_right_arithmetic(
+        mg, jnp.broadcast_to(s[..., None], mg.shape))
+    return mg.reshape(r, c).astype(jnp.int8), e_max
+
+
+def realign_col_groups(m, e, *, group: int):
+    """Realign each COLUMN GROUP of GSE mantissas onto the group's max
+    exponent across all rows: m (R, C) int8 grouped along C (e (R, C/G)
+    int8) -> (m' int8 (R, C), e_max (C/G,) int32). Used when the
+    contraction runs over the rows, so each output column needs one shared
+    scale across every contracted row."""
+    e32 = e.astype(jnp.int32)
+    e_max = jnp.max(e32, axis=0)                      # (C/G,)
+    s = e_max[None, :] - e32                          # (R, C/G)
+    r, c = m.shape
+    mg = m.astype(jnp.int32).reshape(r, c // group, group)
+    mg = jax.lax.shift_right_arithmetic(
+        mg, jnp.broadcast_to(s[..., None], mg.shape))
+    return mg.reshape(r, c).astype(jnp.int8), e_max
 
 
 def _gse_matmul_kernel(am_ref, ae_ref, bm_ref, be_ref, o_ref, acc_ref, *,
@@ -229,17 +314,39 @@ def dequant_packed_tile(words, e, bits: int, group: int,
 def _gse_matmul_packed_nt_kernel(aw_ref, ae_ref, bw_ref, be_ref, o_ref,
                                  acc_ref, *, a_bits: int, b_bits: int,
                                  a_group: int, b_group: int, n_steps: int,
-                                 int32_shifts: bool):
+                                 int32_shifts: bool, int_mac: bool):
     @pl.when(pl.program_id(2) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    adeq = dequant_packed_tile(aw_ref[...], ae_ref[...], a_bits, a_group,
-                               int32_shifts)              # (bm, bn)
-    bdeq = dequant_packed_tile(bw_ref[...], be_ref[...], b_bits, b_group,
-                               int32_shifts)              # (bn, bk)
-    acc_ref[...] = acc_ref[...] + jnp.dot(
-        adeq, bdeq, preferred_element_type=jnp.float32)
+    if int_mac:
+        # bounded tier: realign both tiles onto tile-shared exponents (A
+        # per row — its grouping axis IS the contraction; B per K column
+        # group — its contraction runs over rows), int8 MXU MAC in int32,
+        # one rank-1 2^(eamax+ebmax) rescale per tile. Low mantissa bits
+        # shift out in the realignment: NOT bit-exact vs the fp32 tier
+        # (error bound: ref.int_realign_bound).
+        am = unpack_tile(aw_ref[...], a_bits, int32_shifts)   # (bm, bn)
+        bm = unpack_tile(bw_ref[...], b_bits, int32_shifts)   # (bn, bk)
+        am_r, ea_max = realign_rows(am, ae_ref[...], group=a_group)
+        bm_r, eb_max = realign_col_groups(bm, be_ref[...], group=b_group)
+        prod = jax.lax.dot_general(
+            am_r, bm_r, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)                 # (bm, bk)
+        sa = exp2_int(ea_max)                                 # (bm,)
+        sb = exp2_int(eb_max)                                 # (bk/G,)
+        bm_sz, bk = prod.shape
+        scaled = prod.astype(jnp.float32) * sa[:, None]
+        scaled = (scaled.reshape(bm_sz, bk // b_group, b_group)
+                  * sb[None, :, None]).reshape(bm_sz, bk)
+        acc_ref[...] = acc_ref[...] + scaled
+    else:
+        adeq = dequant_packed_tile(aw_ref[...], ae_ref[...], a_bits, a_group,
+                                   int32_shifts)              # (bm, bn)
+        bdeq = dequant_packed_tile(bw_ref[...], be_ref[...], b_bits, b_group,
+                                   int32_shifts)              # (bn, bk)
+        acc_ref[...] = acc_ref[...] + jnp.dot(
+            adeq, bdeq, preferred_element_type=jnp.float32)
 
     @pl.when(pl.program_id(2) == n_steps - 1)
     def _store():
@@ -249,13 +356,14 @@ def _gse_matmul_packed_nt_kernel(aw_ref, ae_ref, bw_ref, be_ref, o_ref,
 @functools.partial(jax.jit,
                    static_argnames=("a_bits", "b_bits", "a_group", "b_group",
                                     "bm", "bn", "bk", "interpret",
-                                    "int32_shifts"))
+                                    "int32_shifts", "int_mac"))
 def gse_matmul_packed_nt_pallas(a_words, a_e, b_words, b_e, a_bits: int,
                                 b_bits: int, a_group: int = 32,
                                 b_group: int = 32,
                                 bm: int = DEFAULT_BM, bn: int = DEFAULT_BK,
                                 bk: int = DEFAULT_BN, interpret: bool = True,
-                                int32_shifts: bool = False):
+                                int32_shifts: bool = False,
+                                int_mac: bool = False):
     """dX-shaped packed matmul: A (M, N) @ B (N, K) -> (M, K) fp32,
     contracting over N.
 
@@ -268,6 +376,14 @@ def gse_matmul_packed_nt_pallas(a_words, a_e, b_words, b_e, a_bits: int,
     both tiles are dequantized in VMEM and fp32-MAC'd, tiles accumulated in
     ascending N order (the ordered-accumulation contract —
     ``ref.gse_matmul_packed_nt_ref`` replays the same sequence).
+
+    ``int_mac=True`` swaps the tile MAC for the realigned integer path
+    (bounded tier): mantissas shift onto a tile-shared exponent in VMEM,
+    the MAC runs int8 x int8 -> int32 on the MXU and one ``exp2_int``
+    rescale closes the tile. Not bit-exact (realignment drops low bits;
+    oracle ``ref.gse_matmul_packed_nt_int_ref``, bound
+    ``ref.int_realign_bound``); :func:`check_int_mac_depth` rejects tile
+    depths whose int32 accumulation could wrap.
     """
     m_dim, naw = a_words.shape
     n_dim, nbw = b_words.shape
@@ -282,12 +398,14 @@ def gse_matmul_packed_nt_pallas(a_words, a_e, b_words, b_e, a_bits: int,
     assert bk % b_group == 0 and bk % _PACK_CHUNK == 0
     bnw = bn // _PACK_CHUNK * a_bits
     bkw = bk // _PACK_CHUNK * b_bits
+    if int_mac:
+        check_int_mac_depth(bn, a_bits, b_bits)
     n_steps = n_dim // bn
     grid = (m_dim // bm, k_dim // bk, n_steps)
     kernel = functools.partial(_gse_matmul_packed_nt_kernel, a_bits=a_bits,
                                b_bits=b_bits, a_group=a_group,
                                b_group=b_group, n_steps=n_steps,
-                               int32_shifts=int32_shifts)
+                               int32_shifts=int32_shifts, int_mac=int_mac)
     from jax.experimental.pallas import tpu as pltpu
     return pl.pallas_call(
         kernel,
@@ -308,18 +426,40 @@ def gse_matmul_packed_nt_pallas(a_words, a_e, b_words, b_e, a_bits: int,
 def _gse_matmul_packed_tn_kernel(aw_ref, ae_ref, bw_ref, be_ref, o_ref,
                                  acc_ref, *, a_bits: int, b_bits: int,
                                  a_group: int, b_group: int, m_steps: int,
-                                 int32_shifts: bool):
+                                 int32_shifts: bool, int_mac: bool):
     @pl.when(pl.program_id(2) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    adeq = dequant_packed_tile(aw_ref[...], ae_ref[...], a_bits, a_group,
-                               int32_shifts)              # (bm, bk)
-    bdeq = dequant_packed_tile(bw_ref[...], be_ref[...], b_bits, b_group,
-                               int32_shifts)              # (bm, bn)
-    acc_ref[...] = acc_ref[...] + jax.lax.dot_general(
-        adeq, bdeq, (((0,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)               # (bk, bn)
+    if int_mac:
+        # bounded tier: the contraction runs over the shared leading axis
+        # of BOTH operands, so both realign per output column group (one
+        # shared exponent per group across all contracted rows), then one
+        # dim0 x dim0 int8 MXU MAC and a rank-1 rescale per tile.
+        am = unpack_tile(aw_ref[...], a_bits, int32_shifts)   # (bm, bk)
+        bm = unpack_tile(bw_ref[...], b_bits, int32_shifts)   # (bm, bn)
+        am_r, ea_max = realign_col_groups(am, ae_ref[...], group=a_group)
+        bm_r, eb_max = realign_col_groups(bm, be_ref[...], group=b_group)
+        prod = jax.lax.dot_general(
+            am_r, bm_r, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)                 # (bk, bn)
+        sa = exp2_int(ea_max)                                 # (bk/Ga,)
+        sb = exp2_int(eb_max)                                 # (bn/Gb,)
+        bk, bn_sz = prod.shape
+        scaled = (prod.astype(jnp.float32).reshape(
+            bk // a_group, a_group, bn_sz) * sa[:, None, None]
+        ).reshape(bk, bn_sz)
+        scaled = (scaled.reshape(bk, bn_sz // b_group, b_group)
+                  * sb[None, :, None]).reshape(bk, bn_sz)
+        acc_ref[...] = acc_ref[...] + scaled
+    else:
+        adeq = dequant_packed_tile(aw_ref[...], ae_ref[...], a_bits, a_group,
+                                   int32_shifts)              # (bm, bk)
+        bdeq = dequant_packed_tile(bw_ref[...], be_ref[...], b_bits, b_group,
+                                   int32_shifts)              # (bm, bn)
+        acc_ref[...] = acc_ref[...] + jax.lax.dot_general(
+            adeq, bdeq, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)               # (bk, bn)
 
     @pl.when(pl.program_id(2) == m_steps - 1)
     def _store():
@@ -329,13 +469,14 @@ def _gse_matmul_packed_tn_kernel(aw_ref, ae_ref, bw_ref, be_ref, o_ref,
 @functools.partial(jax.jit,
                    static_argnames=("a_bits", "b_bits", "a_group", "b_group",
                                     "bm", "bn", "bk", "interpret",
-                                    "int32_shifts"))
+                                    "int32_shifts", "int_mac"))
 def gse_matmul_packed_tn_pallas(a_words, a_e, b_words, b_e, a_bits: int,
                                 b_bits: int, a_group: int = 32,
                                 b_group: int = 32,
                                 bm: int = DEFAULT_BK, bn: int = DEFAULT_BN,
                                 bk: int = DEFAULT_BM, interpret: bool = True,
-                                int32_shifts: bool = False):
+                                int32_shifts: bool = False,
+                                int_mac: bool = False):
     """dW-shaped packed matmul: A (M, K)^T @ B (M, N) -> (K, N) fp32,
     contracting over the shared leading token axis M of both packed
     operands (for dW: A is the saved Q(X) residual grouped along K, B the
@@ -345,6 +486,10 @@ def gse_matmul_packed_tn_pallas(a_words, a_e, b_words, b_e, a_bits: int,
     (M, N//32*b_bits), b_e (M, N//b_group). ``bm`` tiles the contraction axis; tiles are
     dequantized in VMEM, fp32-MAC'd with a dim-0 x dim-0 ``dot_general``,
     and accumulated in ascending M order (ordered-accumulation contract).
+
+    ``int_mac=True``: realigned integer tile MAC (bounded tier — see
+    :func:`gse_matmul_packed_nt_pallas`; oracle
+    ``ref.gse_matmul_packed_tn_int_ref``).
     """
     m_dim, naw = a_words.shape
     m2, nbw = b_words.shape
@@ -360,12 +505,14 @@ def gse_matmul_packed_tn_pallas(a_words, a_e, b_words, b_e, a_bits: int,
     assert bn % b_group == 0 and bn % _PACK_CHUNK == 0
     bkw = bk // _PACK_CHUNK * a_bits
     bnw = bn // _PACK_CHUNK * b_bits
+    if int_mac:
+        check_int_mac_depth(bm, a_bits, b_bits)
     m_steps = m_dim // bm
     grid = (k_dim // bk, n_dim // bn, m_steps)
     kernel = functools.partial(_gse_matmul_packed_tn_kernel, a_bits=a_bits,
                                b_bits=b_bits, a_group=a_group,
                                b_group=b_group, m_steps=m_steps,
-                               int32_shifts=int32_shifts)
+                               int32_shifts=int32_shifts, int_mac=int_mac)
     from jax.experimental.pallas import tpu as pltpu
     return pl.pallas_call(
         kernel,

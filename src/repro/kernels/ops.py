@@ -34,14 +34,21 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def _env_tristate(name: str, default_fn) -> bool:
-    """Shared 1/0/auto env-flag reader for the kernel-path toggles."""
+def _env_tristate_raw(name: str):
+    """Shared 1/0/auto env-flag vocabulary: True / False / None (auto —
+    unset or any unrecognized value defers to the caller's default)."""
     env = os.environ.get(name, "auto").lower()
     if env in ("1", "true", "on"):
         return True
     if env in ("0", "false", "off"):
         return False
-    return default_fn()
+    return None
+
+
+def _env_tristate(name: str, default_fn) -> bool:
+    """Shared 1/0/auto env-flag reader for the kernel-path toggles."""
+    forced = _env_tristate_raw(name)
+    return default_fn() if forced is None else forced
 
 
 # uint32 shifts are not lowered by every Mosaic version; the packed kernels
@@ -56,12 +63,24 @@ def int32_shift_fallback() -> bool:
 
 def qcd_f32_out() -> bool:
     """Single reader for REPRO_QCD_F32_OUT (the fp32-GEMM-output ablation of
-    the QCD training path — repro.core.qcd); read at trace time. Any
-    non-empty value enables it (the flag's historical truthiness) EXCEPT
-    the explicit disables 0/false/off, so both =1 and =0 mean what they
-    say alongside the sibling tristate flags."""
-    env = os.environ.get("REPRO_QCD_F32_OUT", "").lower()
-    return env not in ("", "0", "false", "off")
+    the QCD training path — repro.core.qcd); read at trace time. Same
+    1/0/auto vocabulary as every other kernel knob (auto/unset = off) —
+    this used to be a bespoke any-non-empty-truthy reader, the last one in
+    this module."""
+    return _env_tristate("REPRO_QCD_F32_OUT", lambda: False)
+
+
+def int_mac_requested():
+    """REPRO_INT_MAC tri-state: 1/0 force the integer-MAC mode of the
+    packed kernels on/off regardless of the QuantPolicy flag / call
+    argument; auto (default) defers to the caller."""
+    return _env_tristate_raw("REPRO_INT_MAC")
+
+
+def resolve_int_mac(flag: bool) -> bool:
+    """Combine a caller/policy ``int_mac`` flag with the env override."""
+    forced = int_mac_requested()
+    return bool(flag) if forced is None else forced
 
 
 def qcd_packed_kernels() -> bool:
@@ -73,6 +92,18 @@ def qcd_packed_kernels() -> bool:
     mode (tests/benches — fp32 tile-ordered accumulation, no longer
     bit-identical to the bf16 simulation)."""
     return _env_tristate("REPRO_QCD_PACKED_KERNELS", _on_tpu)
+
+
+# Every boolean kernel knob and its reader, all speaking the same 1/0/auto
+# vocabulary (the regression test sweeps this table). REPRO_INT_MAC is the
+# tri-state override for the integer-MAC kernel modes; its table entry
+# resolves against an ``auto -> off`` caller default.
+ENV_TRISTATE_KNOBS = {
+    "REPRO_GSE_INT32_SHIFTS": lambda: int32_shift_fallback(),
+    "REPRO_QCD_PACKED_KERNELS": lambda: qcd_packed_kernels(),
+    "REPRO_QCD_F32_OUT": lambda: qcd_f32_out(),
+    "REPRO_INT_MAC": lambda: resolve_int_mac(False),
+}
 
 
 def gse_quantize(x, bits: int = 6, group: int = 32, **block_kw):
@@ -248,7 +279,8 @@ def flash_attention_packed(q, k_words, k_exp, v_words, v_exp, *,
                            causal: bool = True, window: int = 0,
                            q_offset=0, is_global=None,
                            k_tail=None, v_tail=None,
-                           bq: int = 256, bk: int = 512):
+                           bq: int = 256, bk: int = 512,
+                           int_mac: bool = False):
     """Fused packed-KV flash attention dispatcher.
 
     q (B, T, H, D); planes (B, S, Kv, ·) in the row-planar packed layout;
@@ -258,15 +290,22 @@ def flash_attention_packed(q, k_words, k_exp, v_words, v_exp, *,
     traced decode offsets (scalar prefetch); traced ``is_global`` and
     ragged tile lengths run the tile-local jnp fallback, which computes
     the identical float sequence one KV tile at a time.
+
+    ``int_mac=True`` (or REPRO_INT_MAC=1) runs the score GEMM on the
+    exact-tier integer path — in-tile q quantization, int8 MACs, rank-1
+    rescale — on BOTH routes (same int sequence, kernel == fallback
+    bitwise).
     """
     global _LAST_FAP_ROUTE
     b, t, h, d = q.shape
     s_len, kv = k_words.shape[1], k_words.shape[2]
+    int_mac = resolve_int_mac(int_mac)
     off = concrete_scalar_int(q_offset)
     if off is not None:
         q_offset = off
     use_kernel, reason = fap_route_decision(
         t, s_len, h, kv, has_is_global=is_global is not None, bq=bq, bk=bk)
+    reason += " [int-mac scores]" if int_mac else ""
     _LAST_FAP_ROUTE = ("kernel" if use_kernel else "fallback", reason)
     _fap_log.debug("flash_attention_packed -> %s (%s)",
                    _LAST_FAP_ROUTE[0], reason)
@@ -284,13 +323,14 @@ def flash_attention_packed(q, k_words, k_exp, v_words, v_exp, *,
             qf, fold(k_words), fold(k_exp), fold(v_words), fold(v_exp),
             causal=causal, window=window, q_offset=q_offset, bq=bq, bk=bk,
             interpret=not _on_tpu(), int32_shifts=int32_shift_fallback(),
-            **tails)
+            int_mac=int_mac, **tails)
         return o.reshape(b, kv, g, t, d).transpose(0, 3, 1, 2, 4).reshape(
             b, t, h, d)
     return fap.flash_attention_packed_jnp(
         q, k_words, k_exp, v_words, v_exp, causal=causal, window=window,
         q_offset=q_offset, is_global=is_global, k_tail=k_tail,
-        v_tail=v_tail, k_chunk=bk, int32_shifts=int32_shift_fallback())
+        v_tail=v_tail, k_chunk=bk, int32_shifts=int32_shift_fallback(),
+        int_mac=int_mac)
 
 
 # ---------------------------------------------------------------------------
@@ -304,7 +344,65 @@ def flash_attention_packed(q, k_words, k_exp, v_words, v_exp, *,
 # is what makes the packed/fake-quant A/B parity an array_equal, not an
 # allclose. The kernel path instead follows the ordered-accumulation
 # contract (fp32 tile MACs), bit-exact vs the ref.py oracles.
+#
+# Every dispatch records its decision per GEMM (last_qcd_route) and
+# debug-logs the reason — the same observability contract the attention
+# dispatcher carries (last_fap_route); forced-env is no longer the only
+# probe of which path actually ran.
 # ---------------------------------------------------------------------------
+
+_qcd_log = logging.getLogger("repro.kernels.qcd")
+_LAST_QCD_ROUTE = {
+    "y": ("", "never dispatched"),
+    "dx": ("", "never dispatched"),
+    "dw": ("", "never dispatched"),
+}
+
+
+def last_qcd_route(gemm: str | None = None):
+    """(route, reason) of the most recent QCD GEMM dispatch.
+
+    ``gemm`` is "y" (forward), "dx" or "dw" (backward); with no argument
+    the whole {gemm: (route, reason)} dict is returned. Route is "kernel"
+    or "fallback" ("" before the first dispatch); reasons carry the
+    deciding condition plus the MAC mode of the chosen path."""
+    if gemm is None:
+        return dict(_LAST_QCD_ROUTE)
+    return _LAST_QCD_ROUTE[gemm]
+
+
+_QCD_OPERAND_NAMES = {"y": ("x", "w"), "dx": ("dy", "w"), "dw": ("x", "dy")}
+
+
+def _qcd_route(gemm: str, operands, *, group_match: bool = True,
+               mac: str = "fp32 tile MACs") -> bool:
+    """Route one QCD GEMM: returns use_kernel, recording (route, reason)
+    under ``gemm`` and debug-logging it. ``mac`` names the kernel path's
+    MAC mode for the reason string; the fallback is always the exact-
+    dequant XLA matmul."""
+    names = _QCD_OPERAND_NAMES[gemm]
+
+    def record(use_kernel: bool, reason: str) -> bool:
+        route = "kernel" if use_kernel else "fallback"
+        _LAST_QCD_ROUTE[gemm] = (route, reason)
+        _qcd_log.debug("qcd_matmul_%s -> %s (%s)", gemm, route, reason)
+        return use_kernel
+
+    for name, t in zip(names, operands):
+        if not _is_packed(t):
+            return record(False, f"{name} operand is not packed GSE "
+                          "(fake-quant simulation / raw array)")
+    if not qcd_packed_kernels():
+        return record(False, "qcd_packed_kernels() off: exact-dequant jnp "
+                      "fallback (bit-identical to fake-quant)")
+    for name, t in zip(names, operands):
+        if not _rows_packable(t):
+            return record(False, f"{name} words are flat-stream (last axis "
+                          f"{t.shape[-1]} not 32-aligned)")
+    if not group_match:
+        return record(False, "operand group sizes differ "
+                      f"({operands[0].group_size} vs {operands[1].group_size})")
+    return record(True, f"packed operands on the kernel path [{mac}]")
 
 
 def _is_packed(t) -> bool:
@@ -345,9 +443,10 @@ def qcd_matmul_y(xq, wq, *, compute_dtype, f32_out: bool = False):
     Kernel route: the fused packed-dequant int8 MXU matmul (weights stream
     HBM->VMEM at b bits/value; the activation unpacks to a transient int8
     working array, never to float)."""
-    if (_is_packed(xq) and _is_packed(wq) and qcd_packed_kernels()
-            and _rows_packable(xq) and _rows_packable(wq)
-            and xq.group_size == wq.group_size):
+    if _qcd_route("y", (xq, wq),
+                  group_match=(not (_is_packed(xq) and _is_packed(wq))
+                               or xq.group_size == wq.group_size),
+                  mac="int8 MXU group MACs"):
         k = xq.shape[-1]
         g = xq.group_size
         xm = gse_unpack(_words_2d(xq), xq.bits,
@@ -366,22 +465,27 @@ def qcd_matmul_y(xq, wq, *, compute_dtype, f32_out: bool = False):
     return jnp.matmul(xd, wd.T)
 
 
-def qcd_matmul_dx(dyq, wq, *, compute_dtype, f32_out: bool = False):
+def qcd_matmul_dx(dyq, wq, *, compute_dtype, f32_out: bool = False,
+                  int_mac: bool = False):
     """Backward dX = Q(dY) @ Q(W)^T — contraction over N.
 
     dyq: logical (..., N) grouped/packed along N (raw array when g_bits is
     None); wq: logical (N, K) packed along K (the saved forward-grouped
     residual — no per-use re-grouping). Kernel route: the
     transposed-contraction packed matmul, both operands tile-dequantized in
-    VMEM."""
-    if (_is_packed(dyq) and _is_packed(wq) and qcd_packed_kernels()
-            and _rows_packable(dyq) and _rows_packable(wq)):
+    VMEM — or, with ``int_mac`` (bounded tier, REPRO_INT_MAC overrides),
+    realigned to tile-shared exponents and MAC'd in int32. The fallback is
+    always exact-dequant (``int_mac`` has no effect there)."""
+    int_mac = resolve_int_mac(int_mac)
+    mac = "int32 realigned MACs" if int_mac else "fp32 tile MACs"
+    if _qcd_route("dx", (dyq, wq), mac=mac):
         n, k = wq.shape
         dx = gse_matmul_packed_nt(
             _words_2d(dyq), _exps_2d(dyq), wq.mantissa_words, _exps_2d(wq),
             dyq.bits, wq.bits, a_group=dyq.group_size, b_group=wq.group_size,
             bm=_fit_block(int(np.prod(dyq.shape[:-1])), 128),
-            bn=_fit(n, 512, dyq.group_size), bk=_fit(k, 128, wq.group_size))
+            bn=_fit(n, 512, dyq.group_size), bk=_fit(k, 128, wq.group_size),
+            int_mac=int_mac)
         return dx.reshape(*dyq.shape[:-1], k).astype(compute_dtype)
     dyd = _deq(dyq, compute_dtype)
     wd = _deq(wq, compute_dtype)            # (N, K) == Q(W)^T already
@@ -391,20 +495,23 @@ def qcd_matmul_dx(dyq, wq, *, compute_dtype, f32_out: bool = False):
     return jnp.matmul(dyd, wd)
 
 
-def qcd_matmul_dw(xq, dyq, *, out_dtype, x_dtype=None, dy_dtype=None):
+def qcd_matmul_dw(xq, dyq, *, out_dtype, x_dtype=None, dy_dtype=None,
+                  int_mac: bool = False):
     """Backward dW = Q(X)^T @ Q(dY) — contraction over tokens, fp32
     accumulation (the fake-quant path's preferred_element_type), cast to
     ``out_dtype``. Leading dims of both operands are flattened. Kernel
-    route: the token-contraction packed matmul."""
-    if (_is_packed(xq) and _is_packed(dyq) and qcd_packed_kernels()
-            and _rows_packable(xq) and _rows_packable(dyq)):
+    route: the token-contraction packed matmul (``int_mac``: realigned
+    int32 MACs, bounded tier — see qcd_matmul_dx)."""
+    int_mac = resolve_int_mac(int_mac)
+    mac = "int32 realigned MACs" if int_mac else "fp32 tile MACs"
+    if _qcd_route("dw", (xq, dyq), mac=mac):
         k, n = xq.shape[-1], dyq.shape[-1]
         m = int(np.prod(xq.shape[:-1]))
         dw = gse_matmul_packed_tn(
             _words_2d(xq), _exps_2d(xq), _words_2d(dyq), _exps_2d(dyq),
             xq.bits, dyq.bits, a_group=xq.group_size, b_group=dyq.group_size,
             bm=_fit_block(m, 512), bn=_fit(n, 128, dyq.group_size),
-            bk=_fit(k, 128, xq.group_size))
+            bk=_fit(k, 128, xq.group_size), int_mac=int_mac)
         return dw.astype(out_dtype)
     xd = _deq(xq, x_dtype or out_dtype)
     dyd = _deq(dyq, dy_dtype or out_dtype)

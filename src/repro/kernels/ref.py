@@ -118,6 +118,174 @@ def gse_matmul_packed_tn_ref(a_words, a_e, b_words, b_e, a_bits: int,
     return acc
 
 
+# ---------------------------------------------------------------------------
+# Integer-MAC oracles (exact tier: grouped fp32 score GEMM; bounded tier:
+# floor-division realignment replay + worst-case error bound).
+# ---------------------------------------------------------------------------
+
+
+def gse_score_int_ref(q, k_words, k_exp, head_dim: int):
+    """Grouped fp32 oracle for the integer-MAC attention score GEMM
+    (``gse_matmul.gse_score_tile`` fed by in-kernel q quantization).
+
+    q (R, D) float; k planes (S, W) uint32 + (S, D/G) int8. Quantizes q to
+    the cache's bits/group with the reference quantizer, dequantizes both
+    operands EXACTLY to fp32 (k via the independent numpy wire decode),
+    then runs one fp32 GEMM PER GROUP, summed in ascending group order.
+    Every within-group partial sum is exact in fp32 — all products share
+    the scale ``2^(eq+ek)`` and their integer content stays below 2^24 —
+    so this float computation equals the int32 MAC + rank-1 rescale
+    **bit-for-bit** (the exact-tier contract). Returns (R, S) pre-scale
+    scores."""
+    chunks = -(-head_dim // 32)
+    bits = k_words.shape[-1] // chunks
+    g = head_dim // k_exp.shape[-1]
+    ng = head_dim // g
+    qm, qe = gse_quantize_ref(jnp.asarray(q, jnp.float32), bits, g)
+    qdq = (qm.astype(jnp.float32).reshape(-1, ng, g)
+           * exp2_int(qe.astype(jnp.int32))[..., None])       # (R, ng, g)
+    kdq = packed_kv_dequant_ref(k_words, k_exp, head_dim)
+    kdq = kdq.reshape(-1, ng, g)                              # (S, ng, g)
+    acc = jnp.zeros((qdq.shape[0], kdq.shape[0]), jnp.float32)
+    for gi in range(ng):                  # ordered group sum (contract)
+        acc = acc + jnp.dot(qdq[:, gi], kdq[:, gi].T,
+                            preferred_element_type=jnp.float32)
+    return acc
+
+
+def _realign_rows_ref(m, e, group: int):
+    """Floor-division formulation of the kernel's row realignment (the
+    kernel shifts; floor(m / 2^s) == m >> s for every sign) — deliberately
+    NOT sharing the shift helper so a shift bug cannot cancel out."""
+    e32 = e.astype(jnp.int32)
+    e_max = jnp.max(e32, axis=-1)
+    s = e_max[:, None] - e32
+    r, c = m.shape
+    mg = m.astype(jnp.float32).reshape(r, c // group, group)
+    mg = jnp.floor(mg * exp2_int(-s)[..., None])   # exact: |m| < 2^7
+    return mg.astype(jnp.int32).reshape(r, c), e_max
+
+
+def _realign_col_groups_ref(m, e, group: int):
+    """Column-group variant: one shared exponent per group of C across all
+    rows (max over the contracted rows)."""
+    e32 = e.astype(jnp.int32)
+    e_max = jnp.max(e32, axis=0)
+    s = e_max[None, :] - e32
+    r, c = m.shape
+    mg = m.astype(jnp.float32).reshape(r, c // group, group)
+    mg = jnp.floor(mg * exp2_int(-s)[..., None])
+    return mg.astype(jnp.int32).reshape(r, c), e_max
+
+
+def gse_matmul_packed_nt_int_ref(a_words, a_e, b_words, b_e, a_bits: int,
+                                 b_bits: int, a_group: int = 32,
+                                 b_group: int = 32, bn: int = 512):
+    """Oracle for ``gse_matmul_packed_nt_pallas(int_mac=True)``: replay the
+    tile schedule with the floor-division realignment, an exact integer
+    tile GEMM, and the per-tile rank-1 rescale, tiles accumulated in
+    ascending order — bit-exact vs the int-MAC kernel at the same ``bn``
+    (every rescale multiplies by a power of two, hence is exact)."""
+    m_dim = a_words.shape[0]
+    n_dim = b_words.shape[0]
+    k_dim = b_words.shape[-1] // b_bits * 32
+    ma = unpack_mantissas(a_words, a_bits, n_dim)
+    mb = unpack_mantissas(b_words, b_bits, k_dim)
+    bn = min(bn, n_dim)
+    acc = jnp.zeros((m_dim, k_dim), jnp.float32)
+    for n0 in range(0, n_dim, bn):
+        am_r, eam = _realign_rows_ref(
+            ma[:, n0:n0 + bn],
+            a_e[:, n0 // a_group:(n0 + bn) // a_group], a_group)
+        bm_r, ebm = _realign_col_groups_ref(
+            mb[n0:n0 + bn], b_e[n0:n0 + bn], b_group)
+        prod = jnp.dot(am_r, bm_r)                        # exact int32
+        scaled = prod.astype(jnp.float32) * exp2_int(eam)[:, None]
+        scaled = (scaled.reshape(m_dim, k_dim // b_group, b_group)
+                  * exp2_int(ebm)[None, :, None]).reshape(m_dim, k_dim)
+        acc = acc + scaled
+    return acc
+
+
+def gse_matmul_packed_tn_int_ref(a_words, a_e, b_words, b_e, a_bits: int,
+                                 b_bits: int, a_group: int = 32,
+                                 b_group: int = 32, bm: int = 512):
+    """Oracle for ``gse_matmul_packed_tn_pallas(int_mac=True)``: both
+    operands realign per output column group (contraction runs over the
+    shared leading axis), exact integer tile GEMM, rank-1 rescale, ordered
+    tile accumulation."""
+    m_dim = a_words.shape[0]
+    k_dim = a_words.shape[-1] // a_bits * 32
+    n_dim = b_words.shape[-1] // b_bits * 32
+    ma = unpack_mantissas(a_words, a_bits, k_dim)
+    mb = unpack_mantissas(b_words, b_bits, n_dim)
+    bm = min(bm, m_dim)
+    acc = jnp.zeros((k_dim, n_dim), jnp.float32)
+    for m0 in range(0, m_dim, bm):
+        am_r, eam = _realign_col_groups_ref(
+            ma[m0:m0 + bm], a_e[m0:m0 + bm], a_group)
+        bm_r, ebm = _realign_col_groups_ref(
+            mb[m0:m0 + bm], b_e[m0:m0 + bm], b_group)
+        prod = jax.lax.dot_general(am_r, bm_r, (((0,), (0,)), ((), ())))
+        scaled = (prod.astype(jnp.float32).reshape(
+            k_dim // a_group, a_group, n_dim)
+            * exp2_int(eam)[:, None, None]).reshape(k_dim, n_dim)
+        scaled = (scaled.reshape(k_dim, n_dim // b_group, b_group)
+                  * exp2_int(ebm)[None, :, None]).reshape(k_dim, n_dim)
+        acc = acc + scaled
+    return acc
+
+
+def int_realign_bound(a_e, b_e, a_bits: int, b_bits: int, *,
+                      a_group: int = 32, b_group: int = 32,
+                      tile: int = 512, kind: str = "nt"):
+    """Worst-case |int-MAC − fp32 kernel| bound per output element for the
+    realigned (bounded-tier) matmuls — the documented contract the
+    property tests assert.
+
+    Realignment drops the bits shifted out of each mantissa: the value
+    error per operand entry is < ``2^e_max`` (one ulp of the tile-shared
+    scale). A depth-``n`` tile contraction therefore errs by at most
+    ``n * 2^(ea_max + eb_max) * (qmax_a + qmax_b)`` per element (cross
+    terms: |da|*|b| + |a'|*|db|), plus the fp32 rounding slack of the
+    fp32 kernel's own tile GEMM (``n * qmax_a * qmax_b * 2^-20`` covers
+    the 2^-24 fp32 ulp with 16x headroom). Tiles sum.
+
+    ``kind="nt"``: a_e (M, N/Ga), b_e (N, K/Gb) -> bound (M, K).
+    ``kind="tn"``: a_e (M, K/Ga), b_e (M, N/Gb) -> bound (K, N).
+    """
+    qa, qb = qmax_for_bits(a_bits), qmax_for_bits(b_bits)
+    slack = (qa + qb) + tile * qa * qb * 2.0 ** -20
+    ae = jnp.asarray(a_e, jnp.int32)
+    be = jnp.asarray(b_e, jnp.int32)
+    if kind == "nt":
+        m_dim, nga = ae.shape
+        n_dim = nga * a_group
+        bound = jnp.zeros((m_dim, be.shape[-1] * b_group), jnp.float32)
+        for n0 in range(0, n_dim, tile):
+            depth = min(tile, n_dim - n0)
+            eam = jnp.max(ae[:, n0 // a_group:(n0 + depth) // a_group],
+                          axis=-1)                           # (M,)
+            ebm = jnp.max(be[n0:n0 + depth], axis=0)         # (K/Gb,)
+            sc = exp2_int(eam)[:, None] * jnp.repeat(
+                exp2_int(ebm), b_group)[None, :]
+            bound = bound + depth * slack * sc
+        return bound
+    if kind == "tn":
+        m_dim = ae.shape[0]
+        bound = jnp.zeros((ae.shape[-1] * a_group,
+                           be.shape[-1] * b_group), jnp.float32)
+        for m0 in range(0, m_dim, tile):
+            depth = min(tile, m_dim - m0)
+            eam = jnp.max(ae[m0:m0 + depth], axis=0)         # (K/Ga,)
+            ebm = jnp.max(be[m0:m0 + depth], axis=0)         # (N/Gb,)
+            sc = (jnp.repeat(exp2_int(eam), a_group)[:, None]
+                  * jnp.repeat(exp2_int(ebm), b_group)[None, :])
+            bound = bound + depth * slack * sc
+        return bound
+    raise ValueError(f"unknown kind {kind!r}")
+
+
 def nf4_dequant_ref(codes, absmax, out_dtype=jnp.bfloat16):
     """Oracle for nf4_dequant_pallas."""
     m_dim, k_dim = codes.shape

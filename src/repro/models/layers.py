@@ -295,7 +295,7 @@ def _quantized_bmm(x, w, policy: QuantPolicy):
     f = partial(quantized_matmul, a_bits=policy.a_bits, w_bits=policy.w_bits,
                 g_bits=policy.g_bits, group_size=policy.group_size,
                 residuals_packed=policy.residuals_packed,
-                residual_bits=policy.residual_bits)
+                residual_bits=policy.residual_bits, int_mac=policy.int_mac)
     return jax.vmap(lambda a, b: f(a, b))(x, w)
 
 

@@ -1,0 +1,336 @@
+"""Integer-MAC modes of the packed kernels (ISSUE 6).
+
+Two tiers, two contracts:
+
+* exact tier — the packed-attention score GEMM contracts over head_dim,
+  the row-planar grouping axis, so int8 MACs + the rank-1 ``2^(eq+ek)``
+  rescale are **bit-exact** vs the fp32 score path's per-group math
+  (array_equal, not allclose);
+* bounded tier — ``gse_matmul_packed_nt/tn`` contract over a non-grouping
+  axis, so mantissas realign to a tile-shared exponent (low bits shift
+  out): parity vs the fp32 kernels holds within the documented worst-case
+  bound (``ref.int_realign_bound``), and the mode is gated behind
+  ``QuantPolicy.int_mac`` (default off) with a static overflow guard.
+
+Plus the observability satellites: ``last_qcd_route`` for all three QCD
+GEMMs and the unified env tri-state knob table.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.core.gse import gse_fake_quant
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention_packed import (
+    flash_attention_packed_jnp, flash_attention_packed_pallas,
+    quant_pack_kv_rows, unpack_kv_row_mantissas)
+from repro.kernels.gse_matmul import (INT32_ACC_MAX, check_int_mac_depth,
+                                      gse_matmul_packed_nt_pallas,
+                                      gse_matmul_packed_tn_pallas,
+                                      gse_score_tile, int_mac_max_depth)
+from repro.kernels.gse_quant import quantize_tile
+from repro.kernels.gse_quant_pack import gse_quant_pack_pallas
+from repro.core.qcd import quantized_matmul
+
+BITS = [4, 6, 8]
+
+
+def _scaled(shape, seed, spread):
+    """Rows with adversarial power-of-two scale spreads (per-row exponents
+    span ±spread) — the worst case for tile-shared-exponent realignment."""
+    rng = np.random.default_rng(seed)
+    vals = rng.standard_normal(shape).astype(np.float32)
+    scales = 2.0 ** rng.integers(-spread, spread + 1, (shape[0], 1))
+    return jnp.asarray(vals * scales, jnp.float32)
+
+
+# ------------------------- exact tier: score GEMM -------------------------
+
+
+@pytest.mark.parametrize("bits", BITS)
+@pytest.mark.parametrize("d", [64, 128])
+def test_score_tile_matches_grouped_fp32_oracle(bits, d):
+    """int8 MAC + rank-1 rescale == per-group fp32 GEMM, bit for bit."""
+    q = _scaled((48, d), seed=bits, spread=12)
+    k = _scaled((96, d), seed=bits + 10, spread=12)
+    kw, ke = quant_pack_kv_rows(k, bits, 32)
+    oracle = ref.gse_score_int_ref(q, kw, ke, d)
+    qm, qe = quantize_tile(q, bits, 32)
+    tile = gse_score_tile(qm.astype(jnp.int8), qe.astype(jnp.int8),
+                          unpack_kv_row_mantissas(kw, d), ke, group=32)
+    np.testing.assert_array_equal(np.asarray(oracle), np.asarray(tile))
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+@pytest.mark.parametrize("tail", [False, True])
+def test_attention_int_kernel_equals_fallback(bits, tail):
+    """The Pallas kernel and the jnp fallback run the identical integer
+    score sequence — array_equal across routes, GQA and the decode tail."""
+    b, t, h, kv, d, s = 1, 16, 4, 2, 64, 64
+    q = _scaled((b * t * h, d), 1, 6).reshape(b, t, h, d)
+    k = _scaled((b * s * kv, d), 2, 6).reshape(b, s, kv, d)
+    v = jnp.asarray(np.random.default_rng(3).standard_normal(
+        (b, s, kv, d)), jnp.float32)
+    kw, ke = quant_pack_kv_rows(k, bits, 32)
+    vw, ve = quant_pack_kv_rows(v, bits, 32)
+    tails = {}
+    if tail:
+        rng = np.random.default_rng(4)
+        tails = dict(
+            k_tail=jnp.asarray(rng.standard_normal((b, 2, kv, d)),
+                               jnp.float32),
+            v_tail=jnp.asarray(rng.standard_normal((b, 2, kv, d)),
+                               jnp.float32))
+    kwargs = dict(causal=True, q_offset=s - t, **tails)
+    o_jnp = flash_attention_packed_jnp(q, kw, ke, vw, ve, k_chunk=32,
+                                       int_mac=True, **kwargs)
+
+    def fold(x):
+        return x.transpose(0, 2, 1, 3).reshape(b * kv, x.shape[1], -1)
+    qf = q.reshape(b, t, kv, h // kv, d).transpose(0, 2, 3, 1, 4).reshape(
+        b * kv, h // kv, t, d)
+    ktails = ({k2: fold(v2) for k2, v2 in tails.items()} if tail else {})
+    o_krn = flash_attention_packed_pallas(
+        qf, fold(kw), fold(ke), fold(vw), fold(ve), causal=True,
+        q_offset=s - t, bq=16, bk=32, interpret=True, int_mac=True,
+        **ktails)
+    o_krn = o_krn.reshape(b, kv, h // kv, t, d).transpose(
+        0, 3, 1, 2, 4).reshape(b, t, h, d)
+    np.testing.assert_array_equal(np.asarray(o_jnp), np.asarray(o_krn))
+
+
+@pytest.mark.parametrize("bits", BITS)
+def test_attention_int_equals_fp32_single_group(bits):
+    """d=32 (one group) with pre-fake-quantized q: the int path's only
+    lossy step (q quantization) is idempotent, so int == fp32 bitwise —
+    the within-group exactness argument observed end to end."""
+    b, t, h, kv, d, s = 1, 8, 2, 2, 32, 32
+    rng = np.random.default_rng(7)
+    q = gse_fake_quant(jnp.asarray(rng.standard_normal((b, t, h, d)),
+                                   jnp.float32), bits, d)
+    k = _scaled((b * s * kv, d), 8, 8).reshape(b, s, kv, d)
+    v = jnp.asarray(rng.standard_normal((b, s, kv, d)), jnp.float32)
+    kw, ke = quant_pack_kv_rows(k, bits, 32)
+    vw, ve = quant_pack_kv_rows(v, bits, 32)
+    o_fp = flash_attention_packed_jnp(q, kw, ke, vw, ve, causal=True,
+                                      q_offset=s - t, k_chunk=32)
+    o_int = flash_attention_packed_jnp(q, kw, ke, vw, ve, causal=True,
+                                       q_offset=s - t, k_chunk=32,
+                                       int_mac=True)
+    np.testing.assert_array_equal(np.asarray(o_fp), np.asarray(o_int))
+
+
+@given(bits=st.sampled_from(BITS), spread=st.integers(0, 14))
+@settings(max_examples=10, deadline=None)
+def test_score_property_adversarial_spreads(bits, spread):
+    d = 64
+    q = _scaled((16, d), seed=spread, spread=spread)
+    k = _scaled((32, d), seed=spread + 99, spread=spread)
+    kw, ke = quant_pack_kv_rows(k, bits, 32)
+    qm, qe = quantize_tile(q, bits, 32)
+    tile = gse_score_tile(qm.astype(jnp.int8), qe.astype(jnp.int8),
+                          unpack_kv_row_mantissas(kw, d), ke, group=32)
+    np.testing.assert_array_equal(
+        np.asarray(ref.gse_score_int_ref(q, kw, ke, d)), np.asarray(tile))
+
+
+# ----------------- bounded tier: realigned nt/tn matmuls ------------------
+
+
+def _packed_pair(m, n, bits, seed, spread):
+    a = _scaled((m, n), seed, spread)
+    return gse_quant_pack_pallas(a, bits=bits, group=32)
+
+
+@pytest.mark.parametrize("bits", BITS)
+def test_nt_int_matches_replay_ref_and_bound(bits):
+    aw, ae = _packed_pair(32, 256, bits, bits, 12)
+    bw, be = _packed_pair(256, 64, bits, bits + 1, 12)
+    out = gse_matmul_packed_nt_pallas(aw, ae, bw, be, a_bits=bits,
+                                      b_bits=bits, bn=128, int_mac=True,
+                                      interpret=True)
+    # bit-exact vs the independent floor-division realignment replay
+    np.testing.assert_array_equal(
+        np.asarray(out),
+        np.asarray(ref.gse_matmul_packed_nt_int_ref(aw, ae, bw, be, bits,
+                                                    bits, bn=128)))
+    # within the documented worst-case bound vs the fp32 kernel (oracle)
+    fp = gse_matmul_packed_nt_pallas(aw, ae, bw, be, a_bits=bits,
+                                     b_bits=bits, bn=128, interpret=True)
+    bound = ref.int_realign_bound(ae, be, bits, bits, tile=128, kind="nt")
+    assert (np.abs(np.asarray(out) - np.asarray(fp))
+            <= np.asarray(bound)).all()
+
+
+@pytest.mark.parametrize("bits", BITS)
+def test_tn_int_matches_replay_ref_and_bound(bits):
+    aw, ae = _packed_pair(256, 64, bits, bits + 2, 12)
+    bw, be = _packed_pair(256, 96, bits, bits + 3, 12)
+    out = gse_matmul_packed_tn_pallas(aw, ae, bw, be, a_bits=bits,
+                                      b_bits=bits, bm=128, int_mac=True,
+                                      interpret=True)
+    np.testing.assert_array_equal(
+        np.asarray(out),
+        np.asarray(ref.gse_matmul_packed_tn_int_ref(aw, ae, bw, be, bits,
+                                                    bits, bm=128)))
+    fp = gse_matmul_packed_tn_pallas(aw, ae, bw, be, a_bits=bits,
+                                     b_bits=bits, bm=128, interpret=True)
+    bound = ref.int_realign_bound(ae, be, bits, bits, tile=128, kind="tn")
+    assert (np.abs(np.asarray(out) - np.asarray(fp))
+            <= np.asarray(bound)).all()
+
+
+@given(bits=st.sampled_from(BITS), spread=st.integers(0, 14))
+@settings(max_examples=8, deadline=None)
+def test_nt_property_adversarial_spreads(bits, spread):
+    aw, ae = _packed_pair(32, 128, bits, spread, spread)
+    bw, be = _packed_pair(128, 32, bits, spread + 50, spread)
+    out = gse_matmul_packed_nt_pallas(aw, ae, bw, be, a_bits=bits,
+                                      b_bits=bits, bn=64, int_mac=True,
+                                      interpret=True)
+    fp = gse_matmul_packed_nt_pallas(aw, ae, bw, be, a_bits=bits,
+                                     b_bits=bits, bn=64, interpret=True)
+    bound = ref.int_realign_bound(ae, be, bits, bits, tile=64, kind="nt")
+    assert (np.abs(np.asarray(out) - np.asarray(fp))
+            <= np.asarray(bound)).all()
+
+
+def test_fp32_path_untouched_by_int_flag_default():
+    """int_mac default off: the fp32 kernels stay the oracle (identical
+    output with the flag absent vs explicitly False)."""
+    aw, ae = _packed_pair(32, 128, 6, 5, 8)
+    bw, be = _packed_pair(128, 64, 6, 6, 8)
+    o1 = gse_matmul_packed_nt_pallas(aw, ae, bw, be, a_bits=6, b_bits=6,
+                                     bn=64, interpret=True)
+    o2 = gse_matmul_packed_nt_pallas(aw, ae, bw, be, a_bits=6, b_bits=6,
+                                     bn=64, int_mac=False, interpret=True)
+    np.testing.assert_array_equal(np.asarray(o1), np.asarray(o2))
+
+
+# -------------------------- static overflow guard -------------------------
+
+
+def test_overflow_guard_rejects_wrapping_depth():
+    assert int_mac_max_depth(8, 8) == INT32_ACC_MAX // (127 * 127)
+    check_int_mac_depth(int_mac_max_depth(8, 8), 8, 8)   # at the limit: ok
+    with pytest.raises(ValueError, match="overflow"):
+        check_int_mac_depth(2 ** 18, 8, 8)
+
+
+def test_overflow_guard_fires_at_trace_time(monkeypatch):
+    """The wrapper rejects a wrapping tile config before tracing the kernel
+    (monkeypatched accumulator cap so a test-sized bn trips it)."""
+    from repro.kernels import gse_matmul as gm
+    aw, ae = _packed_pair(32, 128, 8, 1, 4)
+    bw, be = _packed_pair(128, 32, 8, 2, 4)
+    monkeypatch.setattr(gm, "INT32_ACC_MAX", 64 * 127 * 127 - 1)
+    with pytest.raises(ValueError, match="overflow"):
+        gse_matmul_packed_nt_pallas(aw, ae, bw, be, a_bits=8, b_bits=8,
+                                    bn=128, int_mac=True, interpret=True)
+    monkeypatch.setattr(gm, "INT32_ACC_MAX", 128 * 127 * 127)
+    gse_matmul_packed_nt_pallas(aw, ae, bw, be, a_bits=8, b_bits=8,
+                                bn=128, int_mac=True, interpret=True)
+
+
+# --------------------- QCD routing observability --------------------------
+
+
+def _qcd_grads(x, w, int_mac=False):
+    y, vjp = jax.vjp(lambda a, b: quantized_matmul(
+        a, b, 6, 6, 6, 32, True, None, int_mac), x, w)
+    dx, dw = vjp(jnp.ones_like(y))
+    return y, dx, dw
+
+
+def test_last_qcd_route_observable_for_all_gemms(monkeypatch):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((64, 128)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((128, 96)), jnp.float32)
+
+    monkeypatch.setenv("REPRO_QCD_PACKED_KERNELS", "0")
+    _qcd_grads(x, w)
+    for gemm in ("y", "dx", "dw"):
+        route, reason = ops.last_qcd_route(gemm)
+        assert route == "fallback" and "qcd_packed_kernels() off" in reason
+    assert set(ops.last_qcd_route()) == {"y", "dx", "dw"}
+
+    monkeypatch.setenv("REPRO_QCD_PACKED_KERNELS", "1")
+    g_fp = _qcd_grads(x, w)
+    assert ops.last_qcd_route("y") == (
+        "kernel", "packed operands on the kernel path [int8 MXU group MACs]")
+    for gemm in ("dx", "dw"):
+        route, reason = ops.last_qcd_route(gemm)
+        assert route == "kernel" and "fp32 tile MACs" in reason
+
+    # int-MAC mode annotates the route reason and changes only the backward
+    g_int = _qcd_grads(x, w, int_mac=True)
+    for gemm in ("dx", "dw"):
+        route, reason = ops.last_qcd_route(gemm)
+        assert route == "kernel" and "int32 realigned MACs" in reason
+    np.testing.assert_array_equal(np.asarray(g_fp[0]), np.asarray(g_int[0]))
+
+    # REPRO_INT_MAC=0 overrides the argument back to the fp32 kernels
+    monkeypatch.setenv("REPRO_INT_MAC", "0")
+    g_off = _qcd_grads(x, w, int_mac=True)
+    assert "fp32 tile MACs" in ops.last_qcd_route("dx")[1]
+    for a, b in zip(g_fp, g_off):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_qcd_route_reports_unpacked_operands():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((8, 64)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((64, 32)), jnp.float32)
+    # fake-quant path: no packed residuals -> fallback with operand reason
+    y, vjp = jax.vjp(lambda a, b: quantized_matmul(a, b, 6, 6, 6, 32,
+                                                   False), x, w)
+    vjp(jnp.ones_like(y))
+    # the fake-quant backward never dispatches through ops.qcd_matmul_*,
+    # so the last recorded routes are whatever ran before; the packed
+    # fwd/bwd with raw (unquantized) dY is the observable case:
+    yq = ops.qcd_matmul_dx(jnp.ones((4, 32)), w.T, compute_dtype=jnp.float32)
+    route, reason = ops.last_qcd_route("dx")
+    assert route == "fallback" and "not packed GSE" in reason
+    assert yq.shape == (4, 64)
+
+
+# --------------------- env tri-state knob table ---------------------------
+
+
+def test_env_tristate_knob_table(monkeypatch):
+    """Every kernel knob speaks the same 1/0/auto vocabulary — including
+    REPRO_QCD_F32_OUT, formerly the one bespoke truthy reader."""
+    for name, reader in ops.ENV_TRISTATE_KNOBS.items():
+        for val, want in [("1", True), ("true", True), ("on", True),
+                          ("0", False), ("false", False), ("off", False)]:
+            monkeypatch.setenv(name, val)
+            assert reader() is want, (name, val)
+        monkeypatch.delenv(name)
+    # auto/unset on CPU: every knob defers to a False default
+    assert jax.default_backend() != "tpu"
+    for name, reader in ops.ENV_TRISTATE_KNOBS.items():
+        assert reader() is False, name
+        monkeypatch.setenv(name, "auto")
+        assert reader() is False, name
+        monkeypatch.delenv(name)
+
+
+def test_qcd_f32_out_unified_vocabulary(monkeypatch):
+    # a stray value is "auto" (default off) now, not implicitly truthy
+    monkeypatch.setenv("REPRO_QCD_F32_OUT", "yes-please")
+    assert ops.qcd_f32_out() is False
+    monkeypatch.setenv("REPRO_QCD_F32_OUT", "1")
+    assert ops.qcd_f32_out() is True
+
+
+def test_int_mac_env_override(monkeypatch):
+    monkeypatch.delenv("REPRO_INT_MAC", raising=False)
+    assert ops.resolve_int_mac(True) is True
+    assert ops.resolve_int_mac(False) is False
+    monkeypatch.setenv("REPRO_INT_MAC", "1")
+    assert ops.resolve_int_mac(False) is True
+    monkeypatch.setenv("REPRO_INT_MAC", "0")
+    assert ops.resolve_int_mac(True) is False
