@@ -1,0 +1,555 @@
+"""Trace-level audit of the integer parity contract (Layer 2 of the gate).
+
+The source linter (:mod:`repro.analysis.lint`) catches contract violations
+you can see in the text; this module catches the ones you can only see in
+the lowered program. It builds the representative jitted programs the
+contract talks about — the packed backward GEMMs and score tile with
+``int_mac``, the packed decode attention step on the kernel route, the QCD
+train step with ``residuals_packed``, the packed gradient all-gather — and
+asserts structural invariants on the optimized HLO / jaxpr:
+
+  int-dot-route      audited int-MAC programs contain **zero** fp dots
+                     (score/backward GEMMs are s8xs8->s32 `dot`s); the
+                     attention program may keep exactly the PV GEMMs in
+                     fp32, identified by result minor dim == head_dim.
+  one-tile-unpacked  no materialized fp32 buffer matches the full unpacked
+                     shape (or flat size) of any packed operand — "peak
+                     live unpacked = one tile". Fusion bodies are excluded
+                     (fusion internals are VMEM under XLA's fusion model);
+                     while-loop bodies are not (their buffers materialize).
+  u32-wire           gradient collectives carry packed u32 word payloads:
+                     every `all_gather` moves unsigned words, no collective
+                     moves floats, and no transcendental scale math
+                     (exp/exp2/log/log2/pow) appears anywhere in the
+                     compressed-mean program.
+  guard-coverage     every Pallas kernel entry that accepts ``int_mac``
+                     reaches a `check_int_mac_depth` call (bounded tier) or
+                     the `gse_score_tile` exact-tier recipe, and the
+                     exact-tier closure `group * qmax^2 < 2^24` holds for
+                     the widest supported mantissa.
+
+The invariant engines (:func:`dot_census`, :func:`fp_buffer_scan`) are
+pure functions of HLO text so tests can feed them deliberately broken
+programs; the check_* functions lower real programs and apply them.
+
+CLI (the CI gate)::
+
+    PYTHONPATH=src python -m repro.analysis.contract --check \
+        --json contract_report.json
+"""
+from __future__ import annotations
+
+import ast
+import json
+import os
+import sys
+from contextlib import contextmanager
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.hlo_walk import (_CALL_SINGLE_RE, _shape_list,
+                                     parse_hlo)
+
+REPORT_SCHEMA = "repro/contract_audit/v1"
+
+_FP_DTYPES = {"f16", "bf16", "f32", "f64"}
+
+
+# ---------------------------------------------------------------------------
+# Invariant engines: pure functions of HLO text
+# ---------------------------------------------------------------------------
+
+def dot_census(hlo_text: str) -> Dict[str, List[dict]]:
+    """Classify every `dot` in the module as integer or floating point.
+
+    A dot is *integer* iff its result and both operands are integer-typed;
+    anything touching f16/bf16/f32/f64 counts as fp. Returns
+    ``{"int": [...], "fp": [...]}`` with one record per dot:
+    computation, result dtype/dims, operand dtypes, and the HLO line.
+    """
+    out: Dict[str, List[dict]] = {"int": [], "fp": []}
+    for comp in parse_hlo(hlo_text).values():
+        for ins in comp.instrs:
+            if ins.opcode != "dot":
+                continue
+            res = _shape_list(ins.result)
+            if not res:
+                continue
+            r_dt, r_dims = res[0]
+            op_dts: List[str] = []
+            for name in ins.operands():
+                shp = comp.defs.get(name)
+                if shp:
+                    op_dts.extend(dt for dt, _ in _shape_list(shp))
+            kind = ("fp" if r_dt in _FP_DTYPES
+                    or any(dt in _FP_DTYPES for dt in op_dts) else "int")
+            out[kind].append({
+                "computation": comp.name, "result_dtype": r_dt,
+                "result_dims": r_dims, "operand_dtypes": op_dts,
+                "line": ins.line[:200],
+            })
+    return out
+
+
+def _fusion_bodies(hlo_text: str) -> Set[str]:
+    """Names of computations called (only) from `fusion` instructions —
+    their buffers are VMEM-resident under XLA's fusion model and must not
+    count as materialized. While/conditional bodies stay in the scan."""
+    fused: Set[str] = set()
+    for comp in parse_hlo(hlo_text).values():
+        for ins in comp.instrs:
+            if ins.opcode == "fusion":
+                fused.update(_CALL_SINGLE_RE.findall(ins.line))
+    return fused
+
+
+def fp_buffer_scan(hlo_text: str, dims: Sequence[Sequence[int]] = (),
+                   flat_sizes: Iterable[int] = ()) -> List[dict]:
+    """Find materialized fp buffers matching a forbidden unpacked shape.
+
+    Flags every instruction result outside fusion bodies whose dtype is
+    floating point and whose dims exactly match an entry of ``dims`` or
+    whose element count is in ``flat_sizes``. These are the "someone
+    dequantized the whole packed tensor" signatures.
+    """
+    want_dims = {tuple(d) for d in dims}
+    want_flat = set(flat_sizes)
+    fused = _fusion_bodies(hlo_text)
+    hits: List[dict] = []
+    for comp in parse_hlo(hlo_text).values():
+        if comp.name in fused:
+            continue
+        for ins in comp.instrs:
+            for dt, rdims in _shape_list(ins.result):
+                if dt not in _FP_DTYPES:
+                    continue
+                n = 1
+                for d in rdims:
+                    n *= d
+                if tuple(rdims) in want_dims or n in want_flat:
+                    hits.append({"computation": comp.name, "dtype": dt,
+                                 "dims": rdims, "line": ins.line[:200]})
+    return hits
+
+
+def audit_int_route(hlo_text: str,
+                    fp_ok_minor_dim: Optional[int] = None) -> List[str]:
+    """Violation strings for the int-dot-route invariant.
+
+    ``fp_ok_minor_dim``: if set, fp dots whose result minor dimension
+    equals it are tolerated (the attention PV GEMM contracts over the
+    softmax axis in fp32 by design — its result minor dim is head_dim).
+    """
+    census = dot_census(hlo_text)
+    out = []
+    if not census["int"]:
+        out.append("no integer dot found on an int-MAC route")
+    for d in census["fp"]:
+        if fp_ok_minor_dim is not None and d["result_dims"] \
+                and d["result_dims"][-1] == fp_ok_minor_dim:
+            continue
+        out.append(f"fp dot on int-MAC route: {d['line']}")
+    return out
+
+
+def audit_no_unpacked_fp(hlo_text: str, dims: Sequence[Sequence[int]],
+                         flat_sizes: Iterable[int]) -> List[str]:
+    return [f"materialized fp buffer of full unpacked shape: "
+            f"{h['dtype']}{h['dims']} in {h['computation']}: {h['line']}"
+            for h in fp_buffer_scan(hlo_text, dims, flat_sizes)]
+
+
+# ---------------------------------------------------------------------------
+# jaxpr engine (collectives + transcendental scale math)
+# ---------------------------------------------------------------------------
+
+_COLLECTIVES = {"all_gather", "psum", "pmax", "pmin", "ppermute",
+                "all_to_all", "reduce_scatter"}
+_TRANSCENDENTAL = {"exp", "exp2", "log", "log2", "pow"}
+
+
+def jaxpr_census(jaxpr) -> Dict[str, List[List[Tuple[tuple, str]]]]:
+    """Recursively collect every primitive with its invar (shape, dtype)
+    pairs, descending into nested jaxprs (shard_map/scan/cond bodies)."""
+    from jax._src.core import ClosedJaxpr, Jaxpr
+    prims: Dict[str, List[List[Tuple[tuple, str]]]] = {}
+
+    def walk(jx):
+        for eqn in jx.eqns:
+            prims.setdefault(eqn.primitive.name, []).append(
+                [(tuple(v.aval.shape), str(v.aval.dtype))
+                 for v in eqn.invars if hasattr(v, "aval")])
+            for p in eqn.params.values():
+                for q in (p if isinstance(p, (list, tuple)) else [p]):
+                    if isinstance(q, ClosedJaxpr):
+                        walk(q.jaxpr)
+                    elif isinstance(q, Jaxpr):
+                        walk(q)
+
+    walk(jaxpr.jaxpr if hasattr(jaxpr, "jaxpr") else jaxpr)
+    return prims
+
+
+def audit_wire(prims: Dict[str, List[List[Tuple[tuple, str]]]]) -> List[str]:
+    """Violations of the u32-wire invariant on a jaxpr census."""
+    out = []
+    gathers = prims.get("all_gather", [])
+    if not gathers:
+        out.append("no all_gather found in the compressed-mean program")
+    for invars in gathers:
+        for shape, dtype in invars:
+            if not dtype.startswith("uint"):
+                out.append(f"all_gather payload is {dtype}{list(shape)}, "
+                           "not packed unsigned words")
+    for name in _COLLECTIVES:
+        for invars in prims.get(name, []):
+            for shape, dtype in invars:
+                if dtype.startswith(("float", "bfloat")):
+                    out.append(f"float collective {name}: "
+                               f"{dtype}{list(shape)}")
+    for name in sorted(_TRANSCENDENTAL & set(prims)):
+        out.append(f"transcendental scale math in wire program: "
+                   f"`{name}` x{len(prims[name])} — use ceil_log2/exp2_int")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Representative programs
+# ---------------------------------------------------------------------------
+
+@contextmanager
+def _env(**kw):
+    old = {k: os.environ.get(k) for k in kw}
+    for k, v in kw.items():
+        if v is None:
+            os.environ.pop(k, None)
+        else:
+            os.environ[k] = v
+    try:
+        yield
+    finally:
+        for k, v in old.items():
+            if v is None:
+                os.environ.pop(k, None)
+            else:
+                os.environ[k] = v
+
+
+def _optimized_hlo(fn, *args) -> str:
+    import jax
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def lower_matmul_nt(bits: int = 8, m: int = 16, n: int = 64,
+                    k: int = 96, group: int = 32) -> str:
+    """Packed dX backward GEMM (nt) on the realigned int32 MAC route."""
+    import jax
+    from repro.core.gse import gse_pack, gse_quantize, unpack_exponents
+    from repro.kernels import ops
+    a = jax.random.normal(jax.random.PRNGKey(0), (m, n))
+    b = jax.random.normal(jax.random.PRNGKey(1), (n, k))
+    ap = gse_pack(gse_quantize(a, bits, group))
+    bp = gse_pack(gse_quantize(b, bits, group))
+    ae = unpack_exponents(ap.exponent_words, ap.exponent_shape)
+    be = unpack_exponents(bp.exponent_words, bp.exponent_shape)
+    return _optimized_hlo(
+        lambda aw, ae, bw, be: ops.gse_matmul_packed_nt(
+            aw, ae, bw, be, bits, bits, group, group, int_mac=True),
+        ap.mantissa_words, ae, bp.mantissa_words, be)
+
+
+def lower_matmul_tn(bits: int = 8, m: int = 32, n: int = 64,
+                    k: int = 96, group: int = 32) -> str:
+    """Packed dW backward GEMM (tn): contraction over the shared leading
+    axis — operands (N, M) and (N, K), both grouped along their last dim
+    (so m must be group-divisible here, unlike the nt case)."""
+    import jax
+    from repro.core.gse import gse_pack, gse_quantize, unpack_exponents
+    from repro.kernels import ops
+    a = jax.random.normal(jax.random.PRNGKey(0), (n, m))
+    b = jax.random.normal(jax.random.PRNGKey(1), (n, k))
+    ap = gse_pack(gse_quantize(a, bits, group))
+    bp = gse_pack(gse_quantize(b, bits, group))
+    ae = unpack_exponents(ap.exponent_words, ap.exponent_shape)
+    be = unpack_exponents(bp.exponent_words, bp.exponent_shape)
+    return _optimized_hlo(
+        lambda aw, ae, bw, be: ops.gse_matmul_packed_tn(
+            aw, ae, bw, be, bits, bits, group, group, int_mac=True),
+        ap.mantissa_words, ae, bp.mantissa_words, be)
+
+
+def lower_score_tile(r: int = 8, s: int = 64, d: int = 64,
+                     bits: int = 8, group: int = 32) -> str:
+    """Exact-tier attention score tile on already-int8 mantissas."""
+    import jax
+    from repro.kernels import ops
+    from repro.kernels.gse_matmul import gse_score_tile
+    q = jax.random.normal(jax.random.PRNGKey(0), (r, d))
+    k = jax.random.normal(jax.random.PRNGKey(1), (s, d))
+    qm, qe = ops.gse_quantize(q, bits, group)
+    km, ke = ops.gse_quantize(k, bits, group)
+    return _optimized_hlo(
+        lambda a, b, c, e: gse_score_tile(a, b, c, e, group=group),
+        qm, qe, km, ke)
+
+
+# packed decode attention program geometry (kernel route, GQA, interpret
+# mode on CPU): head_dim 32 so the tolerated fp PV GEMM (result minor dim
+# == D) can never be confused with a score GEMM (minor dim == bk=64).
+_ATTN = dict(b=1, t=8, h=4, kv=2, d=32, s=128, bq=8, bk=64, bits=8)
+
+
+def lower_attention(int_mac: bool = True) -> str:
+    """Packed decode attention step on the forced kernel route."""
+    import jax
+    from repro.kernels import ops
+    p = _ATTN
+    q = jax.random.normal(jax.random.PRNGKey(0), (p["b"], p["t"], p["h"],
+                                                  p["d"]))
+    k = jax.random.normal(jax.random.PRNGKey(1), (p["b"], p["s"], p["kv"],
+                                                  p["d"]))
+    v = jax.random.normal(jax.random.PRNGKey(2), (p["b"], p["s"], p["kv"],
+                                                  p["d"]))
+    kw, ke = ops.quant_pack_kv_rows(k, p["bits"])
+    vw, ve = ops.quant_pack_kv_rows(v, p["bits"])
+    with _env(REPRO_FAP_ROUTE="kernel", REPRO_INT_MAC=None):
+        return _optimized_hlo(
+            lambda q, kw, ke, vw, ve: ops.flash_attention_packed(
+                q, kw, ke, vw, ve, causal=False,
+                q_offset=p["s"] - p["t"], bq=p["bq"], bk=p["bk"],
+                int_mac=int_mac),
+            q, kw, ke, vw, ve)
+
+
+def trace_wire_jaxpr(n: int = 256, bits: int = 8, group: int = 32,
+                     packed: bool = True):
+    """jaxpr of the shard_mapped packed gradient mean on a 1-device mesh."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from repro.distributed.compression import compressed_mean
+    from repro.distributed.sharding import shard_map_compat
+    mesh = jax.make_mesh((1,), ("pod",))
+    g = jax.random.normal(jax.random.PRNGKey(0), (1, n)) * 1e-3
+    r0 = jnp.zeros((1, n))
+
+    def f(gg, rr):
+        return compressed_mean(gg[0], rr[0], "pod", bits=bits, group=group,
+                               packed=packed)
+
+    fm = shard_map_compat(f, mesh, in_specs=(P("pod"), P("pod")),
+                          out_specs=(P(), P()))
+    return jax.make_jaxpr(fm)(g, r0)
+
+
+# ---------------------------------------------------------------------------
+# Checks
+# ---------------------------------------------------------------------------
+
+def check_backward_gemms() -> dict:
+    """int-dot-route + one-tile-unpacked on the nt/tn int_mac GEMMs."""
+    violations: List[str] = []
+    # geometries chosen so the fp32 GEMM *output* shape (m, k) collides
+    # with neither operand's unpacked shape (n, m) / (n, k) / (m, n)
+    geoms = (("nt", lower_matmul_nt, (16, 64, 96)),
+             ("tn", lower_matmul_tn, (32, 64, 96)))
+    for bits in (4, 8):
+        for tag, lower, (m, n, k) in geoms:
+            hlo = lower(bits=bits, m=m, n=n, k=k)
+            shapes = [(m, n), (n, k), (n, m)]
+            flat = {m * n, n * k}
+            violations += [f"[{tag} b{bits}] {v}"
+                           for v in audit_int_route(hlo)]
+            violations += [f"[{tag} b{bits}] {v}"
+                           for v in audit_no_unpacked_fp(hlo, shapes, flat)]
+    return _result("backward-gemms-int-route", violations,
+                   "nt/tn packed GEMMs, bits 4 and 8, int_mac=True: only "
+                   "integer dots, no operand-sized fp buffer")
+
+
+def check_score_tile() -> dict:
+    hlo = lower_score_tile()
+    return _result("score-tile-int-route", audit_int_route(hlo),
+                   "exact-tier score tile: the one GEMM is s8xs8->s32")
+
+
+def check_attention() -> dict:
+    p = _ATTN
+    hlo = lower_attention(int_mac=True)
+    violations = audit_int_route(hlo, fp_ok_minor_dim=p["d"])
+    cache_dims = [(p["b"], p["s"], p["kv"], p["d"]),
+                  (p["b"] * p["kv"], p["s"], p["d"])]
+    cache_flat = {p["b"] * p["s"] * p["kv"] * p["d"]}
+    violations += audit_no_unpacked_fp(hlo, cache_dims, cache_flat)
+    return _result("attention-int-route", violations,
+                   "packed decode attention (kernel route, int_mac): score "
+                   "dots integer, fp only in the PV GEMM, no fp buffer of "
+                   "full KV-cache shape")
+
+
+def check_train_residuals() -> dict:
+    """QCD train step with residuals_packed: the saved-for-backward set is
+    packed u32 word streams, never a full-precision activation residual."""
+    import dataclasses as _dc
+
+    import jax
+    import jax.numpy as jnp
+    from repro.core.policy import QuantPolicy
+    from repro.models import model as M
+    from repro.models.config import ModelConfig
+    from repro.train.step import lm_loss
+
+    cfg = ModelConfig(name="audit", family="dense", n_layers=2, d_model=64,
+                      n_heads=4, n_kv_heads=2, d_ff=256, vocab=64,
+                      vocab_pad_multiple=32, remat=True)
+    pol = _dc.replace(QuantPolicy.gsq(8, rank=8), residuals_packed=True)
+    fz, tr = M.init_model(jax.random.PRNGKey(0), cfg, pol)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (4, 32), 4, 64)
+    batch = {"tokens": toks, "labels": jnp.roll(toks, -1, axis=1),
+             "loss_mask": jnp.ones((4, 32), jnp.float32)}
+    _, vjp = jax.vjp(lambda t: lm_loss(t, fz, batch, cfg, pol)[0], tr)
+    leaves = jax.tree_util.tree_leaves(vjp)
+
+    violations = []
+    words = [l for l in leaves if l.dtype == jnp.uint32]
+    if not words:
+        violations.append("no packed u32 residual words saved for backward")
+    elif not any(l.ndim >= 2 and l.shape[0] == cfg.n_layers for l in words):
+        violations.append("no per-layer stacked (L, ...) word stream "
+                          "among the residuals")
+    res_size = 4 * 32 * cfg.d_ff          # smallest per-GEMM residual
+    for l in leaves:
+        if jnp.issubdtype(l.dtype, jnp.floating) and l.size >= res_size:
+            violations.append(f"full-precision residual leaf "
+                              f"{l.dtype}{tuple(l.shape)} saved for "
+                              "backward")
+    return _result("train-residuals-packed", violations,
+                   "QCD train step (residuals_packed): saved-for-backward "
+                   "set is packed u32 word streams only")
+
+
+def check_collective_wire() -> dict:
+    prims = jaxpr_census(trace_wire_jaxpr(packed=True))
+    return _result("gradient-wire-u32", audit_wire(prims),
+                   "packed compressed_mean: all_gather carries u32 words, "
+                   "no float collectives, no transcendental scale math")
+
+
+def check_guard_coverage() -> dict:
+    """Every int_mac Pallas entry reaches a depth guard or the exact tier,
+    and the exact-tier closure bound holds."""
+    from repro.core.gse import DEFAULT_GROUP, qmax_for_bits
+    from repro.kernels.gse_matmul import int_mac_max_depth
+
+    violations: List[str] = []
+    qmax = qmax_for_bits(8)
+    if DEFAULT_GROUP * qmax * qmax >= 2 ** 24:
+        violations.append(
+            f"exact-tier closure broken: group({DEFAULT_GROUP}) * "
+            f"qmax({qmax})^2 >= 2^24 — group MACs no longer fp32-exact")
+    if int_mac_max_depth(8, 8) < 64:
+        violations.append("bounded-tier depth limit below the default "
+                          "64-wide K tile")
+
+    kern_dir = Path(__file__).resolve().parents[1] / "kernels"
+    audited = 0
+    for path in sorted(kern_dir.glob("*.py")):
+        tree = ast.parse(path.read_text(encoding="utf-8"))
+        fns = {n.name: n for n in tree.body
+               if isinstance(n, ast.FunctionDef)}
+
+        def names_in(fn) -> Set[str]:
+            out: Set[str] = set()
+            for sub in ast.walk(fn):
+                if isinstance(sub, ast.Name):
+                    out.add(sub.id)
+                elif isinstance(sub, ast.Attribute):
+                    out.add(sub.attr)
+            return out
+
+        reach: Dict[str, Set[str]] = {nm: names_in(fn)
+                                      for nm, fn in fns.items()}
+        for nm, fn in fns.items():
+            args = fn.args
+            takes_int_mac = any(
+                a.arg == "int_mac"
+                for a in args.args + args.kwonlyargs + args.posonlyargs)
+            if not takes_int_mac:
+                continue
+            # transitive closure through same-module top-level functions
+            seen: Set[str] = set()
+            frontier = {nm}
+            while frontier:
+                cur = frontier.pop()
+                seen.add(cur)
+                frontier |= (reach.get(cur, set()) & set(fns)) - seen
+            names: Set[str] = set()
+            for s in seen:
+                names |= reach.get(s, set())
+            if "pallas_call" not in names:
+                continue
+            audited += 1
+            if not names & {"check_int_mac_depth", "gse_score_tile"}:
+                violations.append(
+                    f"{path.name}:{fn.lineno} `{nm}` takes int_mac and "
+                    "lowers a Pallas kernel but never reaches "
+                    "check_int_mac_depth or the gse_score_tile exact tier")
+    if audited == 0:
+        violations.append("no int_mac Pallas entry points found — the "
+                          "guard-coverage scan is miswired")
+    return _result("int-mac-guard-coverage", violations,
+                   f"{audited} int_mac Pallas entry(ies) all reach a depth "
+                   "guard or the exact tier; closure bound holds")
+
+
+def _result(name: str, violations: List[str], detail: str) -> dict:
+    return {"name": name, "ok": not violations, "detail": detail,
+            "violations": violations}
+
+
+ALL_CHECKS = (check_backward_gemms, check_score_tile, check_attention,
+              check_train_residuals, check_collective_wire,
+              check_guard_coverage)
+
+
+def run_checks(checks=ALL_CHECKS) -> dict:
+    results = []
+    for chk in checks:
+        try:
+            results.append(chk())
+        except Exception as e:            # a crashed check is a failure
+            results.append(_result(chk.__name__, [f"check crashed: {e!r}"],
+                                   chk.__doc__ or ""))
+    return {"schema": REPORT_SCHEMA,
+            "ok": all(r["ok"] for r in results),
+            "checks": results}
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    import argparse
+    parser = argparse.ArgumentParser(
+        prog="repro.analysis.contract",
+        description="trace-level integer parity contract audit")
+    parser.add_argument("--check", action="store_true",
+                        help="run the full audit (exit 1 on violation)")
+    parser.add_argument("--json", type=Path, default=None,
+                        help="write the machine-readable report here")
+    args = parser.parse_args(argv)
+    if not args.check:
+        parser.print_help()
+        return 2
+    report = run_checks()
+    if args.json:
+        args.json.write_text(json.dumps(report, indent=2) + "\n",
+                             encoding="utf-8")
+    for r in report["checks"]:
+        status = "ok  " if r["ok"] else "FAIL"
+        print(f"[{status}] {r['name']}: {r['detail']}")
+        for v in r["violations"]:
+            print(f"       - {v}")
+    print("contract audit:", "PASS" if report["ok"] else "FAIL")
+    return 0 if report["ok"] else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

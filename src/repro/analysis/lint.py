@@ -1,0 +1,506 @@
+"""gse-lint: static enforcement of the GSE integer parity contract.
+
+The parity contract (docs/architecture.md, docs/static-analysis.md) is only
+as strong as its weakest new code path: a fresh `jnp.exp2` scale, a raw
+`os.environ` knob read, a Pallas kernel without an oracle, or a hand-rolled
+word-plane dequant all reintroduce exactly the fusion-dependent bugs earlier
+PRs eradicated. This module is an AST linter over ``src/`` with a rule
+registry that turns those prose rules into a CI gate:
+
+  R1 inexact-scale-math     no ``jnp.exp2`` / ``jnp.log2`` / ``2 ** e``
+                            scale math outside the blessed exact-math
+                            helpers (``core/gse.py``) and the numpy-domain
+                            oracles (``kernels/ref.py``). Use ``exp2_int``
+                            / ``ceil_log2`` — XLA's transcendentals are
+                            fusion-dependent approximations.
+  R2 raw-env-knob-read      every ``REPRO_*`` env knob is read through the
+                            ``repro.kernels.ops`` tristate registry; raw
+                            ``os.environ`` reads bypass the shared 1/0/auto
+                            vocabulary (writes are fine — the dry-run
+                            harness sets knobs for subprocesses).
+  R3 kernel-missing-oracle  every Pallas kernel entry point (a top-level
+                            function in ``kernels/`` that calls
+                            ``pallas_call``) must have a registered oracle
+                            in ``kernels/ref.py`` named ``<base>_ref`` or
+                            ``<base>_oracle`` (base = the entry name minus
+                            a trailing ``_pallas``).
+  R4 hand-rolled-dequant    no raw shift/mask math on packed word planes
+                            and no ``.astype`` dequant of
+                            ``mantissa_words`` / ``exponent_words``
+                            outside the shared pack/unpack bodies — one
+                            definition per bit-math body, or the wire
+                            format silently forks.
+
+Pragmas: append ``# gse-lint: disable=R1`` (comma-separate several rule
+ids) to a line to suppress findings on that line; a file-level
+``# gse-lint: disable-file=R3`` comment anywhere in the file suppresses a
+rule for the whole file.
+
+Baseline: grandfathered violations live in ``tools/gse_lint_baseline.json``
+as (rule, path, symbol, code) fingerprints — line-number free, so the
+baseline survives unrelated edits and the report stays diff-friendly.
+``--update-baseline`` rewrites it from the current findings; the exit code
+only counts *non-baselined* findings.
+
+CLI (also exposed as ``tools/gse_lint.py``)::
+
+    python tools/gse_lint.py [paths...] [--json out.json]
+                             [--baseline tools/gse_lint_baseline.json]
+                             [--update-baseline]
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import re
+import sys
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+RULE_IDS = ("R1", "R2", "R3", "R4")
+
+_PRAGMA_RE = re.compile(r"#\s*gse-lint:\s*disable=([A-Za-z0-9,\s]+)")
+_PRAGMA_FILE_RE = re.compile(r"#\s*gse-lint:\s*disable-file=([A-Za-z0-9,\s]+)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    name: str               # short rule slug
+    path: str               # posix relpath from the lint root
+    line: int
+    col: int
+    message: str
+    symbol: str             # enclosing def/class qualname ("" = module)
+    code: str               # normalized source line
+
+    @property
+    def fingerprint(self) -> Tuple[str, str, str, str]:
+        """Line-number-free identity used for baseline matching."""
+        return (self.rule, self.path, self.symbol, self.code)
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def render(self) -> str:
+        return (f"{self.path}:{self.line}:{self.col}: "
+                f"{self.rule}[{self.name}] {self.message}")
+
+
+def _attr_chain(node: ast.AST) -> List[str]:
+    """['os', 'environ', 'get'] for ``os.environ.get`` — [] if not a pure
+    Name/Attribute chain."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return parts[::-1]
+    return []
+
+
+def _identifiers(node: ast.AST) -> Iterable[str]:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Name):
+            yield sub.id
+        elif isinstance(sub, ast.Attribute):
+            yield sub.attr
+
+
+class _Rule:
+    id = ""
+    name = ""
+
+    def applies(self, relpath: str) -> bool:
+        return True
+
+    def check(self, ctx: "_FileContext") -> Iterable[Finding]:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass
+class _FileContext:
+    relpath: str
+    tree: ast.Module
+    lines: List[str]
+    root: Path
+    symbols: Dict[int, str]   # line -> enclosing qualname
+
+    def finding(self, rule: "_Rule", node: ast.AST, message: str) -> Finding:
+        line = getattr(node, "lineno", 1)
+        code = self.lines[line - 1].strip() if line <= len(self.lines) else ""
+        return Finding(rule.id, rule.name, self.relpath, line,
+                       getattr(node, "col_offset", 0) + 1, message,
+                       self.symbols.get(line, ""), code)
+
+
+def _symbol_map(tree: ast.Module) -> Dict[int, str]:
+    """Map every source line to the qualname of its enclosing def/class."""
+    out: Dict[int, str] = {}
+
+    def visit(node: ast.AST, prefix: str):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.ClassDef)):
+                qual = f"{prefix}.{child.name}" if prefix else child.name
+                end = getattr(child, "end_lineno", child.lineno)
+                for ln in range(child.lineno, end + 1):
+                    out[ln] = qual
+                visit(child, qual)
+            else:
+                visit(child, prefix)
+
+    visit(tree, "")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# R1: inexact scale math
+# ---------------------------------------------------------------------------
+
+class RuleInexactScaleMath(_Rule):
+    id = "R1"
+    name = "inexact-scale-math"
+    # the exact-math helper definitions and the numpy-domain oracles
+    BLESSED = {"repro/core/gse.py", "repro/kernels/ref.py"}
+    _FUNCS = {"exp2", "log2"}
+
+    def applies(self, relpath: str) -> bool:
+        return relpath not in self.BLESSED
+
+    def check(self, ctx: _FileContext) -> Iterable[Finding]:
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Call):
+                chain = _attr_chain(node.func)
+                if chain and chain[-1] in self._FUNCS:
+                    yield ctx.finding(
+                        self, node,
+                        f"`{'.'.join(chain)}` is a fusion-dependent "
+                        "approximation; use the exact-integer helpers "
+                        "`exp2_int` / `ceil_log2` from repro.core.gse")
+            elif isinstance(node, ast.BinOp) and isinstance(node.op, ast.Pow):
+                base = node.left
+                if (isinstance(base, ast.Constant)
+                        and base.value in (2, 2.0)
+                        and not isinstance(node.right, ast.Constant)
+                        and not _is_const_expr(node.right)):
+                    yield ctx.finding(
+                        self, node,
+                        "`2 ** e` with a non-constant exponent: build "
+                        "power-of-two scales with `exp2_int` (exact IEEE-754 "
+                        "bit assembly)")
+
+
+def _is_const_expr(node: ast.AST) -> bool:
+    """Constant-folded exponents (``2 ** -20``, ``2 ** (8 - 1)``) are exact
+    host math, not traced scale math."""
+    return all(isinstance(n, (ast.Constant, ast.UnaryOp, ast.BinOp,
+                              ast.unaryop, ast.operator))
+               for n in ast.walk(node))
+
+
+# ---------------------------------------------------------------------------
+# R2: raw REPRO_* env reads
+# ---------------------------------------------------------------------------
+
+class RuleRawEnvRead(_Rule):
+    id = "R2"
+    name = "raw-env-knob-read"
+    # the tristate registry itself is the single blessed reader
+    BLESSED = {"repro/kernels/ops.py"}
+
+    def applies(self, relpath: str) -> bool:
+        return relpath not in self.BLESSED
+
+    @staticmethod
+    def _repro_key(node: Optional[ast.AST]) -> Optional[str]:
+        if (isinstance(node, ast.Constant) and isinstance(node.value, str)
+                and node.value.startswith("REPRO_")):
+            return node.value
+        return None
+
+    def check(self, ctx: _FileContext) -> Iterable[Finding]:
+        for node in ast.walk(ctx.tree):
+            key = None
+            if isinstance(node, ast.Call):
+                chain = _attr_chain(node.func)
+                if chain[-2:] == ["environ", "get"] or \
+                        (len(chain) == 2 and chain[-1] == "getenv"):
+                    key = self._repro_key(node.args[0] if node.args else None)
+            elif isinstance(node, ast.Subscript) and \
+                    isinstance(node.ctx, ast.Load):
+                chain = _attr_chain(node.value)
+                if chain and chain[-1] == "environ":
+                    key = self._repro_key(node.slice)
+            if key:
+                yield ctx.finding(
+                    self, node,
+                    f"raw read of {key}: route it through the shared "
+                    "1/0/auto registry (repro.kernels.ops._env_tristate / "
+                    "ENV_TRISTATE_KNOBS) so stray values cannot be "
+                    "silently truthy")
+
+
+# ---------------------------------------------------------------------------
+# R3: Pallas kernel entry points must have a registered oracle
+# ---------------------------------------------------------------------------
+
+class RuleKernelOracle(_Rule):
+    id = "R3"
+    name = "kernel-missing-oracle"
+    EXEMPT = {"repro/kernels/ref.py", "repro/kernels/ops.py",
+              "repro/kernels/__init__.py"}
+
+    def __init__(self):
+        self._oracles: Optional[Set[str]] = None
+
+    def applies(self, relpath: str) -> bool:
+        return relpath.startswith("repro/kernels/") and \
+            relpath not in self.EXEMPT
+
+    def _oracle_names(self, root: Path) -> Set[str]:
+        if self._oracles is None:
+            ref = root / "repro" / "kernels" / "ref.py"
+            self._oracles = set()
+            if ref.exists():
+                tree = ast.parse(ref.read_text(encoding="utf-8"))
+                self._oracles = {n.name for n in tree.body
+                                 if isinstance(n, ast.FunctionDef)}
+        return self._oracles
+
+    def check(self, ctx: _FileContext) -> Iterable[Finding]:
+        oracles = self._oracle_names(ctx.root)
+        for node in ctx.tree.body:
+            if not isinstance(node, ast.FunctionDef):
+                continue
+            calls_pallas = any(
+                isinstance(sub, ast.Call)
+                and (_attr_chain(sub.func)[-1:] == ["pallas_call"])
+                for sub in ast.walk(node))
+            if not calls_pallas:
+                continue
+            base = node.name[:-len("_pallas")] \
+                if node.name.endswith("_pallas") else node.name
+            wanted = (f"{base}_ref", f"{base}_oracle")
+            if not any(w in oracles for w in wanted):
+                yield ctx.finding(
+                    self, node,
+                    f"Pallas kernel entry `{node.name}` has no registered "
+                    f"oracle in kernels/ref.py (expected `{wanted[0]}` or "
+                    f"`{wanted[1]}`) — every kernel is swept bit-exact "
+                    "against a pure-jnp oracle")
+
+
+# ---------------------------------------------------------------------------
+# R4: hand-rolled word-plane dequant
+# ---------------------------------------------------------------------------
+
+class RuleHandRolledDequant(_Rule):
+    id = "R4"
+    name = "hand-rolled-dequant"
+    # the shared pack/unpack bit-math bodies (one definition per body)
+    BLESSED = {"repro/core/gse.py", "repro/kernels/gse_unpack.py",
+               "repro/kernels/gse_quant_pack.py", "repro/kernels/ref.py"}
+    _WORDY = re.compile(r"word|plane", re.IGNORECASE)
+    _PACKED_ATTRS = {"mantissa_words", "exponent_words"}
+
+    def applies(self, relpath: str) -> bool:
+        return relpath not in self.BLESSED
+
+    def check(self, ctx: _FileContext) -> Iterable[Finding]:
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.BinOp) and \
+                    isinstance(node.op, (ast.LShift, ast.RShift)):
+                wordy = [i for i in _identifiers(node)
+                         if self._WORDY.search(i)]
+                if wordy:
+                    yield ctx.finding(
+                        self, node,
+                        f"raw shift on packed word data ({wordy[0]!r}): "
+                        "unpack through gse_unpack / unpack_tile / "
+                        "unpack_mantissas — one definition per bit-math "
+                        "body, or the wire format silently forks")
+            elif isinstance(node, ast.Call):
+                chain = _attr_chain(node.func)
+                if len(chain) >= 2 and chain[-1] == "astype" and \
+                        any(a in self._PACKED_ATTRS for a in chain[:-1]):
+                    yield ctx.finding(
+                        self, node,
+                        "`.astype` on a packed word plane is not a dequant "
+                        "— word planes only become values through "
+                        "gse_unpack / unpack_tile")
+                elif isinstance(node.func, ast.Attribute) and \
+                        node.func.attr == "astype" and \
+                        any(a in self._PACKED_ATTRS
+                            for a in _identifiers(node.func.value)):
+                    yield ctx.finding(
+                        self, node,
+                        "`.astype` on an expression over packed word planes "
+                        "— word planes only become values through "
+                        "gse_unpack / unpack_tile")
+
+
+def default_rules() -> List[_Rule]:
+    return [RuleInexactScaleMath(), RuleRawEnvRead(), RuleKernelOracle(),
+            RuleHandRolledDequant()]
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
+
+def _pragmas(lines: List[str]) -> Tuple[Dict[int, Set[str]], Set[str]]:
+    per_line: Dict[int, Set[str]] = {}
+    per_file: Set[str] = set()
+    for i, text in enumerate(lines, start=1):
+        m = _PRAGMA_FILE_RE.search(text)
+        if m:
+            per_file |= {r.strip() for r in m.group(1).split(",") if r.strip()}
+            continue
+        m = _PRAGMA_RE.search(text)
+        if m:
+            per_line[i] = {r.strip() for r in m.group(1).split(",")
+                           if r.strip()}
+    return per_line, per_file
+
+
+def lint_file(path: Path, root: Path,
+              rules: Optional[List[_Rule]] = None) -> List[Finding]:
+    relpath = path.resolve().relative_to(root.resolve()).as_posix()
+    src = path.read_text(encoding="utf-8")
+    try:
+        tree = ast.parse(src)
+    except SyntaxError as e:
+        return [Finding("E0", "syntax-error", relpath, e.lineno or 1, 1,
+                        f"cannot parse: {e.msg}", "", "")]
+    lines = src.splitlines()
+    per_line, per_file = _pragmas(lines)
+    ctx = _FileContext(relpath, tree, lines, root, _symbol_map(tree))
+    out: List[Finding] = []
+    for rule in (rules if rules is not None else default_rules()):
+        if rule.id in per_file or not rule.applies(relpath):
+            continue
+        for f in rule.check(ctx):
+            if rule.id in per_line.get(f.line, ()):
+                continue
+            out.append(f)
+    return out
+
+
+def iter_py_files(target: Path) -> Iterable[Path]:
+    if target.is_file():
+        yield target
+        return
+    for p in sorted(target.rglob("*.py")):
+        if "__pycache__" not in p.parts:
+            yield p
+
+
+def lint_paths(paths: Iterable[Path], root: Path,
+               rules: Optional[List[_Rule]] = None) -> List[Finding]:
+    shared = rules if rules is not None else default_rules()
+    out: List[Finding] = []
+    for target in paths:
+        for path in iter_py_files(Path(target)):
+            out.extend(lint_file(path, root, shared))
+    out.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Baseline
+# ---------------------------------------------------------------------------
+
+BASELINE_SCHEMA = "repro/gse_lint_baseline/v1"
+
+
+def load_baseline(path: Path) -> Set[Tuple[str, str, str, str]]:
+    if not path.exists():
+        return set()
+    data = json.loads(path.read_text(encoding="utf-8"))
+    return {(v["rule"], v["path"], v.get("symbol", ""), v.get("code", ""))
+            for v in data.get("violations", [])}
+
+
+def write_baseline(path: Path, findings: List[Finding]) -> None:
+    entries = sorted(
+        {(f.rule, f.path, f.symbol, f.code) for f in findings})
+    data = {
+        "schema": BASELINE_SCHEMA,
+        "violations": [
+            {"rule": r, "path": p, "symbol": s, "code": c}
+            for r, p, s, c in entries],
+    }
+    path.write_text(json.dumps(data, indent=2) + "\n", encoding="utf-8")
+
+
+def split_baselined(findings: List[Finding],
+                    baseline: Set[Tuple[str, str, str, str]]
+                    ) -> Tuple[List[Finding], List[Finding]]:
+    fresh = [f for f in findings if f.fingerprint not in baseline]
+    grandfathered = [f for f in findings if f.fingerprint in baseline]
+    return fresh, grandfathered
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+REPORT_SCHEMA = "repro/gse_lint_report/v1"
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    import argparse
+    default_root = Path(__file__).resolve().parents[2]        # .../src
+    parser = argparse.ArgumentParser(
+        prog="gse-lint", description=__doc__.splitlines()[0])
+    parser.add_argument("paths", nargs="*", type=Path,
+                        help="files/dirs to lint (default: the src tree)")
+    parser.add_argument("--root", type=Path, default=default_root,
+                        help="lint root for relpaths / rule blessing")
+    parser.add_argument("--baseline", type=Path,
+                        default=default_root.parent / "tools"
+                        / "gse_lint_baseline.json")
+    parser.add_argument("--update-baseline", action="store_true",
+                        help="rewrite the baseline from current findings")
+    parser.add_argument("--json", type=Path, default=None,
+                        help="write a machine-readable report here")
+    args = parser.parse_args(argv)
+
+    paths = args.paths or [args.root]
+    findings = lint_paths(paths, args.root)
+    if args.update_baseline:
+        write_baseline(args.baseline, findings)
+        print(f"gse-lint: baseline updated with {len(findings)} finding(s) "
+              f"-> {args.baseline}")
+        return 0
+    baseline = load_baseline(args.baseline)
+    fresh, grandfathered = split_baselined(findings, baseline)
+
+    if args.json:
+        report = {
+            "schema": REPORT_SCHEMA,
+            "root": str(args.root),
+            "fresh": [f.to_dict() for f in fresh],
+            "baselined": [f.to_dict() for f in grandfathered],
+            "ok": not fresh,
+        }
+        args.json.write_text(json.dumps(report, indent=2) + "\n",
+                             encoding="utf-8")
+
+    for f in fresh:
+        print(f.render())
+    if grandfathered:
+        print(f"gse-lint: {len(grandfathered)} baselined finding(s) "
+              "suppressed")
+    if fresh:
+        print(f"gse-lint: {len(fresh)} violation(s)")
+        return 1
+    print("gse-lint: clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

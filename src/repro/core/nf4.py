@@ -111,10 +111,13 @@ def nf4_dequantize(t: NF4Tensor, dtype=jnp.bfloat16) -> jax.Array:
     nb = t.qscale.shape[0]
     qs = _pad_to(t.qscale.astype(jnp.float32), DQ_BLOCK).reshape(-1, DQ_BLOCK)
     absmax = (qs * t.qscale_scale[:, None]).reshape(-1)[:nb] + t.qscale_mean
-    import os as _os
+    # Knob read through the shared 1/0/auto registry (repro.kernels.ops) —
+    # lazy import: kernels.ops transitively imports this module, and the
+    # read happens at trace time, long after both modules initialize.
+    from repro.kernels.ops import nf4_flat_dequant
     if (t.codes.shape == t.shape and t.shape
             and t.shape[-1] % BLOCK == 0
-            and not _os.environ.get("REPRO_NF4_FLAT_DEQUANT")):
+            and not nf4_flat_dequant()):
         # Shape-preserving path: split only the minor-most dim into 64-value
         # blocks (row-major flat blocks == contiguous row spans). A flat
         # (-1, 64) reshape of a TP-sharded weight defeats GSPMD and costs a

@@ -29,8 +29,8 @@ from typing import Any, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.gse import (EXP_MIN, EXP_MAX, pack_mantissas,
-                            qmax_for_bits, unpack_mantissas)
+from repro.core.gse import (EXP_MIN, EXP_MAX, ceil_log2, exp2_int,
+                            pack_mantissas, qmax_for_bits, unpack_mantissas)
 
 
 def _group_quantize_shared(g: jax.Array, e_shared: jax.Array, bits: int,
@@ -38,7 +38,10 @@ def _group_quantize_shared(g: jax.Array, e_shared: jax.Array, bits: int,
     """Quantize with an externally agreed exponent (post-pmax)."""
     qmax = qmax_for_bits(bits)
     gg = g.reshape(-1, group)
-    scale = jnp.exp2(e_shared.astype(jnp.float32))[:, None]
+    # exact 2^e (IEEE-754 bit assembly) — XLA's exp2 can be an ulp off for
+    # integer args depending on fusion context, which would let the same
+    # gradient quantize differently across programs (repro.core.gse).
+    scale = exp2_int(e_shared)[:, None]
     m = jnp.clip(jnp.round(gg / scale), -qmax, qmax).astype(jnp.int8)
     return m
 
@@ -48,8 +51,12 @@ def _local_exponent(g: jax.Array, bits: int, group: int):
     gg = g.reshape(-1, group)
     amax = jnp.max(jnp.abs(gg), axis=-1)
     safe = jnp.where(amax > 0, amax, 1.0)
-    e = jnp.ceil(jnp.log2(safe / qmax))
-    e = jnp.where(amax > 0, e, float(EXP_MIN))
+    # exact ceil(log2) from the fp32 bit pattern: XLA's log2 approximation
+    # is fusion-dependent and can flip the shared exponent by one at exact
+    # powers of two — the wire words would then differ between the jitted
+    # train step and any reference computation of the same gradient.
+    e = ceil_log2(safe / qmax)
+    e = jnp.where(amax > 0, e, EXP_MIN)
     return jnp.clip(e, EXP_MIN, EXP_MAX).astype(jnp.int8)
 
 
@@ -85,11 +92,9 @@ def compressed_mean(g: jax.Array, residual: jax.Array, axis_name: str,
         m_all = jax.lax.all_gather(m, axis_name)                 # (P, n/g, g)
         npods = m_all.shape[0]
     msum = jnp.sum(m_all.astype(jnp.int32), axis=0)
-    mean = (msum.astype(jnp.float32)
-            * jnp.exp2(e_star.astype(jnp.float32))[:, None]) / npods
+    mean = (msum.astype(jnp.float32) * exp2_int(e_star)[:, None]) / npods
     # error feedback: what this shard failed to transmit
-    sent = (m.astype(jnp.float32)
-            * jnp.exp2(e_star.astype(jnp.float32))[:, None])
+    sent = m.astype(jnp.float32) * exp2_int(e_star)[:, None]
     new_res = (flat.reshape(-1, group) - sent).reshape(-1)[:n]
     return mean.reshape(-1)[:n].reshape(shape), new_res.reshape(-1)[:n
                                                                     ].reshape(shape)

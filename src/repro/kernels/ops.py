@@ -83,6 +83,15 @@ def resolve_int_mac(flag: bool) -> bool:
     return bool(flag) if forced is None else forced
 
 
+def nf4_flat_dequant() -> bool:
+    """Single reader for REPRO_NF4_FLAT_DEQUANT (forces the flat (-1, 64)
+    NF4 dequant layout instead of the shape-preserving path — the dry-run
+    A/B in repro.launch.dryrun). Same 1/0/auto vocabulary as every other
+    knob (auto/unset = off); formerly a bespoke any-non-empty-truthy read
+    of os.environ inside repro.core.nf4."""
+    return _env_tristate("REPRO_NF4_FLAT_DEQUANT", lambda: False)
+
+
 def qcd_packed_kernels() -> bool:
     """Route the packed-residual QCD GEMMs through the Pallas kernels.
 
@@ -103,6 +112,7 @@ ENV_TRISTATE_KNOBS = {
     "REPRO_QCD_PACKED_KERNELS": lambda: qcd_packed_kernels(),
     "REPRO_QCD_F32_OUT": lambda: qcd_f32_out(),
     "REPRO_INT_MAC": lambda: resolve_int_mac(False),
+    "REPRO_NF4_FLAT_DEQUANT": lambda: nf4_flat_dequant(),
 }
 
 

@@ -1,0 +1,178 @@
+"""Trace-auditor tests (repro.analysis.contract).
+
+Three layers: the invariant engines on handcrafted HLO (unit), seeded
+contract violations the auditor must flag (the "provably fails" half of
+the acceptance criteria), and a green run of the real checks on the
+tier-1 config (the cheap ones inline; the full matrix is the CI step).
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import contract
+from repro.kernels import ops
+
+# ------------------------------------------------- engine unit tests ------
+
+_HLO_INT = """\
+HloModule m
+
+ENTRY %main (a: s8[16,32], b: s8[64,32]) -> s32[16,64] {
+  %a = s8[16,32]{1,0} parameter(0)
+  %b = s8[64,32]{1,0} parameter(1)
+  ROOT %dot.0 = s32[16,64]{1,0} dot(s8[16,32]{1,0} %a, s8[64,32]{1,0} %b), lhs_contracting_dims={1}, rhs_contracting_dims={1}
+}
+"""
+
+_HLO_FP = """\
+HloModule m
+
+ENTRY %main (a: f32[16,32], b: f32[32,64]) -> f32[16,64] {
+  %a = f32[16,32]{1,0} parameter(0)
+  %b = f32[32,64]{1,0} parameter(1)
+  ROOT %dot.0 = f32[16,64]{1,0} dot(f32[16,32]{1,0} %a, f32[32,64]{1,0} %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+
+_HLO_BUFFERS = """\
+HloModule m
+
+%fused_computation (p0: u32[8,16]) -> f32[64,96] {
+  %p0 = u32[8,16]{1,0} parameter(0)
+  ROOT %cvt = f32[64,96]{1,0} convert(u32[8,16]{1,0} %p0)
+}
+
+%while_body (p: f32[64,96]) -> f32[64,96] {
+  %p = f32[64,96]{1,0} parameter(0)
+  ROOT %add = f32[64,96]{1,0} add(f32[64,96]{1,0} %p, f32[64,96]{1,0} %p)
+}
+
+ENTRY %main (w: u32[8,16]) -> f32[64,96] {
+  %w = u32[8,16]{1,0} parameter(0)
+  ROOT %fus = f32[64,96]{1,0} fusion(u32[8,16]{1,0} %w), kind=kLoop, calls=%fused_computation
+}
+"""
+
+
+def test_dot_census_classifies_by_operand_and_result_dtype():
+    c = contract.dot_census(_HLO_INT)
+    assert len(c["int"]) == 1 and c["fp"] == []
+    assert c["int"][0]["operand_dtypes"] == ["s8", "s8"]
+    c = contract.dot_census(_HLO_FP)
+    assert len(c["fp"]) == 1 and c["int"] == []
+
+
+def test_audit_int_route_flags_fp_and_missing_int_dots():
+    assert contract.audit_int_route(_HLO_INT) == []
+    v = contract.audit_int_route(_HLO_FP)
+    assert any("fp dot" in s for s in v)
+    assert any("no integer dot" in s for s in v)
+    # the PV-GEMM exemption keys on the result minor dim
+    assert contract.audit_int_route(_HLO_FP, fp_ok_minor_dim=64) == [
+        "no integer dot found on an int-MAC route"]
+
+
+def test_fp_buffer_scan_excludes_fusion_bodies_not_while_bodies():
+    # the f32[64,96] inside %fused_computation is VMEM (fusion internals);
+    # the same shape in %while_body and ENTRY materializes
+    hits = contract.fp_buffer_scan(_HLO_BUFFERS, dims=[(64, 96)])
+    comps = sorted({h["computation"] for h in hits})
+    assert comps == ["main", "while_body"]
+    # flat-size matching catches reshape disguises
+    hits = contract.fp_buffer_scan(_HLO_BUFFERS, flat_sizes={64 * 96})
+    assert hits
+
+
+# --------------------------------------------- seeded violations ----------
+
+def test_seeded_fp_dot_on_int_route_is_flagged():
+    """Replace the integer score GEMM with a dequant + fp matmul: the
+    int-dot-route audit must fail on the lowered program."""
+    q = jax.random.normal(jax.random.PRNGKey(0), (8, 64))
+    k = jax.random.normal(jax.random.PRNGKey(1), (64, 64))
+    qm, qe = ops.gse_quantize(q, 8, 32)
+    km, ke = ops.gse_quantize(k, 8, 32)
+
+    def broken(qm, qe, km, ke):
+        from repro.core.gse import exp2_int
+        qf = qm.astype(jnp.float32).reshape(8, 2, 32) \
+            * exp2_int(qe)[..., None]
+        kf = km.astype(jnp.float32).reshape(64, 2, 32) \
+            * exp2_int(ke)[..., None]
+        return jnp.einsum("rgc,sgc->rs", qf, kf)     # fp MACs: violation
+
+    hlo = jax.jit(broken).lower(qm, qe, km, ke).compile().as_text()
+    v = contract.audit_int_route(hlo)
+    assert any("fp dot" in s or "no integer dot" in s for s in v)
+
+
+def test_seeded_full_width_unpacked_leaf_is_flagged():
+    """Dequantizing the whole packed KV cache materializes an fp buffer of
+    the full unpacked shape: the one-tile-unpacked audit must fail."""
+    b, s, kv, d = 1, 128, 2, 32
+    k = jax.random.normal(jax.random.PRNGKey(0), (b, s, kv, d))
+    kw, ke = ops.quant_pack_kv_rows(k, 8)
+
+    def broken(kw, ke):
+        return ops.dequant_kv_rows(kw, ke, d, jnp.float32)
+
+    hlo = jax.jit(broken).lower(kw, ke).compile().as_text()
+    v = contract.audit_no_unpacked_fp(hlo, [(b, s, kv, d)],
+                                      {b * s * kv * d})
+    assert v, "full-cache dequant must be seen as a materialized fp buffer"
+
+
+def test_seeded_transcendental_wire_math_is_flagged():
+    """The pre-fix compression.py recipe — jnp.ceil(jnp.log2(...)) /
+    jnp.exp2 shared-exponent math and a raw int8 gather — must trip both
+    wire invariants at the jaxpr level."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.sharding import shard_map_compat
+
+    mesh = jax.make_mesh((1,), ("pod",))
+
+    def broken(g):
+        e = jnp.ceil(jnp.log2(jnp.maximum(jnp.abs(g), 1e-9)))
+        m = jnp.round(g * jnp.exp2(-e)).astype(jnp.int8)
+        m_all = jax.lax.all_gather(m, "pod")         # s8 wire: violation
+        return jnp.sum(m_all.astype(jnp.float32), axis=0) * jnp.exp2(e)
+
+    fm = shard_map_compat(lambda g: broken(g[0]), mesh,
+                          in_specs=(P("pod"),), out_specs=P())
+    prims = contract.jaxpr_census(
+        jax.make_jaxpr(fm)(jnp.ones((1, 64)) * 0.25))
+    v = contract.audit_wire(prims)
+    assert any("not packed unsigned words" in s for s in v)
+    assert any("transcendental" in s for s in v)
+
+
+def test_wire_audit_green_on_real_packed_compressed_mean():
+    prims = contract.jaxpr_census(contract.trace_wire_jaxpr(packed=True))
+    assert contract.audit_wire(prims) == []
+    # the legacy unpacked exchange is s8 on the wire — the audit sees it
+    prims = contract.jaxpr_census(contract.trace_wire_jaxpr(packed=False))
+    assert any("not packed unsigned words" in s
+               for s in contract.audit_wire(prims))
+
+
+# --------------------------------------------------- green checks ---------
+
+def test_check_score_tile_green():
+    r = contract.check_score_tile()
+    assert r["ok"], r["violations"]
+
+
+def test_check_guard_coverage_green():
+    r = contract.check_guard_coverage()
+    assert r["ok"], r["violations"]
+    assert "int_mac Pallas entry" in r["detail"]
+
+
+@pytest.mark.slow
+def test_full_contract_audit_green():
+    """The CI gate end to end: every check on the tier-1 config matrix."""
+    report = contract.run_checks()
+    assert report["schema"] == contract.REPORT_SCHEMA
+    bad = [r for r in report["checks"] if not r["ok"]]
+    assert report["ok"], bad

@@ -1,0 +1,231 @@
+"""Rule fixtures for the GSE parity-contract linter (repro.analysis.lint).
+
+Each rule gets the four-quadrant treatment: a positive (the violation is
+caught), a negative (the blessed/equivalent-but-legal form passes), a
+pragma-disabled case, and a baseline-suppressed case. Plus the acceptance
+check: the real ``src/`` tree lints clean against the checked-in baseline.
+"""
+import json
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import lint
+
+SRC_ROOT = Path(__file__).resolve().parents[1] / "src"
+BASELINE = Path(__file__).resolve().parents[1] / "tools" / \
+    "gse_lint_baseline.json"
+
+
+def _tree(tmp_path, files):
+    """Materialize {relpath: source} under tmp_path, return the root."""
+    for rel, src in files.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(src, encoding="utf-8")
+    return tmp_path
+
+
+def _run(root, **files):
+    _tree(root, files)
+    return lint.lint_paths([root], root)
+
+
+def _rules(findings):
+    return sorted({f.rule for f in findings})
+
+
+# ---------------------------------------------------------------- R1 ------
+
+def test_r1_flags_exp2_log2_and_dynamic_pow(tmp_path):
+    fs = _run(tmp_path, **{"repro/core/x.py": (
+        "import jax.numpy as jnp\n"
+        "def f(e):\n"
+        "    return jnp.exp2(e), jnp.log2(e), 2.0 ** e\n")})
+    assert [f.rule for f in fs] == ["R1", "R1", "R1"]
+
+
+def test_r1_allows_blessed_files_and_const_pow(tmp_path):
+    body = ("import jax.numpy as jnp\n"
+            "def f(e):\n"
+            "    return jnp.exp2(e)\n")
+    fs = _run(tmp_path, **{
+        "repro/core/gse.py": body,              # blessed: helper home
+        "repro/kernels/ref.py": body,           # blessed: numpy oracles
+        "repro/core/ok.py": (
+            "LIM = 2 ** 31 - 1\n"
+            "def f(bits):\n"
+            "    return 2 ** (8 - 1), bits\n"),  # const-folded host math
+    })
+    assert fs == []
+
+
+def test_r1_pragma_disable(tmp_path):
+    fs = _run(tmp_path, **{"repro/core/x.py": (
+        "import jax.numpy as jnp\n"
+        "def f(e):\n"
+        "    return jnp.exp2(e)  # gse-lint: disable=R1\n")})
+    assert fs == []
+
+
+# ---------------------------------------------------------------- R2 ------
+
+def test_r2_flags_raw_repro_env_reads(tmp_path):
+    fs = _run(tmp_path, **{"repro/core/x.py": (
+        "import os\n"
+        "a = os.environ.get('REPRO_FOO')\n"
+        "b = os.getenv('REPRO_BAR', '0')\n"
+        "c = os.environ['REPRO_BAZ']\n")})
+    assert [f.rule for f in fs] == ["R2", "R2", "R2"]
+
+
+def test_r2_allows_registry_writes_and_non_repro_keys(tmp_path):
+    fs = _run(tmp_path, **{
+        # the registry module is the one blessed reader
+        "repro/kernels/ops.py": (
+            "import os\n"
+            "v = os.environ.get('REPRO_FOO', 'auto')\n"),
+        "repro/core/x.py": (
+            "import os\n"
+            "os.environ['REPRO_FOO'] = '1'\n"       # writes are fine
+            "os.environ.pop('REPRO_FOO', None)\n"
+            "p = os.environ.get('XLA_FLAGS', '')\n"),  # non-REPRO key
+    })
+    assert fs == []
+
+
+def test_r2_file_pragma(tmp_path):
+    fs = _run(tmp_path, **{"repro/core/x.py": (
+        "# gse-lint: disable-file=R2\n"
+        "import os\n"
+        "a = os.environ.get('REPRO_FOO')\n"
+        "b = os.environ.get('REPRO_BAR')\n")})
+    assert fs == []
+
+
+# ---------------------------------------------------------------- R3 ------
+
+_REF = "def covered_ref(x):\n    return x\n"
+_KERN = ("import jax.experimental.pallas as pl\n"
+         "def covered_pallas(x):\n"
+         "    return pl.pallas_call(lambda r: r)(x)\n"
+         "def orphan_pallas(x):\n"
+         "    return pl.pallas_call(lambda r: r)(x)\n")
+
+
+def test_r3_requires_oracle_per_kernel_entry(tmp_path):
+    fs = _run(tmp_path, **{"repro/kernels/ref.py": _REF,
+                           "repro/kernels/k.py": _KERN})
+    assert [f.rule for f in fs] == ["R3"]
+    assert "orphan_pallas" in fs[0].message
+
+
+def test_r3_oracle_suffix_variants_and_scope(tmp_path):
+    fs = _run(tmp_path, **{
+        "repro/kernels/ref.py": ("def a_oracle(x):\n    return x\n"),
+        "repro/kernels/k.py": (
+            "import jax.experimental.pallas as pl\n"
+            "def a_pallas(x):\n"                     # matches a_oracle
+            "    return pl.pallas_call(lambda r: r)(x)\n"),
+        # pallas_call outside kernels/ is out of R3's jurisdiction
+        "repro/core/x.py": (
+            "import jax.experimental.pallas as pl\n"
+            "def rogue(x):\n"
+            "    return pl.pallas_call(lambda r: r)(x)\n"),
+    })
+    assert fs == []
+
+
+# ---------------------------------------------------------------- R4 ------
+
+def test_r4_flags_word_shifts_and_plane_astype(tmp_path):
+    fs = _run(tmp_path, **{"repro/core/x.py": (
+        "def f(words, t):\n"
+        "    lo = words >> 5\n"
+        "    hi = words << 2\n"
+        "    m = t.mantissa_words.astype('float32')\n"
+        "    return lo, hi, m\n")})
+    assert [f.rule for f in fs] == ["R4", "R4", "R4"]
+
+
+def test_r4_blessed_unpack_bodies_and_nonword_shifts(tmp_path):
+    fs = _run(tmp_path, **{
+        "repro/core/gse.py": (
+            "def unpack(words):\n"
+            "    return words >> 5\n"),              # the shared body
+        "repro/core/x.py": (
+            "def f(qmax, bits):\n"
+            "    return qmax << bits\n"),            # not word data
+    })
+    assert fs == []
+
+
+# ----------------------------------------------------------- baseline -----
+
+def test_baseline_suppression_roundtrip(tmp_path):
+    files = {"repro/core/x.py": (
+        "import jax.numpy as jnp\n"
+        "def f(e):\n"
+        "    return jnp.exp2(e)\n")}
+    root = _tree(tmp_path / "t", files)
+    findings = lint.lint_paths([root], root)
+    assert _rules(findings) == ["R1"]
+
+    bl = tmp_path / "baseline.json"
+    lint.write_baseline(bl, findings)
+    fresh, grandfathered = lint.split_baselined(
+        findings, lint.load_baseline(bl))
+    assert fresh == [] and len(grandfathered) == 1
+
+    # the fingerprint is line-number free: shifting the def down two
+    # lines must not resurface the finding...
+    root2 = _tree(tmp_path / "t2", {"repro/core/x.py": (
+        "import jax.numpy as jnp\n\n\n"
+        "def f(e):\n"
+        "    return jnp.exp2(e)\n")})
+    fresh2, _ = lint.split_baselined(
+        lint.lint_paths([root2], root2), lint.load_baseline(bl))
+    assert fresh2 == []
+    # ...but a *new* violation in the same file is still fresh
+    root3 = _tree(tmp_path / "t3", {"repro/core/x.py": (
+        "import jax.numpy as jnp\n"
+        "def f(e):\n"
+        "    return jnp.exp2(e)\n"
+        "def g(e):\n"
+        "    return jnp.log2(e)\n")})
+    fresh3, _ = lint.split_baselined(
+        lint.lint_paths([root3], root3), lint.load_baseline(bl))
+    assert len(fresh3) == 1 and "log2" in fresh3[0].code
+
+
+def test_cli_json_report_and_exit_codes(tmp_path, capsys):
+    root = _tree(tmp_path, {"repro/core/x.py": (
+        "import jax.numpy as jnp\n"
+        "def f(e):\n"
+        "    return jnp.exp2(e)\n")})
+    out = tmp_path / "report.json"
+    bl = tmp_path / "baseline.json"
+    rc = lint.main([str(root), "--root", str(root), "--baseline", str(bl),
+                    "--json", str(out)])
+    assert rc == 1
+    report = json.loads(out.read_text())
+    assert report["schema"] == lint.REPORT_SCHEMA
+    assert not report["ok"] and len(report["fresh"]) == 1
+    # grandfather it, then the same tree exits clean
+    assert lint.main([str(root), "--root", str(root), "--baseline",
+                      str(bl), "--update-baseline"]) == 0
+    assert lint.main([str(root), "--root", str(root), "--baseline",
+                      str(bl), "--json", str(out)]) == 0
+    assert json.loads(out.read_text())["ok"]
+
+
+# ------------------------------------------------- the real tree ----------
+
+def test_src_tree_clean_against_checked_in_baseline():
+    """Acceptance: zero non-baseline violations on src/ (the two satellite
+    fixes — compression.py exact exponent math, the NF4 knob through the
+    tristate registry — were this gate's first real catches)."""
+    findings = lint.lint_paths([SRC_ROOT], SRC_ROOT)
+    fresh, _ = lint.split_baselined(findings,
+                                    lint.load_baseline(BASELINE))
+    assert fresh == [], "\n".join(f.render() for f in fresh)

@@ -309,6 +309,54 @@ def test_compressed_mean_single_shard_semantics():
                                atol=1e-7)
 
 
+def test_compression_wire_exact_at_power_of_two_amax():
+    """Regression for the jnp.ceil(jnp.log2)/jnp.exp2 shared-exponent math
+    this file's wire format used to rely on: at group amax exactly
+    qmax * 2^e, XLA's log2 approximation could flip the shared exponent by
+    one ulp depending on fusion context, changing the on-wire words
+    between the jitted train step and any eager reference. With
+    ceil_log2/exp2_int the wire is bit-identical under jit fusion."""
+    import numpy as np
+
+    from repro.core.gse import pack_mantissas
+    from repro.distributed.compression import (_group_quantize_shared,
+                                               _local_exponent)
+
+    bits, group, qmax = 8, 32, 127
+
+    def wire(g):
+        """The exact producer compressed_mean puts on the DCI (pmax over a
+        size-1 axis is the identity, so e_star == e_local)."""
+        e = _local_exponent(g, bits, group)
+        m = _group_quantize_shared(g, e, bits, group)
+        return e, pack_mantissas(m.reshape(-1), bits)
+
+    for e_true in (-12, -3, 0, 7):
+        # every group's amax is exactly qmax * 2^e (exact in fp32):
+        # the adversarial point where an inexact log2 flips the exponent
+        amax = np.float32(qmax) * np.float32(2.0) ** e_true
+        g = np.zeros((8, group), np.float32)
+        g[:, 0] = amax
+        g[:, 1] = amax / 2
+        g = jnp.asarray(g.reshape(-1))
+
+        e_eager, w_eager = wire(g)
+        e_jit, w_jit = jax.jit(wire)(g)
+        # the exponent is exactly e_true (ceil_log2(2^e) == e), eagerly
+        # and under jit -- and the packed words match bit for bit
+        np.testing.assert_array_equal(np.asarray(e_eager),
+                                      np.full(8, e_true, np.int8))
+        np.testing.assert_array_equal(np.asarray(e_jit),
+                                      np.asarray(e_eager))
+        np.testing.assert_array_equal(np.asarray(w_jit),
+                                      np.asarray(w_eager))
+        # the amax element quantizes to exactly qmax (no clip, no off-by-
+        # one scale), its half to qmax/2 rounded to nearest-even
+        m = np.asarray(_group_quantize_shared(g, e_jit, bits, group))
+        assert (m[:, 0] == qmax).all()
+        assert (m[:, 1] == round(qmax / 2)).all()
+
+
 def test_error_feedback_reduces_bias():
     """Repeatedly syncing the same gradient with error feedback: the
     accumulated transmitted mass approaches the true value."""

@@ -17,7 +17,7 @@ LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
 # docs/ pages that must be linked from the README
 REQUIRED_FROM_README = ("docs/gse-format.md", "docs/architecture.md",
-                        "docs/benchmarks.md")
+                        "docs/benchmarks.md", "docs/static-analysis.md")
 
 
 def github_slug(heading: str) -> str:

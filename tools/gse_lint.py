@@ -1,0 +1,15 @@
+#!/usr/bin/env python
+"""CI entry point for the GSE parity-contract linter.
+
+Thin wrapper so the gate runs without an installed package:
+inserts ``src/`` on sys.path and delegates to :mod:`repro.analysis.lint`.
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.analysis.lint import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main())
