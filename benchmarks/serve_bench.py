@@ -1,0 +1,198 @@
+"""End-to-end serving throughput: continuous batching (paged packed-KV
+engine, ``repro.serve.scheduler``) vs the static-batch ``greedy_generate``
+baseline, at mixed prompt/output lengths.
+
+The workload is deliberately skewed (each group of ``slots`` requests has
+one long output and several short ones): a static batch decodes every
+group for its longest member, so most lanes idle; the continuous engine
+evicts finished lanes and backfills from the queue. Rows report
+tokens/sec, mean batch occupancy and page-pool utilization; ``--json``
+persists them to ``BENCH_serving.json`` (the serving-side trajectory CI
+uploads beside ``BENCH_kernels.json``). ``--smoke`` shrinks the model and
+workload to a CI-sized CPU pass on the jnp route.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.configs import reduced_config
+from repro.core.policy import QuantPolicy
+from repro.serve import engine as E
+from repro.serve.scheduler import ContinuousBatchingEngine, Request
+
+BENCH_SCHEMA = "repro/serve_bench/v1"
+DEFAULT_JSON = os.path.normpath(
+    os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                 os.pardir, "BENCH_serving.json"))
+
+FP = QuantPolicy(base_w_nf4=False, a_bits=None, w_bits=None, g_bits=None,
+                 adapter_bits=None, fmt="none", rank=8)
+
+
+def write_json(records, path: str, smoke: bool):
+    doc = {"schema": BENCH_SCHEMA, "smoke": bool(smoke),
+           "backend": jax.default_backend(), "rows": records}
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+        f.write("\n")
+    return path
+
+
+def _workload(groups: int, slots: int, long_new: int, short_new: int,
+              long_prompt: int, short_prompt: int, vocab: int):
+    """``groups`` batches of ``slots`` requests, one long per group."""
+    rng = np.random.default_rng(0)
+    reqs = []
+    for g in range(groups):
+        for s in range(slots):
+            long = s == 0
+            t = long_prompt if long else short_prompt
+            reqs.append(Request(
+                uid=g * slots + s,
+                prompt=rng.integers(4, vocab, size=(t,)).astype(np.int32),
+                max_new=long_new if long else short_new))
+    return reqs
+
+
+def _static_run(fz, tr, reqs, slots, gen, kv_bits):
+    """Static batching: groups of ``slots`` in arrival order, prompts
+    right-padded to the group max, every lane decoded for the group's
+    longest request (the idle-lane cost the engine removes). ``gen`` is
+    the shared jit cache (one trace per (max_new, kv_bits))."""
+    outs = {}
+    steps = 0
+    for i in range(0, len(reqs), slots):
+        group = reqs[i:i + slots]
+        tmax = max(len(r.prompt) for r in group)
+        mn = max(r.max_new for r in group)
+        prompts = np.ones((len(group), tmax), np.int32)
+        for j, r in enumerate(group):
+            prompts[j, :len(r.prompt)] = r.prompt
+        toks = gen(mn, kv_bits)(fz, tr, jnp.asarray(prompts))
+        jax.block_until_ready(toks)
+        steps += mn
+        for j, r in enumerate(group):
+            outs[r.uid] = np.asarray(toks[j, :r.max_new])
+    return outs, steps
+
+
+def run(smoke: bool = False, records=None):
+    rows = []
+    if records is None:
+        records = []
+    # serving-sized (not the test-sized reduced config): per-step compute
+    # must dominate dispatch overhead or the comparison measures the
+    # Python loop, not the batching policy
+    import dataclasses
+    cfg = dataclasses.replace(
+        reduced_config("granite_3_2b"), n_layers=4, d_model=256, n_heads=8,
+        n_kv_heads=4, d_ff=768, vocab=512)
+    from repro.models import model as M
+    fz, tr = M.init_model(jax.random.PRNGKey(0), cfg, FP)
+
+    # one long request per group of `slots`: static batching decodes every
+    # group for its longest member while the engine runs the longs from
+    # different groups *concurrently* (groups == slots keeps exactly one
+    # long per lane) and turns the short lanes over
+    slots = 4
+    page = 8
+    if smoke:
+        groups, long_new, short_new = 4, 96, 2
+        long_prompt, short_prompt = 12, 4
+    else:
+        groups, long_new, short_new = 4, 128, 4
+        long_prompt, short_prompt = 16, 8
+    max_pages = -(-(long_prompt + long_new) // page)
+    s_cap = page * max_pages
+    reqs = _workload(groups, slots, long_new, short_new,
+                     long_prompt, short_prompt, cfg.vocab)
+    total_tokens = sum(r.max_new for r in reqs)
+
+    def make_engine(kv_bits):
+        return ContinuousBatchingEngine(
+            fz, tr, cfg, FP, slots=slots, page_size=page,
+            max_pages_per_slot=max_pages, kv_quant_bits=kv_bits)
+
+    from functools import lru_cache
+
+    @lru_cache(maxsize=None)
+    def gen(max_new, kv_bits):
+        return jax.jit(lambda fz, tr, p: E.greedy_generate(
+            fz, tr, p, cfg, FP, max_new=max_new, max_len=s_cap,
+            kv_quant_bits=kv_bits))
+
+    for kv_bits in (None, 8):
+        tag = "fp" if kv_bits is None else f"kv{kv_bits}"
+        # warm both paths (jit caches are process-wide), then time fresh
+        # runs — compile time is not a throughput claim
+        warm = make_engine(kv_bits)
+        for r in reqs[:slots + 1]:
+            warm.submit(r)
+        warm.run()
+        _static_run(fz, tr, reqs[:slots], slots, gen, kv_bits)
+
+        eng = make_engine(kv_bits)
+        for r in reqs:
+            eng.submit(r)
+        t0 = time.perf_counter()
+        cont = eng.run()
+        t_cont = time.perf_counter() - t0
+        summ = eng.summary()
+
+        t0 = time.perf_counter()
+        stat, static_steps = _static_run(fz, tr, reqs, slots, gen, kv_bits)
+        t_stat = time.perf_counter() - t0
+
+        assert set(cont) == set(stat) and len(cont) == len(reqs)
+        tps_c = total_tokens / t_cont
+        tps_s = total_tokens / t_stat
+        util = summ.get("page_utilization")
+        rows.append(csv_row(
+            f"serve/continuous_{tag}", t_cont * 1e6,
+            f"tok/s={tps_c:.1f} occupancy={summ['occupancy']:.2f} "
+            f"speedup={tps_c / tps_s:.2f}x steps={summ['steps']}"))
+        rows.append(csv_row(
+            f"serve/static_{tag}", t_stat * 1e6,
+            f"tok/s={tps_s:.1f} steps={static_steps}"))
+        base = {"requests": len(reqs), "tokens": total_tokens,
+                "kv_bits": kv_bits, "slots": slots,
+                "workload": f"g{groups}long{long_new}short{short_new}"}
+        records.append(dict(base, mode="continuous",
+                            wall_s=round(t_cont, 3),
+                            tokens_per_sec=round(tps_c, 2),
+                            decode_steps=summ["steps"],
+                            occupancy=round(summ["occupancy"], 4),
+                            page_utilization=(round(util, 4)
+                                              if util is not None else None),
+                            speedup_vs_static=round(tps_c / tps_s, 3)))
+        records.append(dict(base, mode="static", wall_s=round(t_stat, 3),
+                            tokens_per_sec=round(tps_s, 2),
+                            decode_steps=static_steps,
+                            occupancy=None, page_utilization=None,
+                            speedup_vs_static=1.0))
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized pass (tiny model/workload, CPU jnp "
+                         "route); also writes the JSON trajectory file")
+    ap.add_argument("--json", nargs="?", const=DEFAULT_JSON, default=None,
+                    metavar="PATH",
+                    help=f"write structured rows (default {DEFAULT_JSON})")
+    args = ap.parse_args()
+    recs = []
+    print("\n".join(run(smoke=args.smoke, records=recs)))
+    json_path = args.json or (DEFAULT_JSON if args.smoke else None)
+    if json_path:
+        print(f"wrote {write_json(recs, json_path, args.smoke)}")

@@ -321,6 +321,43 @@ def lower_attention(int_mac: bool = True) -> str:
             q, kw, ke, vw, ve)
 
 
+# paged decode attention geometry: pool of `pages` physical pages of
+# `page` rows; two sequences, ragged offsets. page == bk so the paged
+# kernel and the jnp fallback tile identically.
+_PAGED = dict(b=2, t=8, h=4, kv=2, d=32, page=64, maxp=2, bits=8)
+
+
+def lower_paged_attention(int_mac: bool = True) -> str:
+    """Paged packed decode attention on the forced kernel route."""
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ops
+    p = _PAGED
+    n_pages = 2 + p["b"] * p["maxp"]          # null + trash + allocated
+    s = p["maxp"] * p["page"]
+    q = jax.random.normal(jax.random.PRNGKey(0), (p["b"], p["t"], p["h"],
+                                                  p["d"]))
+    k = jax.random.normal(jax.random.PRNGKey(1), (p["b"], s, p["kv"],
+                                                  p["d"]))
+    v = jax.random.normal(jax.random.PRNGKey(2), (p["b"], s, p["kv"],
+                                                  p["d"]))
+    kw, ke = ops.quant_pack_kv_rows(k, p["bits"])
+    vw, ve = ops.quant_pack_kv_rows(v, p["bits"])
+
+    def pool(x):                               # rows -> per-page pool
+        xp = x.reshape(p["b"] * p["maxp"], p["page"], *x.shape[2:])
+        return jnp.concatenate([jnp.zeros_like(xp[:2]), xp], axis=0)
+
+    pt = jnp.arange(2, n_pages, dtype=jnp.int32).reshape(p["b"], p["maxp"])
+    off = jnp.asarray([s - p["t"], s - p["t"] - 16], jnp.int32)
+    with _env(REPRO_FAP_ROUTE="kernel", REPRO_INT_MAC=None):
+        return _optimized_hlo(
+            lambda q, kw, ke, vw, ve, pt, off: ops.flash_attention_paged(
+                q, kw, ke, vw, ve, pt, causal=False, q_offset=off,
+                int_mac=int_mac),
+            q, pool(kw), pool(ke), pool(vw), pool(ve), pt, off)
+
+
 def trace_wire_jaxpr(n: int = 256, bits: int = 8, group: int = 32,
                      packed: bool = True):
     """jaxpr of the shard_mapped packed gradient mean on a 1-device mesh."""
@@ -385,6 +422,27 @@ def check_attention() -> dict:
                    "packed decode attention (kernel route, int_mac): score "
                    "dots integer, fp only in the PV GEMM, no fp buffer of "
                    "full KV-cache shape")
+
+
+def check_paged_attention() -> dict:
+    p = _PAGED
+    hlo = lower_paged_attention(int_mac=True)
+    violations = audit_int_route(hlo, fp_ok_minor_dim=p["d"])
+    s = p["maxp"] * p["page"]
+    n_pages = 2 + p["b"] * p["maxp"]
+    # forbid both the full gathered-KV fp buffer (someone dequantized a
+    # sequence's whole page walk) and the full pool-sized fp buffer
+    # (someone dequantized the pool itself)
+    dims = [(p["b"], s, p["kv"], p["d"]),
+            (p["b"] * p["kv"], s, p["d"]),
+            (n_pages, p["page"], p["kv"], p["d"])]
+    flat = {p["b"] * s * p["kv"] * p["d"],
+            n_pages * p["page"] * p["kv"] * p["d"]}
+    violations += audit_no_unpacked_fp(hlo, dims, flat)
+    return _result("paged-attention-int-route", violations,
+                   "paged packed decode attention (kernel route, int_mac, "
+                   "per-sequence offsets): score dots integer, fp only in "
+                   "the PV GEMM, no fp buffer of gathered-KV or pool shape")
 
 
 def check_train_residuals() -> dict:
@@ -508,8 +566,8 @@ def _result(name: str, violations: List[str], detail: str) -> dict:
 
 
 ALL_CHECKS = (check_backward_gemms, check_score_tile, check_attention,
-              check_train_residuals, check_collective_wire,
-              check_guard_coverage)
+              check_paged_attention, check_train_residuals,
+              check_collective_wire, check_guard_coverage)
 
 
 def run_checks(checks=ALL_CHECKS) -> dict:

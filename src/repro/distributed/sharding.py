@@ -62,18 +62,24 @@ class ShardingRules:
     # exponent stream splits word-aligned like opt_state. Weight residuals
     # (qcd_wq) are not annotated (replicated like the adapter weights).
     qcd_residual: AxisSpec = ("pod", "data")
+    # paged packed-KV page pools (repro.serve.paging): the pool's leading
+    # physical-page axis P takes the data-parallel split the planar cache
+    # put on batch — pages are whole rows of word/exponent planes, so any
+    # page-aligned split is valid storage sharding (same self-contained-
+    # word argument as opt_state); the page table itself stays replicated.
+    kv_pages: AxisSpec = ("pod", "data")
 
     @classmethod
     def single_pod(cls):
         return cls(batch=("data",), opt_state=("data",),
-                   qcd_residual=("data",))
+                   qcd_residual=("data",), kv_pages=("data",))
 
     @classmethod
     def fsdp(cls, multi_pod: bool = True):
         """Zero-3-ish: additionally shard weight d_model dims over data."""
         dp = ("pod", "data") if multi_pod else ("data",)
         return cls(batch=dp, w_embed=("data",), opt_state=dp,
-                   qcd_residual=dp)
+                   qcd_residual=dp, kv_pages=dp)
 
 
 @dataclasses.dataclass(frozen=True)

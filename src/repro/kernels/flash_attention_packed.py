@@ -177,12 +177,16 @@ def tail_position_mask(bq: int, tail_len: int, qi, causal: bool,
                        window: int, q_offset, is_global=None):
     """(bq, tail_len) mask for the fp tail rows, which sit at absolute
     positions ``q_offset + arange(tail_len)`` (the current decode step's
-    own tokens). Shared by the kernel and the jnp fallback."""
-    qpos = q_offset + qi * bq + jax.lax.broadcasted_iota(
+    own tokens). Shared by the kernel and the jnp fallback; a per-sequence
+    ``(B,)`` offset broadcasts to a (B, bq, tail_len) mask."""
+    off = jnp.asarray(q_offset)
+    if off.ndim:
+        off = off[..., None, None]
+    qpos = off + qi * bq + jax.lax.broadcasted_iota(
         jnp.int32, (bq, tail_len), 0)
-    tpos = q_offset + jax.lax.broadcasted_iota(
+    tpos = off + jax.lax.broadcasted_iota(
         jnp.int32, (bq, tail_len), 1)
-    mask = jnp.ones((bq, tail_len), jnp.bool_)
+    mask = jnp.ones(qpos.shape, jnp.bool_)
     if causal:
         mask = mask & (tpos <= qpos)
     if window:
@@ -191,18 +195,28 @@ def tail_position_mask(bq: int, tail_len: int, qi, causal: bool,
     return mask
 
 
+def _kv_tile(ref, paged: bool):
+    """One packed K/V tile from its block ref: (1, bk, ·) planar blocks, or
+    (1, page, 1, ·) page blocks (paged grid — the kv-head axis sits after
+    the page-row axis in the pool layout)."""
+    return ref[0][:, 0] if paged else ref[0]
+
+
 def _flash_packed_kernel(qoff_ref, q_ref, kw_ref, ke_ref, vw_ref, ve_ref,
                          *rest, head_dim: int, groups: int, bq: int,
                          bk: int, k_steps: int, tail_len: int, causal: bool,
                          window: int, scale: float, int32_shifts: bool,
-                         int_mac: bool, bits: int):
+                         int_mac: bool, bits: int, paged: bool = False):
     if tail_len:
         kt_ref, vt_ref, o_ref, m_scr, l_scr, acc_scr = rest
     else:
         o_ref, m_scr, l_scr, acc_scr = rest
     qi = pl.program_id(1)
     ki = pl.program_id(2)
-    q_offset = qoff_ref[0]                    # SMEM scalar (traced decode)
+    # SMEM per-sequence offset vector (traced decode): each (b, kv) program
+    # reads its own scalar — the scalar-offset case is the same vector with
+    # one value broadcast, so the kernel body is offset-layout-agnostic
+    q_offset = qoff_ref[pl.program_id(0)]
 
     @pl.when(ki == 0)
     def _init():
@@ -212,27 +226,28 @@ def _flash_packed_kernel(qoff_ref, q_ref, kw_ref, ke_ref, vw_ref, ve_ref,
 
     # tile-local dequant: only this (bk, D) K/V tile ever exists unpacked,
     # and only in VMEM — HBM holds b-bit words + int8 exponents
-    v = dequant_kv_rows(vw_ref[0], ve_ref[0], head_dim,
-                        int32_shifts=int32_shifts)
+    v = dequant_kv_rows(_kv_tile(vw_ref, paged), _kv_tile(ve_ref, paged),
+                        head_dim, int32_shifts=int32_shifts)
     q = q_ref[0].reshape(groups * bq, head_dim).astype(jnp.float32)
     if int_mac:
         # exact tier: quantize q once per tile at the cache's bits/group,
         # keep K as raw int8 mantissas, and run the score GEMM as the
         # forward kernel's group-batched int8 MXU MAC + rank-1 rescale
         # (head_dim is the grouping axis). The V/PV GEMM stays fp32.
-        km = unpack_kv_row_mantissas(kw_ref[0], head_dim,
+        km = unpack_kv_row_mantissas(_kv_tile(kw_ref, paged), head_dim,
                                      int32_shifts=int32_shifts)  # (bk, D)
         g_sz = head_dim // ke_ref.shape[-1]
         qm, qe = quantize_tile(q, bits, g_sz)
         qm8, qe8 = qm.astype(jnp.int8), qe.astype(jnp.int8)
 
         def packed_scores():
-            return gse_score_tile(qm8, qe8, km, ke_ref[0],
+            return gse_score_tile(qm8, qe8, km, _kv_tile(ke_ref, paged),
                                   group=g_sz) * scale
         # tail columns (when present) attend through the dequantized Q(q)
         # in fp32, as their own update — see the int_mac tail branch below
     else:
-        k = dequant_kv_rows(kw_ref[0], ke_ref[0], head_dim,
+        k = dequant_kv_rows(_kv_tile(kw_ref, paged),
+                            _kv_tile(ke_ref, paged), head_dim,
                             int32_shifts=int32_shifts)      # (bk, D) fp32
 
         def packed_scores():
@@ -317,11 +332,13 @@ def flash_attention_packed_pallas(q, k_words, k_exp, v_words, v_exp,
     kv-head); k/v planes (BH|B*Kv, S, W) uint32 + (·, S, G) int8
     (row-planar packed layout) -> same leading layout as q.
 
-    ``q_offset`` may be a python int **or a traced scalar** (the decode
-    scan's ``cache["index"]``): it is threaded into the kernel via scalar
-    prefetch and the position masks read it from SMEM. On the GQA grid the
-    q block walks its whole head group against each packed K/V tile, so
-    every plane row is dequantized once per kv-head (never expanded).
+    ``q_offset`` may be a python int, a traced scalar (the decode scan's
+    ``cache["index"]``), **or a per-row vector** matching q's leading axis
+    (ragged continuous-batching decode — one offset per (b, kv) program):
+    it is threaded into the kernel via scalar prefetch and each program
+    reads its own entry from SMEM. On the GQA grid the q block walks its
+    whole head group against each packed K/V tile, so every plane row is
+    dequantized once per kv-head (never expanded).
     ``k_tail``/``v_tail`` (·, Tt, D) fp rows, when given, are attended
     *after* the packed tiles at positions ``q_offset + arange(Tt)`` while
     packed positions ``>= q_offset`` are masked — the quantize-after-attend
@@ -383,13 +400,140 @@ def flash_attention_packed_pallas(q, k_words, k_exp, v_words, v_exp,
             pltpu.VMEM((groups * bq, d), jnp.float32),
         ],
     )
-    off = jnp.asarray(q_offset, jnp.int32).reshape(1)
+    # scalar offsets broadcast to the per-program vector layout: one SMEM
+    # entry per (b, kv) row, read by program id — one kernel body serves
+    # both the shared-offset and the ragged per-sequence decode
+    off = jnp.broadcast_to(jnp.asarray(q_offset, jnp.int32).reshape(-1),
+                           (bkv,))
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((bkv, groups, t, d), q.dtype),
         interpret=interpret,
     )(off, *operands)
+
+
+# ---------------------------------------------------------------------------
+# Paged variant: the packed planes live in a fixed-size page pool
+# (P, page, Kv, ·) and each sequence's logical KV order is its page-table
+# row. The kernel grid walks logical pages; the K/V block index maps read
+# the page table from SMEM (scalar prefetch) to fetch each sequence's
+# physical page — the pool is never gathered or expanded in HBM.
+# ---------------------------------------------------------------------------
+
+
+def _flash_paged_kernel(pt_ref, qoff_ref, *rest, **kw):
+    """Page-pool kernel body: the page table ref is consumed by the K/V
+    BlockSpec index maps (physical page selection); the softmax body is the
+    planar kernel's, walking logical pages as its KV tiles."""
+    del pt_ref
+    return _flash_packed_kernel(qoff_ref, *rest, paged=True, **kw)
+
+
+def gather_pages(pool, page_table):
+    """Materialize the logical (B, maxp*page, Kv, ·) plane view of a paged
+    pool (P, page, Kv, ·) via the page table (B, maxp). The gather moves
+    **packed** words/exponents only (uint32/int8 — never dequantized fp);
+    the jnp fallback route and the oracles attend this view with the
+    planar tile math."""
+    g = pool[page_table]                      # (B, maxp, page, Kv, ·)
+    return g.reshape(page_table.shape[0], -1, *pool.shape[2:])
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "window", "bq", "interpret",
+                                    "int32_shifts", "int_mac"))
+def flash_attention_paged_pallas(q, k_words, k_exp, v_words, v_exp,
+                                 page_table, q_offset=0,
+                                 causal: bool = True, window: int = 0,
+                                 bq: int = DEFAULT_BQ, k_tail=None,
+                                 v_tail=None, interpret: bool = True,
+                                 int32_shifts: bool = False,
+                                 int_mac: bool = False):
+    """q (BH, T, D) (MHA) or (B*Kv, G, T, D) (GQA, folded by kv-head);
+    K/V pools (P, page, Kv, ·) in the paged row-planar layout
+    (docs/gse-format.md §4: the S axis of the planar planes carved into
+    fixed pages); page_table (B, maxp) int32 of physical page ids ->
+    same leading layout as q.
+
+    Two scalar-prefetch operands ride in SMEM: the page table (the K/V
+    block index maps resolve ``pt[b, j]`` per grid step, so the kernel
+    walks each sequence's pages in logical order without any gather) and
+    the per-sequence ``q_offset`` vector (per-program position masks —
+    lengths are ragged across the batch). The KV tile size is the page
+    size; unallocated logical pages point at the permanent zero page and
+    their columns are masked per-sequence (``kpos < q_offset`` under a
+    tail, causal otherwise) — exact no-ops in the online softmax. Tile
+    dequant, GQA walk, fp tails and ``int_mac`` are the planar kernel's
+    (shared body) — bit-exact vs the gather-then-planar fallback at
+    ``k_chunk == page``.
+    """
+    if q.ndim == 3:                           # MHA layout: group size 1
+        o = flash_attention_paged_pallas(
+            q[:, None], k_words, k_exp, v_words, v_exp, page_table,
+            q_offset=q_offset, causal=causal, window=window, bq=bq,
+            k_tail=k_tail, v_tail=v_tail, interpret=interpret,
+            int32_shifts=int32_shifts, int_mac=int_mac)
+        return o[:, 0]
+    bkv, groups, t, d = q.shape
+    _, page, kv_heads, wpr = k_words.shape
+    gexp = k_exp.shape[-1]
+    nseq, maxp = page_table.shape
+    assert nseq * kv_heads == bkv, (page_table.shape, kv_heads, bkv)
+    assert kv_row_bits(wpr, d) and v_words.shape[-1] == wpr, (
+        "packed row width mismatch", k_words.shape, v_words.shape, d)
+    bq = min(bq, t)
+    assert t % bq == 0, (t, bq)
+    tail_len = 0 if k_tail is None else k_tail.shape[1]
+    grid = (bkv, t // bq, maxp)
+    kernel = functools.partial(
+        _flash_paged_kernel, head_dim=d, groups=groups, bq=bq, bk=page,
+        k_steps=maxp, tail_len=tail_len, causal=causal, window=window,
+        scale=d ** -0.5, int32_shifts=int32_shifts, int_mac=int_mac,
+        bits=kv_row_bits(wpr, d))
+    from jax.experimental.pallas import tpu as pltpu
+
+    def kv_map(b, i, j, pt, off):             # physical page of logical j
+        return (pt[b // kv_heads, j], 0, b % kv_heads, 0)
+
+    in_specs = [
+        pl.BlockSpec((1, groups, bq, d),
+                     lambda b, i, j, pt, off: (b, 0, i, 0)),
+        pl.BlockSpec((1, page, 1, wpr), kv_map),
+        pl.BlockSpec((1, page, 1, gexp), kv_map),
+        pl.BlockSpec((1, page, 1, wpr), kv_map),
+        pl.BlockSpec((1, page, 1, gexp), kv_map),
+    ]
+    operands = [q, k_words, k_exp, v_words, v_exp]
+    if tail_len:
+        in_specs += [
+            pl.BlockSpec((1, tail_len, d),
+                         lambda b, i, j, pt, off: (b, 0, 0)),
+            pl.BlockSpec((1, tail_len, d),
+                         lambda b, i, j, pt, off: (b, 0, 0)),
+        ]
+        operands += [k_tail, v_tail]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, groups, bq, d),
+                               lambda b, i, j, pt, off: (b, 0, i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((groups * bq, 1), jnp.float32),
+            pltpu.VMEM((groups * bq, 1), jnp.float32),
+            pltpu.VMEM((groups * bq, d), jnp.float32),
+        ],
+    )
+    pt = jnp.asarray(page_table, jnp.int32)
+    off = jnp.broadcast_to(jnp.asarray(q_offset, jnp.int32).reshape(-1),
+                           (bkv,))
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bkv, groups, t, d), q.dtype),
+        interpret=interpret,
+    )(pt, off, *operands)
 
 
 # ---------------------------------------------------------------------------
@@ -446,7 +590,10 @@ def flash_attention_packed_jnp(q, k_words, k_exp, v_words, v_exp,
           chunked(v_exp), jnp.arange(nk))
     qg = q.reshape(b, t, kv, g, d).astype(jnp.float32)
     qoff = jnp.asarray(q_offset, jnp.int32)
-    qpos = qoff + jnp.arange(t)
+    # scalar offset -> (T,) positions / 2-D masks; per-sequence (B,) vector
+    # -> (B, T) positions / 3-D masks (ragged batches differ per row)
+    qpos = qoff[..., None] + jnp.arange(t) if qoff.ndim else \
+        qoff + jnp.arange(t)
     has_tail = k_tail is not None
     scale = d ** -0.5
 
@@ -505,7 +652,7 @@ def flash_attention_packed_jnp(q, k_words, k_exp, v_words, v_exp,
         against fp V (B, kc, Kv, D) — the single float sequence shared by
         the packed tiles and the tail, whichever MAC produced the scores."""
         m_prev, l_prev, acc = carry
-        sblk = jnp.where(mask[None, None, None], sblk, NEG_INF)
+        sblk = jnp.where(_bc(mask), sblk, NEG_INF)
         m_new = jnp.maximum(m_prev, jnp.max(sblk, axis=-1))
         p = jnp.exp(sblk - m_new[..., None])
         corr = jnp.exp(m_prev - m_new)
@@ -515,22 +662,29 @@ def flash_attention_packed_jnp(q, k_words, k_exp, v_words, v_exp,
         acc = acc * corr[..., None] + pv
         return (m_new, l_new, acc)
 
+    def _bc(mask):                        # (T,S)->(1,1,1,T,S), (B,T,S)->+kv/g
+        return (mask[None, None, None] if mask.ndim == 2
+                else mask[:, None, None])
+
     def tile_mask(kpos):
         # same structural mask as models.attention.block_mask, plus the
         # ragged-tail validity term (padded rows never win the softmax)
         # and, under a tail, the history term (packed rows at the current
         # step's positions may hold the already-quantized append)
-        mask = jnp.ones((t, kpos.shape[0]), bool)
+        qp = qpos[..., :, None]           # (T,1) or (B,T,1)
+        kp = kpos[None, :]
+        mask = jnp.ones(jnp.broadcast_shapes(qp.shape, kp.shape), bool)
         if causal:
-            mask = mask & (kpos[None, :] <= qpos[:, None])
+            mask = mask & (kp <= qp)
         if window:
-            local = kpos[None, :] > (qpos[:, None] - window)
+            local = kp > (qp - window)
             mask = mask & (local if is_global is None
                            else (local | is_global))
         if ragged:
-            mask = mask & (kpos < s_len)[None, :]
+            mask = mask & (kp < s_len)
         if has_tail:
-            mask = mask & (kpos[None, :] < qoff)
+            mask = mask & (kp < (qoff[..., None, None] if qoff.ndim
+                                 else qoff))
         return mask
 
     def k_step(carry, inp):
@@ -564,7 +718,7 @@ def flash_attention_packed_jnp(q, k_words, k_exp, v_words, v_exp,
                 merged_scores(kwb, keb, k_tail),
                 jnp.concatenate([vblk, v_tail.astype(jnp.float32)], axis=1),
                 jnp.concatenate([tile_mask((nk - 1) * kc + jnp.arange(kc)),
-                                 tmask], axis=1))
+                                 tmask], axis=-1))
     _, l_f, acc = carry
     out = acc / jnp.maximum(l_f, 1e-30)[..., None]
     # (B, KV, G, T, D) -> (B, T, KV, G, D) -> (B, T, H, D)

@@ -301,6 +301,10 @@ def flash_attention_packed(q, k_words, k_exp, v_words, v_exp, *,
     ragged tile lengths run the tile-local jnp fallback, which computes
     the identical float sequence one KV tile at a time.
 
+    ``q_offset`` may be a scalar (all sequences at one position — the
+    static-batch path) or a per-sequence (B,) vector (ragged batches:
+    each row's positions/masks use its own offset on both routes).
+
     ``int_mac=True`` (or REPRO_INT_MAC=1) runs the score GEMM on the
     exact-tier integer path — in-tile q quantization, int8 MACs, rank-1
     rescale — on BOTH routes (same int sequence, kernel == fallback
@@ -329,6 +333,10 @@ def flash_attention_packed(q, k_words, k_exp, v_words, v_exp, *,
         tails = {}
         if k_tail is not None:
             tails = dict(k_tail=fold(k_tail), v_tail=fold(v_tail))
+        # per-sequence (B,) offsets expand to the folded (B*Kv,) layout —
+        # b-major kv-minor, matching the q fold above
+        if getattr(q_offset, "ndim", 0):
+            q_offset = jnp.repeat(jnp.asarray(q_offset, jnp.int32), kv)
         o = fap.flash_attention_packed_pallas(
             qf, fold(k_words), fold(k_exp), fold(v_words), fold(v_exp),
             causal=causal, window=window, q_offset=q_offset, bq=bq, bk=bk,
@@ -340,6 +348,81 @@ def flash_attention_packed(q, k_words, k_exp, v_words, v_exp, *,
         q, k_words, k_exp, v_words, v_exp, causal=causal, window=window,
         q_offset=q_offset, is_global=is_global, k_tail=k_tail,
         v_tail=v_tail, k_chunk=bk, int32_shifts=int32_shift_fallback(),
+        int_mac=int_mac)
+
+
+_LAST_PAGED_ROUTE = ("", "never dispatched")
+
+
+def last_paged_route():
+    """(route, reason) of the most recent flash_attention_paged dispatch —
+    same observability contract as last_fap_route."""
+    return _LAST_PAGED_ROUTE
+
+
+def flash_attention_paged(q, kp_words, kp_exp, vp_words, vp_exp,
+                          page_table, *, causal: bool = True,
+                          window: int = 0, q_offset=0, is_global=None,
+                          k_tail=None, v_tail=None, bq: int = 256,
+                          k_chunk: int | None = None,
+                          int_mac: bool = False):
+    """Paged packed-KV flash attention dispatcher.
+
+    q (B, T, H, D); pools (P, page, Kv, ·) — the row-planar planes carved
+    into fixed pages (docs/gse-format.md §4); page_table (B, maxp) int32
+    physical page ids per logical page. ``q_offset`` is typically a
+    per-sequence (B,) vector (ragged serving batches).
+
+    Kernel route: the page table and offset vector ride as scalar-prefetch
+    SMEM operands; the grid walks each sequence's pages in logical order,
+    fetching pages straight from the pool via the BlockSpec index maps —
+    no gather, no fp materialization. Fallback route: :func:`gather_pages`
+    moves the *packed* words/exponents into the logical (B, maxp·page, ·)
+    planar view and runs the planar jnp path (the bit-exact oracle at
+    ``k_chunk == page``). Routing speaks the same REPRO_FAP_ROUTE knob and
+    eligibility rules as the planar dispatcher.
+    """
+    global _LAST_PAGED_ROUTE
+    b, t, h, d = q.shape
+    _, page, kv, _ = kp_words.shape
+    maxp = page_table.shape[1]
+    int_mac = resolve_int_mac(int_mac)
+    use_kernel, reason = fap_route_decision(
+        t, maxp * page, h, kv, has_is_global=is_global is not None,
+        bq=bq, bk=page)
+    reason += " [int-mac scores]" if int_mac else ""
+    _LAST_PAGED_ROUTE = ("kernel" if use_kernel else "fallback",
+                         "paged: " + reason)
+    _fap_log.debug("flash_attention_paged -> %s (%s)",
+                   _LAST_PAGED_ROUTE[0], reason)
+    if use_kernel:
+        g = h // kv
+
+        def fold(x):                      # (B, Tt, Kv, ·) -> (B*Kv, Tt, ·)
+            return x.transpose(0, 2, 1, 3).reshape(b * kv, x.shape[1], -1)
+        qf = q.reshape(b, t, kv, g, d).transpose(0, 2, 3, 1, 4).reshape(
+            b * kv, g, t, d)
+        tails = {}
+        if k_tail is not None:
+            tails = dict(k_tail=fold(k_tail), v_tail=fold(v_tail))
+        off = jnp.asarray(q_offset, jnp.int32)
+        if off.ndim:                      # (B,) -> folded (B*Kv,)
+            off = jnp.repeat(off, kv)
+        o = fap.flash_attention_paged_pallas(
+            qf, kp_words, kp_exp, vp_words, vp_exp,
+            jnp.asarray(page_table, jnp.int32), q_offset=off,
+            causal=causal, window=window, bq=bq,
+            interpret=not _on_tpu(), int32_shifts=int32_shift_fallback(),
+            int_mac=int_mac, **tails)
+        return o.reshape(b, kv, g, t, d).transpose(0, 3, 1, 2, 4).reshape(
+            b, t, h, d)
+    pt = jnp.asarray(page_table, jnp.int32)
+    return fap.flash_attention_packed_jnp(
+        q, fap.gather_pages(kp_words, pt), fap.gather_pages(kp_exp, pt),
+        fap.gather_pages(vp_words, pt), fap.gather_pages(vp_exp, pt),
+        causal=causal, window=window, q_offset=q_offset,
+        is_global=is_global, k_tail=k_tail, v_tail=v_tail,
+        k_chunk=k_chunk or page, int32_shifts=int32_shift_fallback(),
         int_mac=int_mac)
 
 

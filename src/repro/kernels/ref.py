@@ -373,3 +373,32 @@ def flash_attention_packed_gqa_oracle(q, k_words, k_exp, v_words, v_exp,
         qm, expand(k_words), expand(k_exp), expand(v_words), expand(v_exp),
         causal=causal, window=window, q_offset=q_offset, bq=bq, bk=bk)
     return o.reshape(b, h, t, d).transpose(0, 2, 1, 3)
+
+
+def flash_attention_paged_oracle(q, k_words, k_exp, v_words, v_exp,
+                                 page_table, causal=True, window=0,
+                                 q_offset=0, bq=256):
+    """Gather-then-attend oracle for the paged kernel: resolve each
+    sequence's page-table row with a plain numpy index (straight from the
+    §4 wire spec — physical page ``pt[b, j]`` holds logical rows
+    ``[j*page, (j+1)*page)``), stitch the logical planar view, and replay
+    the **non-paged** GQA oracle per sequence with that row's scalar
+    offset. The paged kernel — which never materializes the gather — must
+    match this bit-exactly.
+
+    q (B, T, H, D); pools (P, page, Kv, ·); page_table (B, maxp) int32."""
+    import numpy as np
+    b = q.shape[0]
+    page = k_words.shape[1]
+    pt = np.asarray(page_table)
+    off = np.broadcast_to(np.asarray(q_offset), (b,))
+    outs = []
+    for i in range(b):
+        def view(pool):           # (P, page, Kv, ·) -> (1, maxp*page, Kv, ·)
+            g = np.asarray(pool)[pt[i]]
+            return jnp.asarray(g.reshape(1, -1, *pool.shape[2:]))
+        outs.append(flash_attention_packed_gqa_oracle(
+            q[i:i + 1], view(k_words), view(k_exp), view(v_words),
+            view(v_exp), causal=causal, window=window,
+            q_offset=int(off[i]), bq=bq, bk=page))
+    return jnp.concatenate(outs, axis=0)

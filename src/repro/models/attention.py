@@ -27,7 +27,9 @@ NEG_INF = -1e30
 class MaskInfo:
     """Structural attention mask. All fields trace-safe.
 
-    q_offset: absolute position of query row 0 (0 train, cache index decode).
+    q_offset: absolute position of query row 0 (0 train, cache index
+              decode) — a scalar shared by the batch or a per-sequence
+              ``(B,)`` vector (ragged continuous-batching decode).
     causal:   static bool.
     window:   static int (0 = none) — sliding window size.
     is_global: traced bool or None — hymba per-layer override of window.
@@ -38,20 +40,38 @@ class MaskInfo:
     is_global: Optional[object] = None
 
 
+def offset_qpos(q_offset, t: int, base=0):
+    """Absolute query positions for a block of ``t`` rows starting at
+    ``base``: (t,) for a scalar offset, (B, t) for a per-sequence
+    vector — every mask consumer broadcasts over whichever it gets."""
+    off = jnp.asarray(q_offset)
+    pos = base + jnp.arange(t)
+    return off[..., None] + pos if off.ndim else off + pos
+
+
 def block_mask(qpos: jax.Array, kpos: jax.Array, info: MaskInfo):
-    """(qc, kc) bool mask for one block, or None if unmasked."""
+    """(qc, kc) — or (B, qc, kc) for per-sequence ``qpos`` — bool mask for
+    one block, or None if unmasked."""
     if not info.causal and not info.window:
         return None
-    m = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    qp = qpos[..., :, None]
+    kp = kpos[None, :]
+    m = jnp.ones(jnp.broadcast_shapes(qp.shape, kp.shape), bool)
     if info.causal:
-        m = m & (kpos[None, :] <= qpos[:, None])
+        m = m & (kp <= qp)
     if info.window:
-        local = kpos[None, :] > (qpos[:, None] - info.window)
+        local = kp > (qp - info.window)
         if info.is_global is not None:
             m = m & (local | info.is_global)
         else:
             m = m & local
     return m
+
+
+def expand_mask(m):
+    """Broadcast a block mask to score rank 5: (qc, kc) -> shared across
+    (B, KV, G); (B, qc, kc) -> per-sequence, shared across (KV, G)."""
+    return m[None, None, None] if m.ndim == 2 else m[:, None, None]
 
 
 def _block_scores(q, k, qpos, kpos, info: MaskInfo, scale):
@@ -63,7 +83,7 @@ def _block_scores(q, k, qpos, kpos, info: MaskInfo, scale):
                    preferred_element_type=jnp.float32) * scale
     m = block_mask(qpos, kpos, info)
     if m is not None:
-        s = jnp.where(m[None, None, None], s, NEG_INF)
+        s = jnp.where(expand_mask(m), s, NEG_INF)
     return s
 
 
@@ -91,7 +111,7 @@ def flash_attention_ref(q, k, v, info: MaskInfo, *,
 
     def q_step(_, q_in):
         qblk, qi = q_in                               # (B,qc,KV,G,D)
-        qpos = info.q_offset + qi * qc + jnp.arange(qc)
+        qpos = offset_qpos(info.q_offset, qc, qi * qc)
 
         def k_step(carry, k_in):
             kblk, vblk, ki = k_in
@@ -131,11 +151,11 @@ def direct_attention(q, k, v, info: MaskInfo, scale=None):
     qg = q.reshape(b, t, kv, g, d)
     scores = jnp.einsum("btkgd,bskd->bkgts", qg, k,
                         preferred_element_type=jnp.float32) * scale
-    qpos = info.q_offset + jnp.arange(t)
+    qpos = offset_qpos(info.q_offset, t)
     kpos = jnp.arange(s_len)
     m = block_mask(qpos, kpos, info)
     if m is not None:
-        scores = jnp.where(m[None, None, None], scores, NEG_INF)
+        scores = jnp.where(expand_mask(m), scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bkgts,bskd->btkgd", probs.astype(v.dtype), v)
     return out.reshape(b, t, h, d)
@@ -159,7 +179,7 @@ def _flash_fwd_lse(q, k, v, info: MaskInfo, q_chunk: int, k_chunk: int):
 
     def q_step(_, q_in):
         qblk, qi = q_in
-        qpos = info.q_offset + qi * qc + jnp.arange(qc)
+        qpos = offset_qpos(info.q_offset, qc, qi * qc)
 
         def k_step(carry, k_in):
             kblk, vblk, ki = k_in
@@ -223,7 +243,7 @@ def _flash_bwd(info: MaskInfo, q_chunk: int, k_chunk: int, res, do):
         def q_inner(carry, q_in):
             dk_acc, dv_acc = carry
             qblk, doblk, lseblk, dblk, qi = q_in
-            qpos = info.q_offset + qi * qc + jnp.arange(qc)
+            qpos = offset_qpos(info.q_offset, qc, qi * qc)
             sblk = _block_scores(qblk, kblk, qpos, kpos, info, scale)
             p = jnp.exp(sblk - lseblk[..., None])          # (B,KV,G,qc,kc)
             dv_acc = dv_acc + jnp.einsum(
@@ -335,3 +355,24 @@ def packed_attention(q, k_words, k_exp, v_words, v_exp, info: MaskInfo, *,
         window=info.window, q_offset=info.q_offset,
         is_global=info.is_global, k_tail=k_tail, v_tail=v_tail,
         bk=k_chunk)
+
+
+def paged_attention(q, kp_words, kp_exp, vp_words, vp_exp, page_table,
+                    info: MaskInfo, *, k_tail=None, v_tail=None,
+                    k_chunk: int = 512):
+    """Attention against a **paged** packed-KV pool: the row-planar plane
+    layout carved into fixed-size pages (``repro.serve.paging``), with each
+    sequence's logical KV order given by its ``page_table`` row. The
+    continuous-batching decode call path — ``info.q_offset`` is the
+    per-sequence ``(B,)`` length vector; routing (page-walking kernel vs
+    gather + packed fallback) is ``repro.kernels.ops``'s job.
+
+    q (B, T, H, D); pools (P, page, Kv, ·); page_table (B, maxp) int32
+    -> (B, T, H, D).
+    """
+    from repro.kernels.ops import flash_attention_paged
+    return flash_attention_paged(
+        q, kp_words, kp_exp, vp_words, vp_exp, page_table,
+        causal=info.causal, window=info.window, q_offset=info.q_offset,
+        is_global=info.is_global, k_tail=k_tail, v_tail=v_tail,
+        k_chunk=k_chunk)

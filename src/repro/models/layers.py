@@ -129,6 +129,22 @@ def _project_qkv(fz, tr, x, cfg: ModelConfig, policy):
     return q, k, v
 
 
+def _kv_write(buf, rows, pos):
+    """Write ``rows`` (B, t, ...) into the sequence axis of ``buf``
+    (B, S, ...) at ``pos`` — a shared scalar index (one dynamic update
+    slice, the static-batch path) or a per-sequence (B,) vector (vmapped
+    per-row writes: ragged serving batches land each row at its own
+    offset)."""
+    pos = jnp.asarray(pos)
+    if pos.ndim == 0:
+        return jax.lax.dynamic_update_slice(
+            buf, rows.astype(buf.dtype), (0, pos) + (0,) * (buf.ndim - 2))
+    return jax.vmap(
+        lambda bb, rr, pp: jax.lax.dynamic_update_slice(
+            bb, rr.astype(bb.dtype), (pp,) + (0,) * (bb.ndim - 1))
+    )(buf, rows, pos)
+
+
 def attn_apply(fz, tr, x, cfg: ModelConfig, policy: QuantPolicy, *,
                positions: jax.Array, mask_info,
                layer_cache: Optional[dict] = None,
@@ -136,11 +152,15 @@ def attn_apply(fz, tr, x, cfg: ModelConfig, policy: QuantPolicy, *,
                use_rope: bool = True) -> Tuple[jax.Array, Optional[dict]]:
     """Self-attention. ``mask_info`` is an attention.MaskInfo (structural
     mask — no (T,S) materialization). ``layer_cache`` (decode): dict with
-    k/v (B,S,Kv,D) and index scalar — or the **packed** planes
-    ``k_words``/``k_exp``/``v_words``/``v_exp`` (row-planar GSE storage),
-    in which case the new token is quantized+packed and written in place
-    and attention runs fused over the packed cache (the cache is never
-    materialized unpacked). Returns updated cache."""
+    k/v (B,S,Kv,D) and index (scalar or per-sequence (B,) vector) — or the
+    **packed** planes ``k_words``/``k_exp``/``v_words``/``v_exp``
+    (row-planar GSE storage), in which case the new token is
+    quantized+packed and written in place and attention runs fused over
+    the packed cache (the cache is never materialized unpacked) — or the
+    **paged** pool planes ``kp_words``/``kp_exp``/``vp_words``/``vp_exp``
+    + ``pages`` (continuous-batching serving: writes resolve through the
+    page table; attention walks each sequence's pages). Returns updated
+    cache."""
     from repro.models.attention import attention, packed_attention
     b, t, _ = x.shape
     q, k, v = _project_qkv(fz, tr, x, cfg, policy)
@@ -148,7 +168,43 @@ def attn_apply(fz, tr, x, cfg: ModelConfig, policy: QuantPolicy, *,
         q = apply_rope(q, positions, cfg.rope_theta)
         k = apply_rope(k, positions, cfg.rope_theta)
     new_cache = None
-    if layer_cache is not None and "k_words" in layer_cache:
+    if layer_cache is not None and "kp_words" in layer_cache:
+        from repro.kernels.ops import quant_pack_kv_rows
+        from repro.kernels.flash_attention_packed import kv_row_bits
+        from repro.models.attention import paged_attention
+        # paged serving path: packed planes live in a page pool
+        # (P, page, Kv, ·); this step's logical position resolves through
+        # the slot's page-table row to a (physical page, in-page slot)
+        # write. Inactive batch rows have every logical page pointed at
+        # the trash page, so their stale (still-advancing, clip-indexed)
+        # writes never touch allocated pages.
+        assert t == 1, "paged cache writes are decode-only (t == 1)"
+        kpw, kpe = layer_cache["kp_words"], layer_cache["kp_exp"]
+        vpw, vpe = layer_cache["vp_words"], layer_cache["vp_exp"]
+        pages = layer_cache["pages"]                    # (B, maxp) int32
+        idx = jnp.asarray(layer_cache["index"], jnp.int32)  # (B,)
+        d = cfg.resolved_head_dim
+        page = kpw.shape[1]
+        bits = kv_row_bits(kpw.shape[-1], d)
+        group = d // kpe.shape[-1]
+        nkw, nke = quant_pack_kv_rows(k, bits, group)   # (B, 1, Kv, ·)
+        nvw, nve = quant_pack_kv_rows(v, bits, group)
+        lp = jnp.minimum(idx // page, pages.shape[1] - 1)
+        slot = idx % page
+        phys = jnp.take_along_axis(pages, lp[:, None], axis=1)[:, 0]
+
+        def wr(pool, rows):
+            return pool.at[phys, slot].set(rows[:, 0])
+        kpw, kpe = wr(kpw, nkw), wr(kpe, nke)
+        vpw, vpe = wr(vpw, nvw), wr(vpe, nve)
+        new_cache = dict(layer_cache, kp_words=kpw, kp_exp=kpe,
+                         vp_words=vpw, vp_exp=vpe, index=idx + t)
+        # quantize-after-attend, exactly as on the planar packed path: the
+        # pool stores the quantized rows; the current token rides the fp
+        # tail (packed positions >= each row's offset are masked)
+        o = paged_attention(q, kpw, kpe, vpw, vpe, pages, mask_info,
+                            k_tail=k, v_tail=v, k_chunk=cfg.attn_k_chunk)
+    elif layer_cache is not None and "k_words" in layer_cache:
         from repro.kernels.ops import quant_pack_kv_rows
         kw, ke = layer_cache["k_words"], layer_cache["k_exp"]
         vw, ve = layer_cache["v_words"], layer_cache["v_exp"]
@@ -162,11 +218,10 @@ def attn_apply(fz, tr, x, cfg: ModelConfig, policy: QuantPolicy, *,
         nkw, nke = quant_pack_kv_rows(k, bits, group)
         nvw, nve = quant_pack_kv_rows(v, bits, group)
         write = (idx % kw.shape[1]) if ring_buffer else idx
-        at = (0, write, 0, 0)
-        kw = jax.lax.dynamic_update_slice(kw, nkw, at)
-        ke = jax.lax.dynamic_update_slice(ke, nke, at)
-        vw = jax.lax.dynamic_update_slice(vw, nvw, at)
-        ve = jax.lax.dynamic_update_slice(ve, nve, at)
+        kw = _kv_write(kw, nkw, write)
+        ke = _kv_write(ke, nke, write)
+        vw = _kv_write(vw, nvw, write)
+        ve = _kv_write(ve, nve, write)
         new_cache = dict(layer_cache, k_words=kw, k_exp=ke, v_words=vw,
                          v_exp=ve, index=idx + t)
         # quantize-after-attend: the cache stores the quantized rows, but
@@ -186,10 +241,8 @@ def attn_apply(fz, tr, x, cfg: ModelConfig, policy: QuantPolicy, *,
                            layer_cache["index"])
             s_max = ck.shape[1]
             write = (idx % s_max) if ring_buffer else idx
-            ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
-                                              (0, write, 0, 0))
-            cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
-                                              (0, write, 0, 0))
+            ck = _kv_write(ck, k, write)
+            cv = _kv_write(cv, v, write)
             k, v = ck, cv
             new_cache = dict(layer_cache, k=ck, v=cv, index=idx + t)
         o = attention(q, k, v, mask_info,

@@ -29,9 +29,12 @@ from repro.models.attention import MaskInfo
 _MASK_BIDIR = MaskInfo(causal=False)
 
 # per-layer cache keys owned by the attention mixer: unpacked k/v or the
-# row-planar packed planes (packed decode path), plus the write index
+# row-planar packed planes (packed decode path), the paged page-pool
+# planes + page table (continuous-batching serving path), plus the write
+# index
 _ATTN_CACHE_KEYS = ("k", "v", "index", "k_words", "k_exp", "v_words",
-                    "v_exp")
+                    "v_exp", "kp_words", "kp_exp", "vp_words", "vp_exp",
+                    "pages")
 
 
 def _attn_cache_view(layer_cache):
@@ -137,15 +140,19 @@ def _block_apply(fz, tr, x, cfg: ModelConfig, policy: QuantPolicy, *,
     h = L.norm_apply(cfg, fz["ln1"], x)
     t = x.shape[1]
     if layer_cache is not None and ("k" in layer_cache
-                                    or "k_words" in layer_cache):
-        # Decode/prefill: positions and mask derive from the cache index.
-        idx = layer_cache["index"]
-        qpos = idx + jnp.arange(t)
+                                    or "k_words" in layer_cache
+                                    or "kp_words" in layer_cache):
+        # Decode/prefill: positions and mask derive from the cache index —
+        # a shared scalar (static batches) or a per-sequence (B,) vector
+        # (ragged serving batches: each row's RoPE/mask use its own offset).
+        idx = jnp.asarray(layer_cache["index"], jnp.int32)
+        qpos = idx[..., None] + jnp.arange(t)    # (1, T) or (B, T)
         mask_info = MaskInfo(q_offset=idx, causal=True,
                              window=cfg.sliding_window or 0,
                              is_global=is_global if cfg.sliding_window
                              else None)
-        positions = jnp.broadcast_to(qpos[None], (x.shape[0], t))
+        positions = jnp.broadcast_to(qpos if qpos.ndim == 2 else qpos[None],
+                                     (x.shape[0], t))
     elif mask_info is None:
         mask_info = MaskInfo(q_offset=0, causal=cfg.causal,
                              window=cfg.sliding_window or 0,
@@ -256,12 +263,17 @@ def embed_inputs(fz, batch, cfg: ModelConfig, pos_offset=0):
         x = fz["embed"][tok]
     if cfg.family == "encdec":                   # whisper: sinusoidal pos
         t = x.shape[1]
-        pos = jnp.arange(t) + pos_offset
+        off = jnp.asarray(pos_offset)
+        # scalar offset -> shared (T,) positions; per-sequence (B,) vector
+        # -> per-row (B, T) positions (ragged decode batches)
+        pos = off[..., None] + jnp.arange(t) if off.ndim \
+            else jnp.arange(t) + off
         d = cfg.d_model
         dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
-        ang = pos.astype(jnp.float32)[:, None] / jnp.power(10000.0, dim / d)
+        ang = pos.astype(jnp.float32)[..., :, None] / jnp.power(10000.0,
+                                                                dim / d)
         pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
-        x = x + pe.astype(x.dtype)[None]
+        x = x + (pe if pe.ndim == 3 else pe[None]).astype(x.dtype)
     return shard(x, "batch", None, "embed")
 
 

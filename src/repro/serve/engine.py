@@ -32,6 +32,7 @@ once and agree token-for-token.
 """
 from __future__ import annotations
 
+import dataclasses as _dc
 from functools import partial
 from typing import Optional
 
@@ -46,12 +47,13 @@ from repro.kernels.ops import gse_quantize_pack
 from repro.models.config import ModelConfig
 from repro.models import model as M
 from repro.models import ssm as S
-from repro.distributed.sharding import current_ctx, resolve_pspec
+from repro.distributed.sharding import (ShardingRules, current_ctx,
+                                        resolve_pspec)
 
 _PACKED_KV_KEYS = ("k", "v", "ck", "cv")
 
 
-def kv_cache_pspec(mesh, rules, batch: int, kv_heads: int,
+def kv_cache_pspec(mesh, rules: ShardingRules, batch: int, kv_heads: int,
                    seq_len: int = 0):
     """(L, B, S, Kv, D) spec: kv on model when divisible, else the sequence
     axis goes on model (long-context GQA caches). All axes divisibility-
@@ -62,8 +64,6 @@ def kv_cache_pspec(mesh, rules, batch: int, kv_heads: int,
                              (None, "batch", None, "kv_heads", None),
                              mesh, rules)
     # fall back: shard sequence over model
-    import dataclasses as _dc
-    from repro.distributed.sharding import ShardingRules
     seq_rules = _dc.replace(rules, seq="model")
     return resolve_pspec((1, batch, max(seq_len, 1), kv_heads, 1),
                          (None, "batch", "seq", None, None),
@@ -79,7 +79,10 @@ def init_decode_cache(cfg: ModelConfig, batch: int, max_len: int,
         kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
         cache["k"] = jnp.zeros((l, batch, max_len, kv, hd), dtype)
         cache["v"] = jnp.zeros((l, batch, max_len, kv, hd), dtype)
-        cache["index"] = jnp.zeros((l,), jnp.int32)
+        # per-sequence write index: (L, B) so ragged batches decode with
+        # per-row RoPE positions and masks (every row of a static batch
+        # just advances in lockstep)
+        cache["index"] = jnp.zeros((l, batch), jnp.int32)
     if cfg.uses_ssm:
         sc = S.ssm_cache_init(cfg, batch, l, jnp.float32)
         cache["state"] = sc["state"]
@@ -251,6 +254,7 @@ def decode_step(fz, tr, tokens, cache, cfg: ModelConfig,
     """One autoregressive step. tokens: (B, 1) int32. Returns
     (logits (B, Vp), new_cache). This is the function the decode_* dry-run
     cells lower."""
+    # (L, B) index -> this step's per-sequence (B,) position offsets
     offset = cache["index"][0] if "index" in cache else 0
     x = M.embed_inputs(fz, {"tokens": tokens}, cfg, pos_offset=offset)
     if cfg.is_encoder_decoder:

@@ -1,0 +1,191 @@
+"""Paged packed-KV storage: fixed-size pages of row-planar planes.
+
+The row-planar plane layout (docs/gse-format.md §4) stores one
+independently writable word/exponent row per (token, kv-head). This module
+carves that S axis into fixed pages: a **page pool** holds ``n_pages``
+pages of ``page_size`` rows each — per layer ``kp_words``/``vp_words``
+(P, page, Kv, ceil(D/32)·bits) uint32 and ``kp_exp``/``vp_exp``
+(P, page, Kv, D/g) int8, stacked to a leading L axis so the decoder scan
+carries them — and each sequence's logical KV order is its row of a
+``(B, max_pages)`` int32 **page table**: physical page ``table[b, j]``
+holds the sequence's rows ``[j·page, (j+1)·page)``.
+
+Two page ids are reserved and never allocated:
+
+* ``NULL_PAGE`` (0) — the permanent zero page. Every row holds the packed
+  pattern of a **quantized zero** (offset-binary mantissa fields are
+  ``m + qmax``, so an all-zero word would dequantize to ``-qmax``, not
+  0.0 — the pool must be seeded with the real packed-zero pattern).
+  Active sequences point unallocated logical pages here; those columns
+  dequantize to exactly 0.0 and sit behind the per-sequence length mask.
+* ``TRASH_PAGE`` (1) — the write sink for inactive batch slots. A freed
+  slot keeps riding the batched decode step, and its (stale, still
+  advancing) appends must never touch a page that has been recycled to
+  another sequence: eviction retargets the slot's whole page-table row at
+  the trash page, so every subsequent write lands there.
+
+Allocatable physical pages are ``[FIRST_PAGE, n_pages)``; the host-side
+:class:`PageAllocator` hands them out (admission) and takes them back
+(eviction) — ``alloc`` returning ``None`` is the admission-backpressure
+signal the scheduler waits on.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import List, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.gse import DEFAULT_GROUP
+from repro.models.config import ModelConfig
+
+NULL_PAGE = 0
+TRASH_PAGE = 1
+FIRST_PAGE = 2
+
+
+class PageAllocator:
+    """Host-side free-list allocator over the pool's physical page ids.
+
+    FIFO recycling (freed pages go to the back of the queue) so tests and
+    serving runs actually revisit recycled pages instead of ping-ponging
+    the same few ids. ``alloc`` is all-or-nothing: a request either gets
+    its whole page span or ``None`` (admission backpressure) — no partial
+    reservations to leak."""
+
+    def __init__(self, n_pages: int, page_size: int):
+        if n_pages < FIRST_PAGE + 1:
+            raise ValueError(f"pool needs > {FIRST_PAGE} pages, "
+                             f"got {n_pages}")
+        self.n_pages = n_pages
+        self.page_size = page_size
+        self._free = deque(range(FIRST_PAGE, n_pages))
+        self._allocated: set = set()
+
+    @property
+    def n_allocatable(self) -> int:
+        return self.n_pages - FIRST_PAGE
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def utilization(self) -> float:
+        """Allocated fraction of the allocatable pool — the page-pool
+        utilization metric the serving benchmark reports."""
+        return len(self._allocated) / max(self.n_allocatable, 1)
+
+    def pages_for(self, n_rows: int) -> int:
+        """Pages needed to hold ``n_rows`` KV rows."""
+        return -(-n_rows // self.page_size)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """Pop ``n`` pages, or ``None`` if the pool can't cover them."""
+        if n > len(self._free):
+            return None
+        pages = [self._free.popleft() for _ in range(n)]
+        self._allocated.update(pages)
+        return pages
+
+    def free(self, pages: Sequence[int]) -> None:
+        for p in pages:
+            if p not in self._allocated:
+                raise ValueError(f"double free / foreign page {p}")
+            self._allocated.discard(p)
+            self._free.append(p)
+
+
+def packed_zero_rows(cfg: ModelConfig, bits: int,
+                     group: int = DEFAULT_GROUP):
+    """The packed pattern of one quantized-zero KV row: (Kv, W) uint32
+    words + (Kv, G) int8 exponents (EXP_MIN). This — not zero words — is
+    what every pool page must be seeded with (offset-binary fields)."""
+    from repro.kernels.ops import quant_pack_kv_rows
+    from repro.serve.engine import _kv_pack_group
+    kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    g = _kv_pack_group(hd, group)
+    zw, ze = quant_pack_kv_rows(jnp.zeros((1, 1, kv, hd)), bits, g)
+    return zw[0, 0], ze[0, 0]
+
+
+def init_paged_cache(cfg: ModelConfig, batch: int, n_pages: int,
+                     page_size: int, max_pages: int, bits: int,
+                     group: int = DEFAULT_GROUP) -> dict:
+    """Zeroed paged decode cache for ``batch`` serving slots.
+
+    Pools (L, P, page, Kv, ·) seeded with the packed-zero pattern on every
+    page; page table (L, B, max_pages) — every slot starts inactive, its
+    whole row on the trash page; index (L, B) zeros. The page table is
+    identical across layers (one allocator feeds all layers); it is
+    stacked to (L, ...) purely so the decoder scan can carry it per layer.
+    """
+    l = cfg.n_layers
+    kv = cfg.n_kv_heads
+    zw, ze = packed_zero_rows(cfg, bits, group)
+    words = jnp.broadcast_to(zw, (l, n_pages, page_size) + zw.shape)
+    exps = jnp.broadcast_to(ze, (l, n_pages, page_size) + ze.shape)
+    assert words.shape[3] == kv
+    return {
+        "kp_words": jnp.array(words), "kp_exp": jnp.array(exps),
+        "vp_words": jnp.array(words), "vp_exp": jnp.array(exps),
+        "pages": jnp.full((l, batch, max_pages), TRASH_PAGE, jnp.int32),
+        "index": jnp.zeros((l, batch), jnp.int32),
+    }
+
+
+def slot_page_row(phys_pages: Sequence[int], max_pages: int) -> np.ndarray:
+    """Page-table row of an **active** slot: its allocated span, then the
+    null page (reads dequantize to 0.0 behind the length mask; active
+    slots never write past their span)."""
+    row = np.full((max_pages,), NULL_PAGE, np.int32)
+    row[:len(phys_pages)] = np.asarray(phys_pages, np.int32)
+    return row
+
+
+def trash_page_row(max_pages: int) -> np.ndarray:
+    """Page-table row of an **inactive** slot: everything at the trash
+    page, so stale clip-indexed writes land there and nowhere else."""
+    return np.full((max_pages,), TRASH_PAGE, np.int32)
+
+
+def scatter_prefill_pages(cache: dict, planar: dict,
+                          phys_pages: Sequence[int]) -> dict:
+    """Move one prefilled sequence's planar packed planes into its
+    allocated pool pages.
+
+    ``planar``: the ``k_words``/``k_exp``/``v_words``/``v_exp`` leaves of
+    :func:`repro.serve.engine.pack_decode_cache_planar` for a batch-1
+    temp cache, (L, 1, S, Kv, ·) with ``S >= len(phys_pages) · page``.
+    Each allocated page is overwritten **in full** (beyond-prompt rows of
+    the temp cache are quantized zeros), so recycled pages never leak a
+    previous occupant's rows. Returns the cache with updated pools.
+    Traceable: ``phys_pages`` may be a (n,) int array inside jit."""
+    page = cache["kp_words"].shape[2]
+    ids = jnp.asarray(phys_pages, jnp.int32)
+    n = int(ids.shape[0])
+    out = dict(cache)
+    for pool_key, planar_key in (("kp_words", "k_words"),
+                                 ("kp_exp", "k_exp"),
+                                 ("vp_words", "v_words"),
+                                 ("vp_exp", "v_exp")):
+        x = planar[planar_key][:, 0]            # (L, S, Kv, ·)
+        l = x.shape[0]
+        rows = x[:, :n * page].reshape(l, n, page, *x.shape[2:])
+        out[pool_key] = cache[pool_key].at[:, ids].set(rows)
+    return out
+
+
+def page_pool_pspec(mesh, rules, kv_heads: int, n_pages: int):
+    """(L, P, page, Kv, ·) partition spec for the pool planes: the
+    physical-page axis takes the ``kv_pages`` rule (the data split the
+    planar cache put on batch), kv-heads on model when divisible — word
+    planes shard exactly like the planar cache's. The page table stays
+    replicated (every shard resolves the same logical walk)."""
+    from repro.distributed.sharding import resolve_pspec
+    model_size = mesh.shape.get("model", 1)
+    kv_ax = "kv_heads" if (model_size > 1 and kv_heads % model_size == 0) \
+        else None
+    return resolve_pspec((1, n_pages, 1, kv_heads, 1),
+                         (None, "kv_pages", None, kv_ax, None),
+                         mesh, rules)

@@ -1,0 +1,371 @@
+"""Continuous-batching scheduler over the paged packed-KV pool.
+
+The engine keeps a fixed batch of ``slots`` decode lanes stepping together
+through the jitted :func:`repro.serve.engine.decode_step` (one trace, one
+executable — batch shape never changes) while requests of ragged
+prompt/output lengths flow through the lanes:
+
+* **admission**: a pending request takes a free slot when the
+  :class:`~repro.serve.paging.PageAllocator` can cover its page span
+  (``alloc`` returning ``None`` is backpressure — the request waits for
+  evictions). The prompt prefits **solo** in a batch-1 temp cache, packs
+  to planar planes, and scatters whole pages into the pool; the slot's
+  page-table row and per-sequence index are set host-side.
+* **decode**: every step runs all slots; per-request sampling params
+  (greedy / temperature / top-k, seeded per request+step) pick each lane's
+  next token; per-request stop tokens and ``max_new`` finish lanes
+  independently.
+* **eviction**: a finished lane's pages go back to the free list and its
+  page-table row retargets the trash page, so the lane keeps stepping
+  harmlessly (stale writes land in the trash) until a new request takes
+  it over.
+
+With ``kv_quant_bits=None`` the same loop runs over the contiguous fp
+cache (no pages — eviction just frees the slot): the per-sequence offset
+vector path of ``decode_step`` is what makes the ragged batch correct.
+
+Token identity: a request decoded through this engine — admitted and
+evicted mid-flight, its pages recycled from earlier requests — produces
+exactly the tokens of its solo :func:`~repro.serve.engine.greedy_generate`
+run at cache length ``page_size · max_pages_per_slot`` (asserted in
+tests/test_serve_continuous.py): prefill quantization, in-place appends,
+tile boundaries and masked-tile no-ops are all bit-identical.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from collections import deque
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.gse import DEFAULT_GROUP
+from repro.core.policy import QuantPolicy
+from repro.models.config import ModelConfig
+from repro.serve import engine as E
+from repro.serve import paging
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling: ``temperature <= 0`` is greedy; ``top_k > 0``
+    restricts sampling to the k highest logits; ``seed`` decorrelates
+    requests (each step reseeds deterministically from request uid, step
+    and this seed)."""
+    temperature: float = 0.0
+    top_k: int = 0
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray                       # (T,) int32 token ids
+    max_new: int
+    sampling: SamplingParams = dataclasses.field(default_factory=SamplingParams)
+    stop_token: Optional[int] = None
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: Request
+    out: List[int]
+    pages: List[int]
+    steps: int = 0
+
+
+# ---------------------------------------------------------------------------
+# Shared jitted programs. These live at module scope (keyed on the hashable
+# cfg/policy/bits) so every engine instance over the same model reuses one
+# compiled executable — a fresh engine must not recompile. Two dispatch
+# shapes cover the whole serving loop:
+#
+# * **decode block**: ``k`` decode+sample steps fused in one ``lax.scan``
+#   dispatch (multi-step scheduling). The scheduler only needs to run
+#   host-side logic when a lane can finish or a slot can turn over, and
+#   ``k = min(remaining)`` over active lanes guarantees neither happens
+#   mid-block — so sampled tokens feed back device-side and the KV cache
+#   stays in-place for the whole block (the cache argument is donated).
+#   ``k`` is rounded down to a power of two to bound retraces.
+# * **admission**: prefill + planar pack + page scatter + index write +
+#   first-token sample, one dispatch per admitted request.
+# ---------------------------------------------------------------------------
+
+def _sample_rows(logits, temps, topks, seeds):
+    """Per-row sampling: greedy when ``temps[i] <= 0``, else temperature
+    (+ optional top-k) categorical seeded per row."""
+    v = logits.shape[-1]
+
+    def one(lg, tmp, k, seed):
+        scaled = lg / jnp.maximum(tmp, 1e-6)
+        kk = jnp.where(k > 0, jnp.minimum(k, v), v)
+        cut = jnp.sort(scaled)[v - kk]
+        masked = jnp.where(scaled >= cut, scaled, -jnp.inf)
+        samp = jax.random.categorical(jax.random.PRNGKey(seed), masked)
+        return jnp.where(tmp <= 0.0, jnp.argmax(lg, -1),
+                         samp).astype(jnp.int32)
+    return jax.vmap(one)(logits, temps, topks, seeds)
+
+
+@functools.lru_cache(maxsize=None)
+def _decode_block_fn(cfg: ModelConfig, policy: QuantPolicy):
+    """(fz, tr, tok (B,1), cache, temps (B,), topks (B,), seeds (k, B))
+    -> (tokens (k, B), cache). One trace per block length k."""
+    def f(fz, tr, tok, cache, temps, topks, seeds):
+        def body(carry, seed_row):
+            tok, cache = carry
+            logits, cache = E.decode_step(fz, tr, tok, cache, cfg, policy)
+            nt = _sample_rows(logits, temps, topks, seed_row)
+            return (nt[:, None], cache), nt
+        (_, cache), toks = jax.lax.scan(body, (tok, cache), seeds)
+        return toks, cache
+    return jax.jit(f, donate_argnums=(3,))
+
+
+@functools.lru_cache(maxsize=None)
+def _admit_packed_fn(cfg: ModelConfig, policy: QuantPolicy, bits: int,
+                     group: int, s_cap: int):
+    """Whole packed admission in one dispatch: solo prefill at the full
+    slot capacity, planar pack, full-page scatter into the pool, slot
+    index write, first-token sample."""
+    def f(fz, tr, prompt, cache, ids, slot, temps, topks, seeds):
+        tmp = E.init_decode_cache(cfg, 1, s_cap)
+        logits, tmp = E.prefill(fz, tr, {"tokens": prompt}, tmp, cfg,
+                                policy)
+        planar = E.pack_decode_cache_planar(tmp, bits, group)
+        out = paging.scatter_prefill_pages(cache, planar, ids)
+        out["index"] = out["index"].at[:, slot].set(prompt.shape[1])
+        return _sample_rows(logits, temps, topks, seeds), out
+    return jax.jit(f, donate_argnums=(3,))
+
+
+@functools.lru_cache(maxsize=None)
+def _admit_fp_fn(cfg: ModelConfig, policy: QuantPolicy, s_cap: int):
+    def f(fz, tr, prompt, cache, slot, temps, topks, seeds):
+        tmp = E.init_decode_cache(cfg, 1, s_cap)
+        logits, tmp = E.prefill(fz, tr, {"tokens": prompt}, tmp, cfg,
+                                policy)
+        out = dict(cache)
+        for key in ("k", "v"):
+            out[key] = cache[key].at[:, slot].set(tmp[key][:, 0])
+        out["index"] = cache["index"].at[:, slot].set(prompt.shape[1])
+        return _sample_rows(logits, temps, topks, seeds), out
+    return jax.jit(f, donate_argnums=(3,))
+
+
+class ContinuousBatchingEngine:
+    """Fixed-width continuous batching over paged packed-KV (or the
+    contiguous fp cache when ``kv_quant_bits`` is None)."""
+
+    def __init__(self, fz, tr, cfg: ModelConfig, policy: QuantPolicy, *,
+                 slots: int = 4, page_size: int = 16,
+                 max_pages_per_slot: int = 4,
+                 n_pages: Optional[int] = None,
+                 kv_quant_bits: Optional[int] = None,
+                 kv_group: int = DEFAULT_GROUP):
+        self.fz, self.tr, self.cfg, self.policy = fz, tr, cfg, policy
+        self.slots = slots
+        self.page_size = page_size
+        self.max_pages = max_pages_per_slot
+        self.s_cap = page_size * max_pages_per_slot
+        self.kv_quant_bits = kv_quant_bits
+        self.kv_group = kv_group
+        self.packed = kv_quant_bits is not None
+        if self.packed:
+            n_pages = n_pages or (paging.FIRST_PAGE
+                                  + slots * max_pages_per_slot)
+            self.allocator = paging.PageAllocator(n_pages, page_size)
+            self.cache = paging.init_paged_cache(
+                cfg, slots, n_pages, page_size, max_pages_per_slot,
+                kv_quant_bits, kv_group)
+            self._table = np.tile(paging.trash_page_row(max_pages_per_slot),
+                                  (slots, 1))
+        else:
+            self.allocator = None
+            self.cache = E.init_decode_cache(cfg, slots, self.s_cap)
+        self.queue: deque = deque()
+        self.active: Dict[int, _Slot] = {}       # slot id -> lane state
+        self.results: Dict[int, np.ndarray] = {}
+        self.stats = {"steps": 0, "occupancy_sum": 0,
+                      "page_util_sum": 0.0, "admitted": 0, "evicted": 0}
+        # shared per-(cfg, policy) executables: a fresh engine over an
+        # already-warm model pays zero compiles
+        self._decode_block = _decode_block_fn(cfg, policy)
+        self._admit_jit = (
+            _admit_packed_fn(cfg, policy, kv_quant_bits, kv_group,
+                             self.s_cap) if self.packed
+            else _admit_fp_fn(cfg, policy, self.s_cap))
+
+    # -- request intake ---------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        need = len(req.prompt) + req.max_new
+        if need > self.s_cap:
+            raise ValueError(f"request {req.uid} needs {need} rows > "
+                             f"slot capacity {self.s_cap}")
+        if self.packed:
+            npg = self.allocator.pages_for(need)
+            if npg > self.allocator.n_allocatable:
+                raise ValueError(f"request {req.uid} needs {npg} pages > "
+                                 f"pool {self.allocator.n_allocatable}")
+        self.queue.append(req)
+
+    # -- sampling ---------------------------------------------------------
+
+    @staticmethod
+    def _seed(req: Request, steps: int) -> int:
+        return (req.uid * 1000003 + steps * 7919
+                + req.sampling.seed) % (2 ** 31)
+
+    def _lane_params(self, slot_ids):
+        """(temps, topks, seeds) numpy rows for ``slot_ids`` — greedy
+        defaults for inactive lanes (their token is discarded)."""
+        temps = np.zeros((len(slot_ids),), np.float32)
+        topks = np.zeros((len(slot_ids),), np.int32)
+        seeds = np.zeros((len(slot_ids),), np.int32)
+        for i, s in enumerate(slot_ids):
+            lane = self.active.get(s)
+            if lane is None:
+                continue
+            temps[i] = lane.req.sampling.temperature
+            topks[i] = lane.req.sampling.top_k
+            seeds[i] = self._seed(lane.req, lane.steps)
+        return temps, topks, seeds
+
+    # -- admission / eviction --------------------------------------------
+
+    def _free_slots(self):
+        return [s for s in range(self.slots) if s not in self.active]
+
+    def _admit(self) -> None:
+        for slot in self._free_slots():
+            if not self.queue:
+                return
+            req = self.queue[0]
+            pages: List[int] = []
+            if self.packed:
+                need = self.allocator.pages_for(len(req.prompt)
+                                                + req.max_new)
+                got = self.allocator.alloc(need)
+                if got is None:              # backpressure: wait for evict
+                    return
+                pages = got
+            self.queue.popleft()
+            prompt = jnp.asarray(np.asarray(req.prompt, np.int32))[None]
+            sp = req.sampling
+            temps = np.asarray([sp.temperature], np.float32)
+            topks = np.asarray([sp.top_k], np.int32)
+            seeds = np.asarray([self._seed(req, 0)], np.int32)
+            if self.packed:
+                tok_arr, self.cache = self._admit_jit(
+                    self.fz, self.tr, prompt, self.cache,
+                    np.asarray(pages, np.int32), np.int32(slot),
+                    temps, topks, seeds)
+                self._table[slot] = paging.slot_page_row(pages,
+                                                         self.max_pages)
+                self._push_table()
+            else:
+                tok_arr, self.cache = self._admit_jit(
+                    self.fz, self.tr, prompt, self.cache, np.int32(slot),
+                    temps, topks, seeds)
+            lane = _Slot(req=req, out=[], pages=pages)
+            self.active[slot] = lane
+            self.stats["admitted"] += 1
+            tok = int(np.asarray(tok_arr)[0])
+            lane.out.append(tok)
+            lane.steps = 1
+            if self._done(lane, tok):
+                self._evict(slot)
+
+    def _done(self, lane: _Slot, tok: int) -> bool:
+        return (len(lane.out) >= lane.req.max_new
+                or (lane.req.stop_token is not None
+                    and tok == lane.req.stop_token))
+
+    def _evict(self, slot: int) -> None:
+        lane = self.active.pop(slot)
+        self.results[lane.req.uid] = np.asarray(lane.out, np.int32)
+        self.stats["evicted"] += 1
+        if self.packed:
+            self.allocator.free(lane.pages)
+            self._table[slot] = paging.trash_page_row(self.max_pages)
+            self._push_table()
+
+    def _push_table(self) -> None:
+        l = self.cfg.n_layers
+        self.cache["pages"] = jnp.broadcast_to(
+            jnp.asarray(self._table)[None], (l,) + self._table.shape)
+
+    # -- the loop ---------------------------------------------------------
+
+    def _last_tokens(self) -> jnp.ndarray:
+        tok = np.zeros((self.slots, 1), np.int32)
+        for s, lane in self.active.items():
+            tok[s, 0] = lane.out[-1]
+        return jnp.asarray(tok)
+
+    def _fuse_steps(self) -> int:
+        """Largest power-of-two number of decode steps that is safe to run
+        without host-side scheduling: no lane reaches ``max_new`` before
+        the block ends, and no lane has a stop token (whose firing must be
+        observed every step)."""
+        if any(l.req.stop_token is not None for l in self.active.values()):
+            return 1
+        rem = min(l.req.max_new - len(l.out) for l in self.active.values())
+        k = 1
+        while k * 2 <= min(rem, 32):
+            k *= 2
+        return k
+
+    def step(self) -> None:
+        """One scheduler iteration: admit while pages+slots allow, then a
+        fused block of batched decode steps over every lane."""
+        self._admit()
+        if not self.active:
+            return
+        k = self._fuse_steps()
+        temps, topks, _ = self._lane_params(range(self.slots))
+        seeds = np.zeros((k, self.slots), np.int32)
+        for s, lane in self.active.items():
+            for i in range(k):
+                seeds[i, s] = self._seed(lane.req, lane.steps + i)
+        toks, self.cache = self._decode_block(
+            self.fz, self.tr, self._last_tokens(), self.cache,
+            temps, topks, seeds)
+        toks = np.asarray(toks)                  # (k, slots)
+        self.stats["steps"] += k
+        self.stats["occupancy_sum"] += k * len(self.active)
+        if self.packed:
+            self.stats["page_util_sum"] += k * self.allocator.utilization()
+        for i in range(k):
+            for s in list(self.active):
+                lane = self.active[s]
+                tok = int(toks[i, s])
+                lane.out.append(tok)
+                lane.steps += 1
+                if self._done(lane, tok):
+                    self._evict(s)
+
+    def run(self) -> Dict[int, np.ndarray]:
+        """Drain the queue; returns {uid: generated tokens}. Metrics land
+        in ``self.stats`` (occupancy / page-pool utilization are averaged
+        by :meth:`summary`)."""
+        while self.queue or self.active:
+            self.step()
+        return self.results
+
+    def summary(self) -> dict:
+        steps = max(self.stats["steps"], 1)
+        out = {
+            "steps": self.stats["steps"],
+            "admitted": self.stats["admitted"],
+            "evicted": self.stats["evicted"],
+            "tokens": int(sum(len(v) for v in self.results.values())),
+            "occupancy": self.stats["occupancy_sum"] / (steps * self.slots),
+        }
+        if self.packed:
+            out["page_utilization"] = self.stats["page_util_sum"] / steps
+        return out

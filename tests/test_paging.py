@@ -1,0 +1,258 @@
+"""Paged packed-KV: page allocator semantics, pool seeding (offset-binary
+packed zeros), prefill page scatter, and bit-parity of the paged attention
+kernel against the gather+jnp fallback, the numpy oracle, and the
+non-paged planar kernel at equal content."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import reduced_config
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention_packed import (
+    dequant_kv_rows, flash_attention_paged_pallas, gather_pages,
+    quant_pack_kv_rows)
+from repro.serve import paging
+
+
+# ---------------- allocator ------------------------------------------------
+
+def test_alloc_free_reuse_fifo():
+    a = paging.PageAllocator(n_pages=8, page_size=4)
+    assert a.n_allocatable == 6 and a.n_free == 6
+    s1 = a.alloc(2)
+    s2 = a.alloc(3)
+    assert s1 == [2, 3] and s2 == [4, 5, 6]
+    assert a.utilization() == pytest.approx(5 / 6)
+    a.free(s1)
+    # FIFO: the freed pages come back *after* the still-virgin page 7
+    assert a.alloc(3) == [7, 2, 3]
+    assert a.n_free == 0
+
+
+def test_alloc_is_all_or_nothing_and_exhaustion_backpressures():
+    a = paging.PageAllocator(n_pages=6, page_size=4)
+    assert a.alloc(3) == [2, 3, 4]
+    # 1 page free, 2 requested: None and *no partial reservation leaked*
+    assert a.alloc(2) is None
+    assert a.n_free == 1
+    assert a.alloc(1) == [5]
+
+
+def test_fragmented_free_list_still_serves_full_spans():
+    """Pages are position-independent (the page table provides ordering),
+    so a fragmented free list serves any span that fits."""
+    a = paging.PageAllocator(n_pages=10, page_size=4)
+    spans = [a.alloc(2) for _ in range(4)]          # pages 2..9
+    a.free(spans[0])                                 # holes at 2,3
+    a.free(spans[2])                                 # holes at 6,7
+    got = a.alloc(4)
+    assert sorted(got) == [2, 3, 6, 7]
+
+
+def test_double_free_and_foreign_page_raise():
+    a = paging.PageAllocator(n_pages=6, page_size=4)
+    s = a.alloc(2)
+    a.free(s)
+    with pytest.raises(ValueError):
+        a.free(s)
+    with pytest.raises(ValueError):
+        a.free([paging.NULL_PAGE])                   # reserved, never owned
+
+
+def test_pages_for_rounds_up():
+    a = paging.PageAllocator(n_pages=6, page_size=8)
+    assert a.pages_for(1) == 1
+    assert a.pages_for(8) == 1
+    assert a.pages_for(9) == 2
+
+
+# ---------------- pool seeding / scatter -----------------------------------
+
+def test_packed_zero_rows_dequantize_to_exact_zero():
+    """Offset-binary fields: the zero pattern is NOT all-zero words (those
+    dequantize to -qmax); the seeded pattern hits exactly 0.0."""
+    cfg = reduced_config("granite_3_2b")
+    zw, ze = paging.packed_zero_rows(cfg, bits=8)
+    assert bool(jnp.any(zw != 0))
+    d = cfg.resolved_head_dim
+    deq = dequant_kv_rows(zw[None, None], ze[None, None], d)
+    np.testing.assert_array_equal(np.asarray(deq), 0.0)
+
+
+def test_init_paged_cache_layout_and_seeding():
+    cfg = reduced_config("granite_3_2b")
+    cache = paging.init_paged_cache(cfg, batch=3, n_pages=6, page_size=4,
+                                    max_pages=2, bits=8)
+    l, kv = cfg.n_layers, cfg.n_kv_heads
+    assert cache["kp_words"].shape[:4] == (l, 6, 4, kv)
+    assert cache["pages"].shape == (l, 3, 2)
+    # every slot starts inactive: whole table on the trash page
+    assert np.all(np.asarray(cache["pages"]) == paging.TRASH_PAGE)
+    assert cache["index"].shape == (l, 3)
+    # every page of every pool dequantizes to exact zeros
+    d = cfg.resolved_head_dim
+    deq = dequant_kv_rows(cache["vp_words"][0], cache["vp_exp"][0], d)
+    np.testing.assert_array_equal(np.asarray(deq), 0.0)
+
+
+def test_slot_and_trash_rows():
+    row = paging.slot_page_row([5, 2, 9], 5)
+    np.testing.assert_array_equal(
+        row, [5, 2, 9, paging.NULL_PAGE, paging.NULL_PAGE])
+    np.testing.assert_array_equal(paging.trash_page_row(3),
+                                  [paging.TRASH_PAGE] * 3)
+
+
+def test_scatter_prefill_pages_roundtrip():
+    """Scattered pages gather back to exactly the planar rows (full-page
+    overwrite: no residue of the pool's previous contents)."""
+    cfg = reduced_config("granite_3_2b")
+    l, kv, d = cfg.n_layers, cfg.n_kv_heads, cfg.resolved_head_dim
+    page, n = 4, 2
+    cache = paging.init_paged_cache(cfg, batch=1, n_pages=6, page_size=page,
+                                    max_pages=n, bits=8)
+    x = jax.random.normal(jax.random.PRNGKey(0), (l, 1, n * page, kv, d))
+    w, e = quant_pack_kv_rows(x, 8)
+    planar = {"k_words": w, "k_exp": e, "v_words": w, "v_exp": e}
+    out = paging.scatter_prefill_pages(cache, planar, [4, 2])
+    # layer 0: gather over the page walk reproduces the planar words
+    got = gather_pages(out["kp_words"][0], jnp.asarray([[4, 2]], jnp.int32))
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(w[0, 0]))
+
+
+def test_page_pool_pspec_resolves():
+    from repro.distributed.sharding import ShardingRules
+    mesh = jax.make_mesh((1,), ("data",))
+    spec = paging.page_pool_pspec(mesh, ShardingRules.single_pod(),
+                                  kv_heads=2, n_pages=8)
+    assert len(spec) <= 5                    # a valid 5-dim PartitionSpec
+
+
+# ---------------- paged attention parity -----------------------------------
+
+def _paged_setup(seed, b, s, kv, d, page, bits):
+    """Contiguous planar K/V planes + the same rows scattered to pools
+    under one shared permuted page table. Returns
+    (kw, ke, vw, ve, kpw, kpe, vpw, vpe, pt)."""
+    maxp = s // page
+    n_pages = paging.FIRST_PAGE + b * maxp
+    k = jax.random.normal(jax.random.PRNGKey(seed), (b, s, kv, d)) * 0.5
+    v = jax.random.normal(jax.random.PRNGKey(seed + 100),
+                          (b, s, kv, d)) * 0.5
+    kw, ke = quant_pack_kv_rows(k, bits)
+    vw, ve = quant_pack_kv_rows(v, bits)
+    rng = np.random.default_rng(seed)
+    pt = rng.permutation(np.arange(paging.FIRST_PAGE, n_pages)).reshape(
+        b, maxp).astype(np.int32)
+
+    def pool(x):
+        p = np.zeros((n_pages, page) + x.shape[2:], np.asarray(x).dtype)
+        xn = np.asarray(x).reshape(b, maxp, page, *x.shape[2:])
+        for i in range(b):
+            for j in range(maxp):
+                p[pt[i, j]] = xn[i, j]
+        return jnp.asarray(p)
+    return (kw, ke, vw, ve, pool(kw), pool(ke), pool(vw), pool(ve),
+            jnp.asarray(pt))
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+@pytest.mark.parametrize("causal,window", [(True, 0), (False, 0), (True, 48)])
+def test_paged_kernel_bit_exact_vs_fallback_and_planar(bits, causal, window):
+    """The paged Pallas kernel (page-table SMEM prefetch + per-sequence
+    offset vector) is bit-identical to (a) the gather+jnp fallback and
+    (b) the non-paged planar kernel fed the same rows contiguously at
+    bk == page — paging must not change one bit of the output."""
+    b, t, h, kv, d, s, page = 2, 8, 4, 2, 32, 128, 64
+    kw, ke, vw, ve, kpw, kpe, vpw, vpe, pt = _paged_setup(
+        1 + bits, b, s, kv, d, page, bits)
+    q = jax.random.normal(jax.random.PRNGKey(3), (b, t, h, d))
+    off = jnp.asarray([s - t, s - t - 16], jnp.int32)   # ragged offsets
+
+    def run(route):
+        import os
+        os.environ["REPRO_FAP_ROUTE"] = route
+        try:
+            return ops.flash_attention_paged(
+                q, kpw, kpe, vpw, vpe, pt, causal=causal, window=window,
+                q_offset=off)
+        finally:
+            del os.environ["REPRO_FAP_ROUTE"]
+
+    ok = run("kernel")
+    assert ops.last_paged_route()[0] == "kernel"
+    oj = run("fallback")
+    assert ops.last_paged_route()[0] == "fallback"
+    np.testing.assert_array_equal(np.asarray(ok), np.asarray(oj))
+    # same content through the non-paged planar kernel, same tiling
+    op = ops.flash_attention_packed(q, kw, ke, vw, ve, causal=causal,
+                                    window=window, q_offset=off, bk=page)
+    np.testing.assert_array_equal(np.asarray(ok), np.asarray(op))
+
+
+def test_paged_kernel_bit_exact_vs_oracle():
+    b, t, h, kv, d, s, page = 2, 8, 4, 2, 32, 128, 64
+    _, _, _, _, kpw, kpe, vpw, vpe, pt = _paged_setup(10, b, s, kv, d,
+                                                      page, 8)
+    q = jax.random.normal(jax.random.PRNGKey(12), (b, t, h, d))
+    off = np.asarray([s - t, s - t - 8])
+    ok = flash_attention_paged_pallas(
+        q.reshape(b, t, kv, h // kv, d).transpose(0, 2, 3, 1, 4).reshape(
+            b * kv, h // kv, t, d),
+        kpw, kpe, vpw, vpe, pt, q_offset=jnp.repeat(jnp.asarray(
+            off, jnp.int32), kv), causal=True, bq=t)
+    ok = ok.reshape(b, kv, h // kv, t, d).transpose(0, 3, 1, 2, 4).reshape(
+        b, t, h, d)
+    oo = ref.flash_attention_paged_oracle(q, kpw, kpe, vpw, vpe,
+                                          np.asarray(pt), causal=True,
+                                          q_offset=off, bq=t)
+    np.testing.assert_array_equal(np.asarray(ok), np.asarray(oo))
+
+
+def test_paged_tails_and_int_mac_parity():
+    """fp tail rows (quantize-after-attend append) + int8 MXU score path
+    on the paged kernel, bit-exact vs the gather fallback."""
+    b, t, h, kv, d, s, page = 2, 4, 4, 2, 32, 128, 64
+    _, _, _, _, kpw, kpe, vpw, vpe, pt = _paged_setup(20, b, s, kv, d,
+                                                      page, 8)
+    q = jax.random.normal(jax.random.PRNGKey(22), (b, t, h, d))
+    kt = jax.random.normal(jax.random.PRNGKey(23), (b, t, kv, d))
+    vt = jax.random.normal(jax.random.PRNGKey(24), (b, t, kv, d))
+    off = jnp.asarray([s - t, s - t - 8], jnp.int32)
+
+    def run(route):
+        import os
+        os.environ["REPRO_FAP_ROUTE"] = route
+        try:
+            return ops.flash_attention_paged(
+                q, kpw, kpe, vpw, vpe, pt, causal=False, q_offset=off,
+                k_tail=kt, v_tail=vt, int_mac=True)
+        finally:
+            del os.environ["REPRO_FAP_ROUTE"]
+
+    np.testing.assert_array_equal(np.asarray(run("kernel")),
+                                  np.asarray(run("fallback")))
+
+
+def test_paged_null_page_columns_are_masked_noops():
+    """A sequence whose page walk ends in null pages (allocated span
+    shorter than max_pages) attends identically to the same rows under a
+    full-span table — the quantized-zero columns sit behind the length
+    mask."""
+    b, t, h, kv, d, s, page = 1, 4, 2, 2, 32, 128, 64
+    _, _, _, _, kpw, kpe, vpw, vpe, pt = _paged_setup(30, b, s, kv, d,
+                                                      page, 8)
+    q = jax.random.normal(jax.random.PRNGKey(32), (b, t, h, d))
+    # live in the first page only; second logical page -> NULL_PAGE
+    off = jnp.asarray([page - t], jnp.int32)
+    pt_null = jnp.asarray([[int(pt[0, 0]), paging.NULL_PAGE]], jnp.int32)
+    o_null = flash_attention_paged_pallas(
+        q.transpose(0, 2, 1, 3).reshape(b * kv, h // kv, t, d),
+        kpw, kpe, vpw, vpe, pt_null,
+        q_offset=jnp.repeat(off, kv), causal=True, bq=t)
+    o_full = flash_attention_paged_pallas(
+        q.transpose(0, 2, 1, 3).reshape(b * kv, h // kv, t, d),
+        kpw, kpe, vpw, vpe, pt[:1],
+        q_offset=jnp.repeat(off, kv), causal=True, bq=t)
+    np.testing.assert_array_equal(np.asarray(o_null), np.asarray(o_full))

@@ -119,11 +119,14 @@ def test_kv_pack_group_non_divisible_head_dim():
 def test_cache_index_advances():
     cfg, fz, tr, prompt, extra = _setup("granite_3_2b")
     cache = E.init_decode_cache(cfg, 2, 16)
+    # per-sequence index: one (L, B) counter so ragged batches can advance
+    # each row independently
+    assert cache["index"].shape == (cfg.n_layers, 2)
     _, cache = E.prefill(fz, tr, {"tokens": prompt}, cache, cfg, FP)
-    assert int(cache["index"][0]) == 8
+    assert np.all(np.asarray(cache["index"]) == 8)
     tok = jnp.zeros((2, 1), jnp.int32)
     _, cache = E.decode_step(fz, tr, tok, cache, cfg, FP)
-    assert int(cache["index"][0]) == 9
+    assert np.all(np.asarray(cache["index"]) == 9)
 
 
 def test_quantized_decode_consistent_with_quantized_forward():
