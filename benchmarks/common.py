@@ -31,9 +31,12 @@ PROXY_DATA = DataConfig(vocab=128, seq_len=64, global_batch=16,
 def run_proxy_finetune(policy: QuantPolicy, steps: int = 120,
                        lr: float = 5e-3, seed: int = 0,
                        cfg: ModelConfig = PROXY_CFG,
-                       data: DataConfig = PROXY_DATA):
+                       data: DataConfig = PROXY_DATA,
+                       record_every: int = 0):
     """Fine-tune the proxy model under ``policy``; returns metrics dict with
-    eval loss/accuracy and wall time per step."""
+    eval loss/accuracy and wall time per step. ``record_every > 0`` also
+    collects ``loss_trajectory`` — a list of (step, train_loss) pairs — the
+    curve the residual-width sweep tabulates."""
     fz, tr = M.init_model(jax.random.PRNGKey(seed), cfg, policy)
     # cosine decay for every policy alike: at proxy scale a constant 5e-3
     # LR makes *any* weight-quantized run oscillate late in training (the
@@ -48,18 +51,24 @@ def run_proxy_finetune(policy: QuantPolicy, steps: int = 120,
     t0 = time.perf_counter()
     loss = None
     best = float("inf")
+    trajectory = []
     for s in range(steps):
         batch = jax.tree.map(jnp.asarray, batch_at_step(data, s))
         tr, opt_state, res, metrics = step_fn(fz, tr, opt_state, res, batch)
         loss = metrics["loss"]
         if s % 10 == 9:
             best = min(best, float(loss))
+        if record_every and (s % record_every == record_every - 1
+                             or s == steps - 1):
+            trajectory.append((s + 1, float(loss)))
     jax.block_until_ready(loss)
     dt = (time.perf_counter() - t0) / steps
     ev = evaluate(fz, tr, cfg, policy, data)
     ev["train_loss"] = float(loss)
     ev["best_train_loss"] = min(best, float(loss))
     ev["us_per_step"] = dt * 1e6
+    if record_every:
+        ev["loss_trajectory"] = trajectory
     return ev
 
 

@@ -345,6 +345,55 @@ def run(smoke: bool = False, records=None):
     add("kernel/pallas_gse_matmul_packed_tn_int_mac_interpret", us,
         f"correctness-path-only dW-shaped bounded-tier fp32_us={us_tn:.0f}",
         shape="128x512x256", bits=6, route="kernel-interpret")
+
+    # plane-prefix views over one 8-bit store: unpack / fused matmul /
+    # packed-KV attention read only the first b planes (with_bits(b) /
+    # kv_active_bits=b). The hbm_words_bytes column is what a narrow read
+    # actually fetches — b/8 of the stored mantissa stream, because the
+    # view is a word-prefix slice, not a re-quantized copy. b=8 is the
+    # identity view (same words, zero shift): the no-narrowing baseline.
+    from repro.core.gse import gse_unpack as core_unpack
+    p8 = gse_pack(gq(w.T, 8, 32))                 # (M, K) along K, 8-bit
+    wq8 = gq(jax.random.normal(jax.random.PRNGKey(10), (256, 512)) * 0.05,
+             8, 32)
+    pw8t = gse_pack(wq8)                          # logical (N=256, K=512)
+    stored_mw = p8.mantissa_words.nbytes
+    stored_ww = pw8t.mantissa_words.nbytes
+    stored_kv = kwp.nbytes + vwp.nbytes
+    for ab in (4, 6, 8):
+        view_mw = stored_mw * ab // 8
+        us = _time(jax.jit(
+            lambda p, b=ab: core_unpack(p.with_bits(b)).mantissa), p8)
+        add(f"kernel/plane_prefix_unpack_{tag}_b{ab}of8", us,
+            f"GBps={view_mw / us * 1e6 / 1e9:.2f} "
+            f"hbm_words_bytes={view_mw} stored_bytes={stored_mw}",
+            shape=tag, bits=ab)
+        us = _time(lambda a, b=ab: ops.gse_linear_packed(
+            a, pw8t.with_bits(b), bm=128, bn=128, bk=512), xa, iters=3)
+        add(f"kernel/plane_prefix_matmul_interpret_b{ab}of8", us,
+            f"correctness-path-only hbm_words_bytes={stored_ww * ab // 8} "
+            f"stored_bytes={stored_ww}", shape="128x512x256", bits=ab,
+            route="kernel-interpret")
+
+    prev_route = os.environ.get("REPRO_FAP_ROUTE")
+    try:
+        os.environ["REPRO_FAP_ROUTE"] = "fallback"
+        for ab in (4, 6, 8):
+            @jax.jit
+            def step(q, kw, ke, vw, ve, o, b=ab):
+                return _ops.flash_attention_packed(
+                    q, kw, ke, vw, ve, causal=True, q_offset=o, bk=bk,
+                    kv_active_bits=b)
+            us = _time(step, qd, kwp, kep, vwp, vep, offt, iters=3)
+            add(f"kernel/plane_prefix_attn_fallback_s{s_max}_b{ab}of8", us,
+                f"hbm_words_bytes={stored_kv * ab // 8} "
+                f"stored_bytes={stored_kv}", shape=shape_kv, bits=ab,
+                route="fallback")
+    finally:
+        if prev_route is None:
+            os.environ.pop("REPRO_FAP_ROUTE", None)
+        else:
+            os.environ["REPRO_FAP_ROUTE"] = prev_route
     return rows
 
 

@@ -25,7 +25,8 @@ from benchmarks.common import csv_row
 from repro.configs import reduced_config
 from repro.core.policy import QuantPolicy
 from repro.serve import engine as E
-from repro.serve.scheduler import ContinuousBatchingEngine, Request
+from repro.serve.scheduler import (ContinuousBatchingEngine, Request,
+                                   SamplingParams)
 
 BENCH_SCHEMA = "repro/serve_bench/v1"
 DEFAULT_JSON = os.path.normpath(
@@ -177,6 +178,46 @@ def run(smoke: bool = False, records=None):
                             decode_steps=static_steps,
                             occupancy=None, page_utilization=None,
                             speedup_vs_static=1.0))
+
+    # mixed per-request read widths over the one 8-bit pool: each lane
+    # attends through its own plane-prefix of the shared stored planes
+    # (SamplingParams.kv_bits), one fused decode block for all lanes — no
+    # per-width engine, no retrace at admission. Same workload as the kv8
+    # row; the width cycle covers narrow/mid/full/default lanes.
+    widths = (4, 6, 8, None)
+    mixed = [Request(uid=r.uid, prompt=r.prompt, max_new=r.max_new,
+                     sampling=SamplingParams(kv_bits=widths[i % len(widths)]))
+             for i, r in enumerate(reqs)]
+    warm = make_engine(8)
+    for r in mixed[:slots + 1]:
+        warm.submit(r)
+    warm.run()
+    eng = make_engine(8)
+    for r in mixed:
+        eng.submit(r)
+    t0 = time.perf_counter()
+    cont = eng.run()
+    t_mixed = time.perf_counter() - t0
+    summ = eng.summary()
+    assert len(cont) == len(reqs)
+    tps_m = total_tokens / t_mixed
+    util = summ.get("page_utilization")
+    rows.append(csv_row(
+        "serve/continuous_mixed_kv"
+        + "-".join("full" if w is None else str(w) for w in widths),
+        t_mixed * 1e6,
+        f"tok/s={tps_m:.1f} occupancy={summ['occupancy']:.2f} "
+        f"widths={widths} steps={summ['steps']}"))
+    records.append({"requests": len(reqs), "tokens": total_tokens,
+                    "kv_bits": "mixed:4/6/8/none", "slots": slots,
+                    "workload": f"g{groups}long{long_new}short{short_new}",
+                    "mode": "continuous", "wall_s": round(t_mixed, 3),
+                    "tokens_per_sec": round(tps_m, 2),
+                    "decode_steps": summ["steps"],
+                    "occupancy": round(summ["occupancy"], 4),
+                    "page_utilization": (round(util, 4)
+                                         if util is not None else None),
+                    "speedup_vs_static": None})
     return rows
 
 

@@ -3,6 +3,13 @@ ladder (QLoRA-BF16 vs GSQ 8/6/5-bit) for a few hundred steps and compare —
 the proxy-scale version of paper Tab. 1.
 
     PYTHONPATH=src python examples/finetune_policies.py [--steps 200]
+
+``--residual-sweep`` instead varies only the packed backward-residual
+width: GSQ 8-bit compute with ``residual_bits`` b∈{8,6,4} — the forward
+GEMMs are identical, the saved-for-backward Q(X)/Q(W) streams are stored
+at b bits (a re-quantization at pack time; the read side of the same knob
+is the plane-prefix view, docs/gse-format.md §7). Prints the loss
+trajectory per width — the table recorded in docs/benchmarks.md.
 """
 import argparse
 
@@ -10,10 +17,34 @@ from benchmarks.common import run_proxy_finetune
 from repro.core.policy import QuantPolicy
 
 
+def residual_sweep(steps: int):
+    import dataclasses
+    base = QuantPolicy.gsq(8, rank=16, residuals_packed=True)
+    runs = []
+    for b in (8, 6, 4):
+        pol = dataclasses.replace(base, residual_bits=b)
+        m = run_proxy_finetune(pol, steps=steps,
+                               record_every=max(steps // 4, 1))
+        runs.append((b, m))
+    marks = [s for s, _ in runs[0][1]["loss_trajectory"]]
+    head = " ".join(f"{f'loss@{s}':>9s}" for s in marks)
+    print(f"{'residual_bits':13s} {head} {'eval_loss':>9s} {'eval_acc':>8s}")
+    for b, m in runs:
+        traj = " ".join(f"{v:9.4f}" for _, v in m["loss_trajectory"])
+        print(f"{b:<13d} {traj} {m['eval_loss']:9.4f} "
+              f"{m['eval_acc']:8.3f}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--residual-sweep", action="store_true",
+                    help="sweep packed-residual width b in {8,6,4} at fixed "
+                         "8-bit compute (loss-trajectory table)")
     args = ap.parse_args()
+    if args.residual_sweep:
+        residual_sweep(args.steps)
+        return
     ladder = [
         ("QLoRA  4-16-16 (bf16 adapters)", QuantPolicy.qlora_bf16(rank=16)),
         ("GSQ    4-8-8   (GSE-INT8)", QuantPolicy.gsq(8, rank=16)),

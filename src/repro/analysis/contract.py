@@ -27,6 +27,14 @@ asserts structural invariants on the optimized HLO / jaxpr:
                      the `gse_score_tile` exact-tier recipe, and the
                      exact-tier closure `group * qmax^2 < 2^24` holds for
                      the widest supported mantissa.
+  view-zero-copy     the ``kv_active_bits`` / per-sequence ``kv_trunc``
+                     serve programs (plane-prefix views,
+                     docs/gse-format.md §7) never materialize the cache:
+                     no fp buffer of the unpacked KV shape at any width
+                     (a dequant→requantize view) and no cache-shaped u32
+                     word buffer produced by arithmetic (an eager
+                     truncate-and-re-pack — the view must stay a prefix
+                     read of the stored planes).
 
 The invariant engines (:func:`dot_census`, :func:`fp_buffer_scan`) are
 pure functions of HLO text so tests can feed them deliberately broken
@@ -157,6 +165,49 @@ def audit_no_unpacked_fp(hlo_text: str, dims: Sequence[Sequence[int]],
     return [f"materialized fp buffer of full unpacked shape: "
             f"{h['dtype']}{h['dims']} in {h['computation']}: {h['line']}"
             for h in fp_buffer_scan(hlo_text, dims, flat_sizes)]
+
+
+# word-producing arithmetic: the opcodes a truncate-and-re-pack (shift,
+# mask, or-together) would lower to. slice/reshape/copy/bitcast — the
+# legitimate zero-copy prefix ops — are deliberately absent.
+_U32_COMPUTE_OPS = {"add", "subtract", "multiply", "divide", "and", "or",
+                    "xor", "not", "shift-left", "shift-right-logical",
+                    "shift-right-arithmetic", "select", "convert", "clamp"}
+
+
+def u32_word_compute_scan(hlo_text: str,
+                          dims: Sequence[Sequence[int]]) -> List[dict]:
+    """Find cache-shaped u32 word buffers produced by *arithmetic*.
+
+    The plane-prefix view contract: a narrowed read is a prefix slice of
+    the stored planes — never a recomputed word stream. Tile-local unpack
+    arithmetic is fine (tile shapes, and fusion bodies are VMEM); an
+    instruction outside fusion bodies whose u32 result matches a full
+    word-cache shape in ``dims`` AND whose opcode is word-producing
+    arithmetic is an eager whole-cache re-pack.
+    """
+    want = {tuple(d) for d in dims}
+    fused = _fusion_bodies(hlo_text)
+    hits: List[dict] = []
+    for comp in parse_hlo(hlo_text).values():
+        if comp.name in fused:
+            continue
+        for ins in comp.instrs:
+            if ins.opcode not in _U32_COMPUTE_OPS:
+                continue
+            for dt, rdims in _shape_list(ins.result):
+                if dt == "u32" and tuple(rdims) in want:
+                    hits.append({"computation": comp.name, "dims": rdims,
+                                 "line": ins.line[:200]})
+    return hits
+
+
+def audit_view_zero_copy(hlo_text: str,
+                         word_dims: Sequence[Sequence[int]]) -> List[str]:
+    return [f"cache-shaped u32 words produced by arithmetic (re-pack, "
+            f"not a prefix view): u32{h['dims']} in {h['computation']}: "
+            f"{h['line']}"
+            for h in u32_word_compute_scan(hlo_text, word_dims)]
 
 
 # ---------------------------------------------------------------------------
@@ -356,6 +407,62 @@ def lower_paged_attention(int_mac: bool = True) -> str:
                 q, kw, ke, vw, ve, pt, causal=False, q_offset=off,
                 int_mac=int_mac),
             q, pool(kw), pool(ke), pool(vw), pool(ve), pt, off)
+
+
+def lower_view_attention(active_bits: int = 4) -> str:
+    """Planar packed decode attention reading the ``kv_active_bits`` plane
+    prefix of an 8-bit cache (the with_bits serve program, kernel route)."""
+    import jax
+    from repro.kernels import ops
+    p = _ATTN
+    q = jax.random.normal(jax.random.PRNGKey(0), (p["b"], p["t"], p["h"],
+                                                  p["d"]))
+    k = jax.random.normal(jax.random.PRNGKey(1), (p["b"], p["s"], p["kv"],
+                                                  p["d"]))
+    v = jax.random.normal(jax.random.PRNGKey(2), (p["b"], p["s"], p["kv"],
+                                                  p["d"]))
+    kw, ke = ops.quant_pack_kv_rows(k, p["bits"])
+    vw, ve = ops.quant_pack_kv_rows(v, p["bits"])
+    with _env(REPRO_FAP_ROUTE="kernel", REPRO_INT_MAC=None):
+        return _optimized_hlo(
+            lambda q, kw, ke, vw, ve: ops.flash_attention_packed(
+                q, kw, ke, vw, ve, causal=False,
+                q_offset=p["s"] - p["t"], bq=p["bq"], bk=p["bk"],
+                kv_active_bits=active_bits),
+            q, kw, ke, vw, ve)
+
+
+def lower_mixed_paged_attention() -> str:
+    """Paged decode attention with a traced per-sequence ``kv_trunc``
+    vector — the mixed-``kv_bits`` continuous-batching decode program."""
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ops
+    p = _PAGED
+    n_pages = 2 + p["b"] * p["maxp"]
+    s = p["maxp"] * p["page"]
+    q = jax.random.normal(jax.random.PRNGKey(0), (p["b"], p["t"], p["h"],
+                                                  p["d"]))
+    k = jax.random.normal(jax.random.PRNGKey(1), (p["b"], s, p["kv"],
+                                                  p["d"]))
+    v = jax.random.normal(jax.random.PRNGKey(2), (p["b"], s, p["kv"],
+                                                  p["d"]))
+    kw, ke = ops.quant_pack_kv_rows(k, p["bits"])
+    vw, ve = ops.quant_pack_kv_rows(v, p["bits"])
+
+    def pool(x):
+        xp = x.reshape(p["b"] * p["maxp"], p["page"], *x.shape[2:])
+        return jnp.concatenate([jnp.zeros_like(xp[:2]), xp], axis=0)
+
+    pt = jnp.arange(2, n_pages, dtype=jnp.int32).reshape(p["b"], p["maxp"])
+    off = jnp.asarray([s - p["t"], s - p["t"] - 16], jnp.int32)
+    tr = jnp.asarray([0, 5], jnp.int32)       # lane widths 8 and 3
+    with _env(REPRO_FAP_ROUTE="kernel", REPRO_INT_MAC=None):
+        return _optimized_hlo(
+            lambda q, kw, ke, vw, ve, pt, off, tr: ops.flash_attention_paged(
+                q, kw, ke, vw, ve, pt, causal=False, q_offset=off,
+                kv_trunc=tr),
+            q, pool(kw), pool(ke), pool(vw), pool(ve), pt, off, tr)
 
 
 def trace_wire_jaxpr(n: int = 256, bits: int = 8, group: int = 32,
@@ -560,6 +667,55 @@ def check_guard_coverage() -> dict:
                    "guard or the exact tier; closure bound holds")
 
 
+def check_plane_prefix_view() -> dict:
+    """view-zero-copy: the with_bits / mixed-kv_trunc serve programs hold
+    both the no-unpacked-fp and the no-re-pack invariant."""
+    p = _ATTN
+    chunks = p["d"] // 32
+    violations: List[str] = []
+
+    hlo = lower_view_attention(active_bits=4)
+    cache_dims = [(p["b"], p["s"], p["kv"], p["d"]),
+                  (p["b"] * p["kv"], p["s"], p["d"])]
+    cache_flat = {p["b"] * p["s"] * p["kv"] * p["d"]}
+    violations += [f"[planar b=4] {v}" for v in
+                   audit_no_unpacked_fp(hlo, cache_dims, cache_flat)]
+    # cache-shaped word streams at the narrowed and the stored width, in
+    # the row layout and the folded/plane-axis layouts the wrapper builds
+    word_dims = []
+    for wb in (4, 8):
+        word_dims += [(p["b"], p["s"], p["kv"], wb * chunks),
+                      (p["b"], p["kv"], p["s"], wb * chunks),
+                      (p["b"] * p["kv"], p["s"], wb * chunks),
+                      (p["b"] * p["kv"], p["s"], wb, chunks)]
+    violations += [f"[planar b=4] {v}" for v in
+                   audit_view_zero_copy(hlo, word_dims)]
+
+    pp = _PAGED
+    s = pp["maxp"] * pp["page"]
+    n_pages = 2 + pp["b"] * pp["maxp"]
+    pchunks = pp["d"] // 32
+    hlo = lower_mixed_paged_attention()
+    dims = [(pp["b"], s, pp["kv"], pp["d"]),
+            (pp["b"] * pp["kv"], s, pp["d"]),
+            (n_pages, pp["page"], pp["kv"], pp["d"])]
+    flat = {pp["b"] * s * pp["kv"] * pp["d"],
+            n_pages * pp["page"] * pp["kv"] * pp["d"]}
+    violations += [f"[paged mixed-trunc] {v}" for v in
+                   audit_no_unpacked_fp(hlo, dims, flat)]
+    pool_words = []
+    for wb in (4, 8):
+        pool_words += [(n_pages, pp["page"], pp["kv"], wb * pchunks),
+                       (n_pages, pp["page"], pp["kv"], wb, pchunks)]
+    violations += [f"[paged mixed-trunc] {v}" for v in
+                   audit_view_zero_copy(hlo, pool_words)]
+    return _result("plane-prefix-view-zero-copy", violations,
+                   "with_bits (planar b=4/8) and mixed-kv_trunc paged serve "
+                   "programs: no fp buffer of unpacked KV shape, no "
+                   "cache-shaped u32 words from arithmetic (prefix read, "
+                   "not re-pack)")
+
+
 def _result(name: str, violations: List[str], detail: str) -> dict:
     return {"name": name, "ok": not violations, "detail": detail,
             "violations": violations}
@@ -567,7 +723,8 @@ def _result(name: str, violations: List[str], detail: str) -> dict:
 
 ALL_CHECKS = (check_backward_gemms, check_score_tile, check_attention,
               check_paged_attention, check_train_residuals,
-              check_collective_wire, check_guard_coverage)
+              check_collective_wire, check_guard_coverage,
+              check_plane_prefix_view)
 
 
 def run_checks(checks=ALL_CHECKS) -> dict:

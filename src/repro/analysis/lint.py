@@ -30,6 +30,14 @@ registry that turns those prose rules into a CI gate:
                             outside the shared pack/unpack bodies — one
                             definition per bit-math body, or the wire
                             format silently forks.
+  R5 raw-plane-slice        plane-prefix views (docs/gse-format.md §7)
+                            are taken only through
+                            ``PackedGSETensor.with_bits`` /
+                            ``plane_prefix_words`` — a hand-sliced
+                            ``words[..., :b*chunks]`` elsewhere skips the
+                            width validation and the exponent-shift
+                            bookkeeping, silently decoding at the wrong
+                            scale.
 
 Pragmas: append ``# gse-lint: disable=R1`` (comma-separate several rule
 ids) to a line to suppress findings on that line; a file-level
@@ -58,7 +66,7 @@ import sys
 from pathlib import Path
 from typing import Dict, Iterable, List, Optional, Set, Tuple
 
-RULE_IDS = ("R1", "R2", "R3", "R4")
+RULE_IDS = ("R1", "R2", "R3", "R4", "R5")
 
 _PRAGMA_RE = re.compile(r"#\s*gse-lint:\s*disable=([A-Za-z0-9,\s]+)")
 _PRAGMA_FILE_RE = re.compile(r"#\s*gse-lint:\s*disable-file=([A-Za-z0-9,\s]+)")
@@ -342,9 +350,55 @@ class RuleHandRolledDequant(_Rule):
                         "gse_unpack / unpack_tile")
 
 
+# ---------------------------------------------------------------------------
+# R5: hand-sliced plane-prefix views
+# ---------------------------------------------------------------------------
+
+class RulePlanePrefixSlice(_Rule):
+    id = "R5"
+    name = "raw-plane-slice"
+    # the one sanctioned slice body (plane_prefix_words / with_bits) and
+    # the numpy-domain oracles that define the truncation semantics
+    BLESSED = {"repro/core/gse.py", "repro/kernels/ref.py"}
+    _WORDY = re.compile(r"(^|_)words?($|\b)|mantissa_words", re.IGNORECASE)
+    _WIDTHY = re.compile(r"bits|chunk|plane", re.IGNORECASE)
+
+    def applies(self, relpath: str) -> bool:
+        return relpath not in self.BLESSED
+
+    def _bounded_slices(self, node: ast.Subscript) -> Iterable[ast.Slice]:
+        sl = node.slice
+        elts = sl.elts if isinstance(sl, ast.Tuple) else [sl]
+        for e in elts:
+            if isinstance(e, ast.Slice) and e.upper is not None:
+                yield e
+
+    def check(self, ctx: _FileContext) -> Iterable[Finding]:
+        for node in ast.walk(ctx.tree):
+            if not (isinstance(node, ast.Subscript)
+                    and isinstance(node.ctx, ast.Load)):
+                continue
+            if not any(self._WORDY.search(i)
+                       for i in _identifiers(node.value)):
+                continue
+            for sl in self._bounded_slices(node):
+                if any(self._WIDTHY.search(i)
+                       for i in _identifiers(sl.upper)):
+                    yield ctx.finding(
+                        self, node,
+                        "hand-sliced plane prefix on packed words: take "
+                        "bit-width views only through "
+                        "`PackedGSETensor.with_bits` / "
+                        "`plane_prefix_words` (repro.core.gse) — a raw "
+                        "slice skips width validation and the "
+                        "exponent-shift bookkeeping (docs/gse-format.md "
+                        "§7)")
+                    break
+
+
 def default_rules() -> List[_Rule]:
     return [RuleInexactScaleMath(), RuleRawEnvRead(), RuleKernelOracle(),
-            RuleHandRolledDequant()]
+            RuleHandRolledDequant(), RulePlanePrefixSlice()]
 
 
 # ---------------------------------------------------------------------------

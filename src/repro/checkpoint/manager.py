@@ -29,6 +29,12 @@ Packed GSE support (two flavors):
   This is a **lossy** serving/deployment snapshot — restore transparently
   dequantizes back to the ``like`` leaf dtype. Training state one will
   resume from should keep the default lossless path.
+
+Both flavors serve **every** narrower width from the one full-width
+snapshot: ``restore(..., bits=b)`` slices each packed leaf's word stream
+to its first b mantissa planes host-side (the MSB-first wire format makes
+the prefix exactly the floor-truncated b-bit tensor — docs/gse-format.md
+§7) before anything touches the device.
 """
 from __future__ import annotations
 
@@ -43,7 +49,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.gse import DEFAULT_GROUP, PackedGSETensor
+from repro.core.gse import (DEFAULT_GROUP, PackedGSETensor,
+                            plane_prefix_words)
 from repro.kernels.ops import gse_quantize_pack
 
 
@@ -146,15 +153,34 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
-    def restore(self, step: int, like: Any, shardings: Any = None) -> tuple:
+    def restore(self, step: int, like: Any, shardings: Any = None,
+                bits: Optional[int] = None) -> tuple:
         """Restore into the structure of ``like``. ``shardings`` (optional
         matching tree of NamedSharding) re-lays leaves on the current mesh —
-        the elastic-restart path."""
+        the elastic-restart path.
+
+        ``bits=b`` is the **progressive-precision load**: every packed GSE
+        leaf — :class:`PackedGSETensor` weights/optimizer moments in
+        ``like`` and ``gse_bits`` snapshot leaves on disk — loads as the
+        b-bit plane-prefix view of its full-width snapshot. The word
+        stream is sliced to its first ``b`` planes host-side, straight off
+        the npz mmap, so only ``b/stored`` of the mantissa bytes ever
+        reach the device: one checkpoint serves every width
+        (docs/gse-format.md §7). Bit-identical to ``with_bits(b)`` on a
+        full restore. Non-packed leaves are unaffected. ``bits`` and
+        ``shardings`` are mutually exclusive (prefix-loaded word planes
+        have no logical-axis sharding to resolve)."""
         path = os.path.join(self.dir, f"step_{step:08d}")
         with open(os.path.join(path, "manifest.json")) as f:
             manifest = json.load(f)
         data = np.load(os.path.join(path, "arrays.npz"))
-        flat_like, treedef = jax.tree_util.tree_flatten_with_path(like)
+        if bits is not None and shardings is not None:
+            raise ValueError("restore(bits=...) does not compose with "
+                             "shardings")
+        is_packed_leaf = (None if bits is None else
+                          (lambda x: isinstance(x, PackedGSETensor)))
+        flat_like, treedef = jax.tree_util.tree_flatten_with_path(
+            like, is_leaf=is_packed_leaf)
         shard_flat = (jax.tree_util.tree_leaves(shardings)
                       if shardings is not None else [None] * len(flat_like))
         leaves = []
@@ -162,12 +188,30 @@ class CheckpointManager:
             slash_key = "/".join(_path_str(p) for p in pth)
             key = slash_key.replace("/", "__")
             lmeta = manifest["leaves"].get(slash_key, {})
+            if bits is not None and isinstance(leaf, PackedGSETensor):
+                # plane-prefix load: slice the stored word stream to its
+                # first b planes while it is still a host npz array — the
+                # wide stream is never device_put
+                wkey = (slash_key + "/mantissa_words").replace("/", "__")
+                ekey = (slash_key + "/exponent_words").replace("/", "__")
+                words = plane_prefix_words(data[wkey], leaf.bits, bits)
+                leaves.append(PackedGSETensor(
+                    jax.device_put(jnp.asarray(words)),
+                    jax.device_put(jnp.asarray(data[ekey])),
+                    leaf.stored_bits, leaf.group_size, leaf.shape, bits))
+                continue
             if "gse" in lmeta:          # stored bit-packed: dequantize back
+                sb = lmeta["gse"]["bits"]
+                words = data[key + "#gsem"]
+                ab = sb
+                if bits is not None and bits < sb:
+                    words = plane_prefix_words(words, sb, bits)
+                    ab = bits
                 p = PackedGSETensor(
-                    jnp.asarray(data[key + "#gsem"]),
+                    jnp.asarray(words),
                     jnp.asarray(data[key + "#gsee"]),
-                    lmeta["gse"]["bits"], lmeta["gse"]["group"],
-                    tuple(lmeta["shape"]))
+                    sb, lmeta["gse"]["group"],
+                    tuple(lmeta["shape"]), ab)
                 arr = np.asarray(p.dequantize(jnp.float32))
                 if hasattr(leaf, "dtype"):
                     arr = arr.astype(leaf.dtype)
@@ -185,6 +229,5 @@ class CheckpointManager:
                 leaves.append(jax.device_put(arr, shd))
             else:
                 leaves.append(jax.device_put(arr))
-        tree = jax.tree_util.tree_unflatten(
-            jax.tree_util.tree_structure(like), leaves)
+        tree = jax.tree_util.tree_unflatten(treedef, leaves)
         return tree, manifest["metadata"], manifest["step"]

@@ -29,34 +29,52 @@ Conventions
   ``nbytes`` matches :func:`gse_bits_per_value` (the paper's memory claim as
   observable bytes, not a spreadsheet).
 
-Packed wire/storage format
---------------------------
+Packed wire/storage format (v2: plane-major, MSB-first)
+-------------------------------------------------------
 Mantissas are packed along the **last axis** in chunks of 32 values; every
 leading axis is preserved, so a ``(N, K)`` weight packs to a
-``(N, ceil(K/32) * bits)`` uint32 array that Pallas kernels can tile with
+``(N, bits * ceil(K/32))`` uint32 array that Pallas kernels can tile with
 ordinary BlockSpecs. When the last axis is *not* a multiple of 32 (e.g. a
 KV-cache head_dim of 8), the fully flattened value stream is packed into a
 1-D word array instead — at most 31 values of zero padding total, keeping
 storage at ~``bits`` bits/value for any shape. The choice is determined by
 the stored logical shape, so no extra metadata is needed to unpack.
 
-Within one 32-value chunk the layout is **bit-planar**: the chunk emits
-``bits`` uint32 words, ordered plane 0 (LSB) first; plane word ``j`` holds
-bit ``j`` of all 32 values, with value ``i`` of the chunk at bit position
-(lane) ``i`` of the word. Mantissas are stored offset-binary,
-``u = m + qmax`` in ``[0, 2*qmax]``, so no sign handling is needed in the
-shift/mask unpack. The planar layout keeps every b-bit field word-aligned
-(no field ever straddles a word), which is what makes the on-chip unpack a
-pure vectorized shift/mask — no gathers.
+The layout is **bit-planar and plane-major**: plane ``p`` holds mantissa
+bit ``bits - 1 - p`` (plane 0 = MSB) of all values, with value ``i`` of a
+chunk at bit position (lane) ``i`` of the plane's uint32 word. Words are
+ordered *plane-major* along the packed axis: word index
+``p * ceil(K/32) + c`` is plane ``p`` of chunk ``c``, i.e. the packed axis
+is a ``(bits, chunks)`` array flattened row-major. Mantissas are stored
+offset-binary with offset ``2^(bits-1)``: ``u = m + 2^(bits-1)`` in
+``[2^(bits-1) - qmax, 2^(bits-1) + qmax]``, so no sign handling is needed
+in the shift/mask unpack. The planar layout keeps every b-bit field
+word-aligned (no field ever straddles a word), which is what makes the
+on-chip unpack a pure vectorized shift/mask — no gathers.
+
+The MSB-first plane-major order + power-of-two offset make the format
+**prefix-truncatable** (docs/gse-format.md §7): the first
+``b * ceil(K/32)`` words of a ``stored``-bit stream are, verbatim, a valid
+``b``-bit plane-major stream whose decoded mantissas are the
+floor-truncation ``m >> (stored - b)`` of the stored mantissas — because
+``(m + 2^(s-1)) >> t == (m >> t) + 2^(b-1)`` exactly for ``t = s - b``.
+Reading a prefix is therefore a *view* (:meth:`PackedGSETensor.with_bits`),
+not a re-quantization; consumers compensate by adding ``t`` to the shared
+exponents (``(m >> t) * 2^(e+t) ~= m * 2^e``). Truncated mantissas live in
+the *asymmetric* range ``[-2^(b-1), 2^(b-1) - 1]`` (one step past ``-qmax``
+when the floor lands there), and shifted working exponents may exceed
+``EXP_MAX`` — both are fine in the int8/fp32 working form but must never be
+re-packed through the 5-bit exponent field without re-quantizing.
 
 Exponents are biased to ``[0, 31]`` (``u = e + EXP_BIAS``), flattened to
-1-D, and packed with the identical chunk-of-32 / 5-plane scheme.
+1-D, and packed with the identical chunk-of-32 / 5-plane plane-major
+scheme.
 
 Word endianness: lane ``i`` is bit ``i`` counting from the LSB of the
 uint32 (little-endian within the word); words are stored in increasing
-plane order within a chunk and increasing chunk order along the axis. A
-serialized stream of the little-endian uint32 words is therefore fully
-specified and portable.
+chunk order within a plane and increasing plane order (MSB plane first)
+along the axis. A serialized stream of the little-endian uint32 words is
+therefore fully specified and portable.
 
 Converters: :func:`gse_pack` / :func:`gse_unpack` (jnp, any backend) are
 bit-exact inverses; ``repro.kernels.gse_unpack`` and the fused
@@ -85,6 +103,46 @@ def qmax_for_bits(bits: int) -> int:
     if not 2 <= bits <= 8:
         raise ValueError(f"GSE bits must be in [2, 8], got {bits}")
     return (1 << (bits - 1)) - 1
+
+
+def mantissa_offset(bits: int) -> int:
+    """Offset-binary bias of the packed mantissa field: ``2^(bits-1)``.
+
+    A power of two (NOT ``qmax``) so that plane-prefix truncation commutes
+    with the offset: ``(m + 2^(s-1)) >> t == (m >> t) + 2^(b-1)`` for
+    ``b = s - t`` — the identity that makes :meth:`PackedGSETensor.with_bits`
+    a pure word slice. Every pack/unpack body (core, kernels, oracles) must
+    use this one definition.
+    """
+    return 1 << (bits - 1)
+
+
+def mantissa_abs_max(bits: int, truncated: bool = False) -> int:
+    """Largest |mantissa| a b-bit stream can decode to.
+
+    Natively packed streams are symmetric (``qmax``); plane-prefix views
+    floor-truncate and can land on ``-2^(b-1)`` (= ``-(qmax+1)``), so
+    accumulator-depth guards over possibly-truncated operands must budget
+    one extra step of magnitude.
+    """
+    return qmax_for_bits(bits) + (1 if truncated else 0)
+
+
+def plane_prefix_words(words, stored_bits: int, b: int, chunks: int = None):
+    """Slice the first ``b`` planes of a plane-major packed word axis.
+
+    ``words`` (..., stored_bits * chunks) uint32 -> (..., b * chunks): the
+    zero-copy plane-prefix read underlying
+    :meth:`PackedGSETensor.with_bits`. This is THE one sanctioned raw word
+    slice — every other module must go through it (or through ``with_bits``)
+    so the prefix semantics live in a single place (gse-lint R5).
+    """
+    if not 2 <= b <= stored_bits:
+        raise ValueError(
+            f"prefix bits {b} outside [2, stored_bits={stored_bits}]")
+    if chunks is None:
+        chunks = words.shape[-1] // stored_bits
+    return words[..., : b * chunks]
 
 
 def effective_group_size(k: int, group_size: int) -> int:
@@ -232,17 +290,24 @@ def pack_unsigned(u: jax.Array, nbits: int, *,
     if int32_shifts:
         ug = jax.lax.bitcast_convert_type(ug, jnp.int32)
     lanes = jnp.arange(_PACK_CHUNK, dtype=wd)
-    planes = [jnp.sum(((ug >> wd(j)) & wd(1)) << lanes, axis=-1, dtype=wd)
-              for j in range(nbits)]
-    words = jnp.stack(planes, axis=-1)            # (..., chunks, nbits)
+    # plane p carries value bit (nbits-1-p): MSB plane first, so a word
+    # prefix of the stream is the top-b-bits truncation (module docstring)
+    planes = [jnp.sum(((ug >> wd(nbits - 1 - p)) & wd(1)) << lanes,
+                      axis=-1, dtype=wd)
+              for p in range(nbits)]
+    words = jnp.stack(planes, axis=-2)            # (..., nbits, chunks)
     if int32_shifts:
         words = jax.lax.bitcast_convert_type(words, jnp.uint32)
-    return words.reshape(*u.shape[:-1], chunks * nbits)
+    return words.reshape(*u.shape[:-1], nbits * chunks)
 
 
 def unpack_unsigned(words: jax.Array, nbits: int, k: int, *,
                     int32_shifts: bool = False) -> jax.Array:
-    """Inverse of :func:`pack_unsigned`: (..., ceil(k/32)*nbits) -> (..., k).
+    """Inverse of :func:`pack_unsigned`: (..., nbits*ceil(k/32)) -> (..., k).
+
+    ``nbits`` is the number of planes present in ``words`` — hand it the
+    first ``b * chunks`` words of a wider stream with ``nbits=b`` and it
+    decodes the top-b-bits truncation (the plane-prefix view).
 
     ``int32_shifts=True``: same math on bitcast int32 words (see
     :func:`pack_unsigned`); the ``& 1`` mask makes the arithmetic
@@ -251,14 +316,14 @@ def unpack_unsigned(words: jax.Array, nbits: int, k: int, *,
     words = jnp.asarray(words, jnp.uint32)
     chunks = words.shape[-1] // nbits
     wd = jnp.int32 if int32_shifts else jnp.uint32
-    w = words.reshape(*words.shape[:-1], chunks, nbits)
+    w = words.reshape(*words.shape[:-1], nbits, chunks)
     if int32_shifts:
         w = jax.lax.bitcast_convert_type(w, jnp.int32)
     lanes = jnp.arange(_PACK_CHUNK, dtype=wd)
     u = jnp.zeros((*words.shape[:-1], chunks, _PACK_CHUNK), wd)
-    for j in range(nbits):
-        bits_j = (w[..., j][..., None] >> lanes) & wd(1)
-        u = u | (bits_j << wd(j))
+    for p in range(nbits):
+        bits_p = (w[..., p, :][..., None] >> lanes) & wd(1)
+        u = u | (bits_p << wd(nbits - 1 - p))
     u = u.reshape(*words.shape[:-1], chunks * _PACK_CHUNK)
     # unpacked fields are < 2**16, so the int32 path is nonneg: plain astype
     return u.astype(jnp.uint32)[..., :k]
@@ -266,18 +331,26 @@ def unpack_unsigned(words: jax.Array, nbits: int, k: int, *,
 
 def pack_mantissas(m: jax.Array, bits: int, *,
                    int32_shifts: bool = False) -> jax.Array:
-    """int8 mantissas (..., K) -> offset-binary packed uint32 words."""
-    qmax = qmax_for_bits(bits)
-    u = (m.astype(jnp.int32) + qmax).astype(jnp.uint32)
+    """int8 mantissas (..., K) -> offset-binary packed uint32 words.
+
+    Offset is ``mantissa_offset(bits)`` = 2^(bits-1), the power-of-two
+    choice that makes plane-prefix truncation exact (module docstring).
+    """
+    u = (m.astype(jnp.int32) + mantissa_offset(bits)).astype(jnp.uint32)
     return pack_unsigned(u, bits, int32_shifts=int32_shifts)
 
 
 def unpack_mantissas(words: jax.Array, bits: int, k: int, *,
                      int32_shifts: bool = False) -> jax.Array:
-    """Packed words -> int8 mantissas (..., k)."""
-    qmax = qmax_for_bits(bits)
+    """Packed words -> int8 mantissas (..., k).
+
+    ``bits`` is the plane count of ``words``: decoding the first
+    ``b * chunks`` words of a wider stream with ``bits=b`` yields the
+    floor-truncated mantissas ``m >> (stored - b)`` — range
+    ``[-2^(b-1), 2^(b-1)-1]`` (asymmetric; see :func:`mantissa_abs_max`).
+    """
     u = unpack_unsigned(words, bits, k, int32_shifts=int32_shifts)
-    return (u.astype(jnp.int32) - qmax).astype(jnp.int8)
+    return (u.astype(jnp.int32) - mantissa_offset(bits)).astype(jnp.int8)
 
 
 def pack_exponents(e: jax.Array) -> jax.Array:
@@ -300,16 +373,46 @@ class PackedGSETensor:
 
     Attributes:
       mantissa_words: uint32, shape = source shape with last dim replaced by
-        ``ceil(K/32) * bits`` (bit-planar chunks, see module docstring).
-      exponent_words: uint32 1-D, ``ceil(n_groups/32) * 5`` words.
-      bits / group_size: format metadata (static).
+        ``active_bits * ceil(K/32)`` (plane-major bit planes, see module
+        docstring) — a plane-prefix *view* carries only its active planes.
+      exponent_words: uint32 1-D, ``ceil(n_groups/32) * 5`` words. Always
+        the full-width exponents: truncation shares them (that is the whole
+        point — the prefix reads against the *same* shared exponent).
+      stored_bits: mantissa width the stream was packed at (static).
+      group_size: values per shared exponent (static).
       shape: logical (unpacked) mantissa shape (static).
+      active_bits: planes this handle reads (static); ``None`` at
+        construction means "all of them". ``active_bits < stored_bits``
+        marks a plane-prefix view: decoded mantissas are the stored ones
+        floor-truncated by ``exp_shift = stored_bits - active_bits`` and
+        consumers add ``exp_shift`` to the shared exponents.
     """
     mantissa_words: jax.Array
     exponent_words: jax.Array
-    bits: int
+    stored_bits: int
     group_size: int
     shape: Tuple[int, ...]
+    active_bits: int | None = None
+
+    def __post_init__(self):
+        if self.active_bits is None:
+            object.__setattr__(self, "active_bits", self.stored_bits)
+        if not 2 <= self.active_bits <= self.stored_bits:
+            raise ValueError(
+                f"active_bits {self.active_bits} outside "
+                f"[2, stored_bits={self.stored_bits}]")
+
+    @property
+    def bits(self) -> int:
+        """Width this handle *reads* at (== ``active_bits``): qmax,
+        bytes-moved, and kernel plane counts all follow the active width."""
+        return self.active_bits
+
+    @property
+    def exp_shift(self) -> int:
+        """Exponent compensation of the plane-prefix view: 0 for a
+        full-width handle, ``stored_bits - active_bits`` for a view."""
+        return self.stored_bits - self.active_bits
 
     @property
     def exponent_shape(self) -> Tuple[int, ...]:
@@ -317,20 +420,54 @@ class PackedGSETensor:
 
     @property
     def nbytes(self) -> int:
-        """Live packed bytes — the quantity the paper's Tab. 1 claims."""
+        """Live packed bytes — the quantity the paper's Tab. 1 claims.
+        A plane-prefix view counts only its active planes (the bytes a
+        consumer actually moves)."""
         return int(self.mantissa_words.size) * 4 \
             + int(self.exponent_words.size) * 4
+
+    def with_bits(self, b: int) -> "PackedGSETensor":
+        """Zero-copy plane-prefix view at ``b <= active_bits`` bits.
+
+        A pure word slice: the plane-major layout puts the ``b`` most
+        significant planes of every chunk in the first ``b * chunks`` words
+        of the packed axis, so the view is ``mantissa_words[..., :b*chunks]``
+        sharing the exponent words — no unpack, no re-quantization, no new
+        buffer beyond the slice. Decoding it yields the floor-truncation
+        ``m >> (stored_bits - b)`` against exponents ``e + (stored_bits-b)``
+        (see :func:`gse_unpack`). Views compose: ``.with_bits(6).with_bits(4)
+        == .with_bits(4)``. For the re-quantization tier (round-to-nearest
+        at b bits, fresh exponents) use :meth:`requantize` — docs
+        gse-format.md §7 tabulates the accuracy gap.
+        """
+        if not 2 <= b <= self.active_bits:
+            raise ValueError(f"with_bits({b}): need 2 <= b <= active_bits "
+                             f"({self.active_bits})")
+        if b == self.active_bits:
+            return self
+        words = plane_prefix_words(self.mantissa_words, self.active_bits, b)
+        return PackedGSETensor(words, self.exponent_words, self.stored_bits,
+                               self.group_size, self.shape, b)
+
+    def requantize(self, b: int) -> "PackedGSETensor":
+        """The *other* tier: fresh round-to-nearest ``b``-bit quantization
+        (new exponents, materializes the values). Strictly more accurate
+        than :meth:`with_bits` (floor vs nearest, exponents re-fit) at the
+        cost of a full dequant/requant pass — use it offline, use
+        ``with_bits`` on the serving read path."""
+        return gse_pack(gse_quantize(self.dequantize(), b, self.group_size))
 
     def tree_flatten_with_keys(self):
         return (
             ((jax.tree_util.GetAttrKey("mantissa_words"), self.mantissa_words),
              (jax.tree_util.GetAttrKey("exponent_words"), self.exponent_words)),
-            (self.bits, self.group_size, tuple(self.shape)),
+            (self.stored_bits, self.active_bits, self.group_size,
+             tuple(self.shape)),
         )
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(children[0], children[1], aux[0], aux[1], aux[2])
+        return cls(children[0], children[1], aux[0], aux[2], aux[3], aux[1])
 
     def unpack(self) -> GSETensor:
         return gse_unpack(self)
@@ -364,15 +501,25 @@ def gse_pack(t: GSETensor) -> PackedGSETensor:
 
 @jax.jit
 def gse_unpack(p: PackedGSETensor) -> GSETensor:
-    """PackedGSETensor -> GSETensor, inverse of :func:`gse_pack`."""
+    """PackedGSETensor -> GSETensor, inverse of :func:`gse_pack`.
+
+    For a plane-prefix view (``active_bits < stored_bits``) this decodes
+    the truncated mantissas ``m >> exp_shift`` and returns the shared
+    exponents with ``exp_shift`` already folded in (``e + exp_shift``), so
+    ``.dequantize()`` of a view is directly the truncated values. Folded
+    exponents may exceed ``EXP_MAX`` (never re-pack them through the 5-bit
+    field) and truncated mantissas may reach ``-2^(b-1)``.
+    """
     if p.shape[-1] % _PACK_CHUNK == 0:
-        m = unpack_mantissas(p.mantissa_words, p.bits, p.shape[-1])
+        m = unpack_mantissas(p.mantissa_words, p.active_bits, p.shape[-1])
     else:
         n = int(np.prod(p.shape))
-        m = unpack_mantissas(p.mantissa_words, p.bits, n)
+        m = unpack_mantissas(p.mantissa_words, p.active_bits, n)
     m = m.reshape(p.shape)
     e = unpack_exponents(p.exponent_words, p.exponent_shape)
-    return GSETensor(m, e, p.bits, p.group_size)
+    if p.exp_shift:
+        e = (e.astype(jnp.int32) + p.exp_shift).astype(jnp.int8)
+    return GSETensor(m, e, p.active_bits, p.group_size)
 
 
 def _group_reshape(x: jax.Array, group_size: int) -> jax.Array:

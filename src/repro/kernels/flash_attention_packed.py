@@ -65,7 +65,7 @@ from jax.experimental import pallas as pl
 
 from repro.core.gse import (_PACK_CHUNK, DEFAULT_GROUP, effective_group_size,
                             exp2_int, gse_quantize, pack_mantissas,
-                            unpack_mantissas)
+                            plane_prefix_words, unpack_mantissas)
 from repro.kernels.flash_attention import (NEG_INF, attention_scores,
                                            online_softmax_update_scores,
                                            tile_position_mask)
@@ -143,16 +143,31 @@ def dequant_q_rows(qm: jax.Array, qe: jax.Array, group: int):
 
 
 def dequant_kv_rows(words: jax.Array, exps: jax.Array, head_dim: int,
-                    dtype=jnp.float32, int32_shifts: bool = False):
+                    dtype=jnp.float32, int32_shifts: bool = False,
+                    trunc=None):
     """Row-planar planes -> values (..., D). Pure jnp shift/mask + exact
     power-of-two rescale; runs host-side and on VMEM tiles inside the
-    kernel (the single definition of the row dequant)."""
+    kernel (the single definition of the row dequant).
+
+    ``trunc`` (traced int32, broadcastable against the row axes) reads the
+    rows at a *dynamically* narrower width: mantissas floor-shift right by
+    ``trunc`` and exponents compensate by ``+trunc`` — bit-identical to
+    decoding a static ``with_bits`` plane-prefix view at ``bits - trunc``
+    (the ``(u - 2^(s-1)) >> t == (u >> t) - 2^(b-1)`` identity), but usable
+    when different rows of one fused call read different widths (the
+    mixed-``kv_bits`` decode lanes of the serving engine). Unlike the
+    static prefix it cannot skip HBM traffic for the dropped planes."""
     d32 = -(-head_dim // _PACK_CHUNK) * _PACK_CHUNK
     bits = kv_row_bits(words.shape[-1], head_dim)
     m = unpack_mantissas(words, bits, d32,
                          int32_shifts=int32_shifts)[..., :head_dim]
+    e32 = exps.astype(jnp.int32)
+    if trunc is not None:
+        t = jnp.asarray(trunc, jnp.int32)
+        m = jnp.right_shift(m.astype(jnp.int32), t)   # arithmetic on int32
+        e32 = e32 + t
     g = head_dim // exps.shape[-1]
-    scale = exp2_int(exps.astype(jnp.int32))          # exact 2^e, fp32
+    scale = exp2_int(e32)                             # exact 2^e, fp32
     vals = m.astype(jnp.float32).reshape(*m.shape[:-1], exps.shape[-1], g)
     return (vals * scale[..., None]).reshape(*m.shape[:-1],
                                              head_dim).astype(dtype)
@@ -196,17 +211,29 @@ def tail_position_mask(bq: int, tail_len: int, qi, causal: bool,
 
 
 def _kv_tile(ref, paged: bool):
-    """One packed K/V tile from its block ref: (1, bk, ·) planar blocks, or
-    (1, page, 1, ·) page blocks (paged grid — the kv-head axis sits after
-    the page-row axis in the pool layout)."""
+    """One packed K/V exponent tile from its block ref: (1, bk, G) planar
+    blocks, or (1, page, 1, G) page blocks (paged grid — the kv-head axis
+    sits after the page-row axis in the pool layout)."""
     return ref[0][:, 0] if paged else ref[0]
+
+
+def _kv_words_tile(ref, paged: bool):
+    """One packed K/V *word* tile from its plane-axis block ref —
+    (1, bk, ab, C) planar or (1, page, 1, ab, C) paged — flattened back to
+    the contiguous plane-major (rows, ab*C) row stream the dequant
+    expects. The plane axis is how narrow reads skip HBM traffic: the
+    BlockSpec pins it to the first ``active_bits`` planes, so the dropped
+    planes of a prefix read are never fetched."""
+    t = ref[0][:, 0] if paged else ref[0]
+    return t.reshape(t.shape[0], t.shape[1] * t.shape[2])
 
 
 def _flash_packed_kernel(qoff_ref, q_ref, kw_ref, ke_ref, vw_ref, ve_ref,
                          *rest, head_dim: int, groups: int, bq: int,
                          bk: int, k_steps: int, tail_len: int, causal: bool,
                          window: int, scale: float, int32_shifts: bool,
-                         int_mac: bool, bits: int, paged: bool = False):
+                         int_mac: bool, bits: int, paged: bool = False,
+                         trunc_ref=None, has_trunc: bool = False):
     if tail_len:
         kt_ref, vt_ref, o_ref, m_scr, l_scr, acc_scr = rest
     else:
@@ -217,6 +244,11 @@ def _flash_packed_kernel(qoff_ref, q_ref, kw_ref, ke_ref, vw_ref, ve_ref,
     # reads its own scalar — the scalar-offset case is the same vector with
     # one value broadcast, so the kernel body is offset-layout-agnostic
     q_offset = qoff_ref[pl.program_id(0)]
+    # per-sequence dynamic truncation (mixed-precision decode lanes): each
+    # (b, kv) program reads its own plane-shift scalar from SMEM and the
+    # dequant floor-shifts mantissas / compensates exponents in VMEM —
+    # bit-identical to a static plane-prefix read at (bits - trunc)
+    trunc = trunc_ref[pl.program_id(0)] if has_trunc else None
 
     @pl.when(ki == 0)
     def _init():
@@ -226,15 +258,17 @@ def _flash_packed_kernel(qoff_ref, q_ref, kw_ref, ke_ref, vw_ref, ve_ref,
 
     # tile-local dequant: only this (bk, D) K/V tile ever exists unpacked,
     # and only in VMEM — HBM holds b-bit words + int8 exponents
-    v = dequant_kv_rows(_kv_tile(vw_ref, paged), _kv_tile(ve_ref, paged),
-                        head_dim, int32_shifts=int32_shifts)
+    v = dequant_kv_rows(_kv_words_tile(vw_ref, paged),
+                        _kv_tile(ve_ref, paged), head_dim,
+                        int32_shifts=int32_shifts, trunc=trunc)
     q = q_ref[0].reshape(groups * bq, head_dim).astype(jnp.float32)
     if int_mac:
         # exact tier: quantize q once per tile at the cache's bits/group,
         # keep K as raw int8 mantissas, and run the score GEMM as the
         # forward kernel's group-batched int8 MXU MAC + rank-1 rescale
         # (head_dim is the grouping axis). The V/PV GEMM stays fp32.
-        km = unpack_kv_row_mantissas(_kv_tile(kw_ref, paged), head_dim,
+        km = unpack_kv_row_mantissas(_kv_words_tile(kw_ref, paged),
+                                     head_dim,
                                      int32_shifts=int32_shifts)  # (bk, D)
         g_sz = head_dim // ke_ref.shape[-1]
         qm, qe = quantize_tile(q, bits, g_sz)
@@ -246,9 +280,10 @@ def _flash_packed_kernel(qoff_ref, q_ref, kw_ref, ke_ref, vw_ref, ve_ref,
         # tail columns (when present) attend through the dequantized Q(q)
         # in fp32, as their own update — see the int_mac tail branch below
     else:
-        k = dequant_kv_rows(_kv_tile(kw_ref, paged),
+        k = dequant_kv_rows(_kv_words_tile(kw_ref, paged),
                             _kv_tile(ke_ref, paged), head_dim,
-                            int32_shifts=int32_shifts)      # (bk, D) fp32
+                            int32_shifts=int32_shifts,
+                            trunc=trunc)                    # (bk, D) fp32
 
         def packed_scores():
             return attention_scores(q, k, scale)
@@ -320,14 +355,16 @@ def _flash_packed_kernel(qoff_ref, q_ref, kw_ref, ke_ref, vw_ref, ve_ref,
 
 @functools.partial(jax.jit,
                    static_argnames=("causal", "window", "bq", "bk",
-                                    "interpret", "int32_shifts", "int_mac"))
+                                    "interpret", "int32_shifts", "int_mac",
+                                    "kv_active_bits"))
 def flash_attention_packed_pallas(q, k_words, k_exp, v_words, v_exp,
                                   causal: bool = True, window: int = 0,
                                   q_offset=0, bq: int = DEFAULT_BQ,
                                   bk: int = DEFAULT_BK, k_tail=None,
                                   v_tail=None, interpret: bool = True,
                                   int32_shifts: bool = False,
-                                  int_mac: bool = False):
+                                  int_mac: bool = False,
+                                  kv_active_bits: int | None = None):
     """q (BH, T, D) float (MHA) or (B*Kv, G, T, D) (GQA, folded by
     kv-head); k/v planes (BH|B*Kv, S, W) uint32 + (·, S, G) int8
     (row-planar packed layout) -> same leading layout as q.
@@ -349,19 +386,36 @@ def flash_attention_packed_pallas(q, k_words, k_exp, v_words, v_exp,
     grouping axis, so the forward matmul's exact rank-1-rescale recipe
     applies — exact tier, bit-equal to the grouped fp32 score oracle);
     tail columns attend through the dequantized Q(q) in fp32.
+
+    ``kv_active_bits`` (static, default: the cache's stored width) reads
+    the plane-prefix view: the K/V BlockSpecs pin the plane axis to the
+    first ``active_bits`` planes of every row, so the dropped planes are
+    never fetched from HBM, and the tile math sees the floor-truncated
+    mantissas against wrapper-compensated exponents — bit-identical to
+    attending a ``with_bits(active_bits)`` re-pack of the cache.
     """
     if q.ndim == 3:                           # MHA layout: group size 1
         o = flash_attention_packed_pallas(
             q[:, None], k_words, k_exp, v_words, v_exp, causal=causal,
             window=window, q_offset=q_offset, bq=bq, bk=bk, k_tail=k_tail,
             v_tail=v_tail, interpret=interpret, int32_shifts=int32_shifts,
-            int_mac=int_mac)
+            int_mac=int_mac, kv_active_bits=kv_active_bits)
         return o[:, 0]
     bkv, groups, t, d = q.shape
     s_len = k_words.shape[1]
     wpr, gexp = k_words.shape[-1], k_exp.shape[-1]
-    assert kv_row_bits(wpr, d) and v_words.shape[-1] == wpr, (
+    bits = kv_row_bits(wpr, d)
+    assert v_words.shape[-1] == wpr, (
         "packed row width mismatch", k_words.shape, v_words.shape, d)
+    ab = bits if kv_active_bits is None else kv_active_bits
+    if not 2 <= ab <= bits:
+        raise ValueError(f"kv_active_bits {ab} outside [2, bits={bits}]")
+    chunks = wpr // bits
+    if ab != bits:
+        # fold the view's exponent compensation once, outside the kernel —
+        # the tile bodies stay width-agnostic (max 15 + 6 fits int8)
+        k_exp = (k_exp.astype(jnp.int32) + (bits - ab)).astype(jnp.int8)
+        v_exp = (v_exp.astype(jnp.int32) + (bits - ab)).astype(jnp.int8)
     bq = min(bq, t)
     bk = min(bk, s_len)
     assert t % bq == 0 and s_len % bk == 0, (t, bq, s_len, bk)
@@ -372,16 +426,20 @@ def flash_attention_packed_pallas(q, k_words, k_exp, v_words, v_exp,
         _flash_packed_kernel, head_dim=d, groups=groups, bq=bq, bk=bk,
         k_steps=k_steps, tail_len=tail_len, causal=causal, window=window,
         scale=d ** -0.5, int32_shifts=int32_shifts, int_mac=int_mac,
-        bits=kv_row_bits(wpr, d))
+        bits=ab)
     from jax.experimental.pallas import tpu as pltpu
+    # plane-axis views of the word streams: blocks pin the plane axis to
+    # the first `ab` planes, so a prefix read moves ab/bits of the bytes
+    kw4 = k_words.reshape(bkv, s_len, bits, chunks)
+    vw4 = v_words.reshape(bkv, s_len, bits, chunks)
     in_specs = [
         pl.BlockSpec((1, groups, bq, d), lambda b, i, j, off: (b, 0, i, 0)),
-        pl.BlockSpec((1, bk, wpr), lambda b, i, j, off: (b, j, 0)),
+        pl.BlockSpec((1, bk, ab, chunks), lambda b, i, j, off: (b, j, 0, 0)),
         pl.BlockSpec((1, bk, gexp), lambda b, i, j, off: (b, j, 0)),
-        pl.BlockSpec((1, bk, wpr), lambda b, i, j, off: (b, j, 0)),
+        pl.BlockSpec((1, bk, ab, chunks), lambda b, i, j, off: (b, j, 0, 0)),
         pl.BlockSpec((1, bk, gexp), lambda b, i, j, off: (b, j, 0)),
     ]
-    operands = [q, k_words, k_exp, v_words, v_exp]
+    operands = [q, kw4, k_exp, vw4, v_exp]
     if tail_len:
         in_specs += [
             pl.BlockSpec((1, tail_len, d), lambda b, i, j, off: (b, 0, 0)),
@@ -422,12 +480,15 @@ def flash_attention_packed_pallas(q, k_words, k_exp, v_words, v_exp,
 # ---------------------------------------------------------------------------
 
 
-def _flash_paged_kernel(pt_ref, qoff_ref, *rest, **kw):
+def _flash_paged_kernel(pt_ref, qoff_ref, trunc_ref, *rest, **kw):
     """Page-pool kernel body: the page table ref is consumed by the K/V
-    BlockSpec index maps (physical page selection); the softmax body is the
-    planar kernel's, walking logical pages as its KV tiles."""
+    BlockSpec index maps (physical page selection); the per-sequence
+    truncation vector rides the same SMEM lane as the offsets (mixed-
+    precision decode lanes); the softmax body is the planar kernel's,
+    walking logical pages as its KV tiles."""
     del pt_ref
-    return _flash_packed_kernel(qoff_ref, *rest, paged=True, **kw)
+    return _flash_packed_kernel(qoff_ref, *rest, paged=True,
+                                trunc_ref=trunc_ref, **kw)
 
 
 def gather_pages(pool, page_table):
@@ -442,14 +503,17 @@ def gather_pages(pool, page_table):
 
 @functools.partial(jax.jit,
                    static_argnames=("causal", "window", "bq", "interpret",
-                                    "int32_shifts", "int_mac"))
+                                    "int32_shifts", "int_mac",
+                                    "kv_active_bits"))
 def flash_attention_paged_pallas(q, k_words, k_exp, v_words, v_exp,
                                  page_table, q_offset=0,
                                  causal: bool = True, window: int = 0,
                                  bq: int = DEFAULT_BQ, k_tail=None,
                                  v_tail=None, interpret: bool = True,
                                  int32_shifts: bool = False,
-                                 int_mac: bool = False):
+                                 int_mac: bool = False,
+                                 kv_active_bits: int | None = None,
+                                 kv_trunc=None):
     """q (BH, T, D) (MHA) or (B*Kv, G, T, D) (GQA, folded by kv-head);
     K/V pools (P, page, Kv, ·) in the paged row-planar layout
     (docs/gse-format.md §4: the S axis of the planar planes carved into
@@ -467,21 +531,44 @@ def flash_attention_paged_pallas(q, k_words, k_exp, v_words, v_exp,
     dequant, GQA walk, fp tails and ``int_mac`` are the planar kernel's
     (shared body) — bit-exact vs the gather-then-planar fallback at
     ``k_chunk == page``.
+
+    Progressive precision: ``kv_active_bits`` (static) reads the whole
+    pool at a narrower width via the plane-prefix BlockSpec (dropped
+    planes never leave HBM); ``kv_trunc`` (traced — an int or per-sequence
+    (B,) int32 vector of *extra plane shifts below the active width*)
+    rides the scalar-prefetch lane beside the page table and offsets, so
+    one fused decode block serves lanes reading the same pool at
+    different effective widths (sequence i decodes at ``active_bits -
+    kv_trunc[i]``). ``kv_trunc`` is incompatible with ``int_mac`` (the
+    int8 score MAC would need per-lane requantized q).
     """
     if q.ndim == 3:                           # MHA layout: group size 1
         o = flash_attention_paged_pallas(
             q[:, None], k_words, k_exp, v_words, v_exp, page_table,
             q_offset=q_offset, causal=causal, window=window, bq=bq,
             k_tail=k_tail, v_tail=v_tail, interpret=interpret,
-            int32_shifts=int32_shifts, int_mac=int_mac)
+            int32_shifts=int32_shifts, int_mac=int_mac,
+            kv_active_bits=kv_active_bits, kv_trunc=kv_trunc)
         return o[:, 0]
     bkv, groups, t, d = q.shape
     _, page, kv_heads, wpr = k_words.shape
     gexp = k_exp.shape[-1]
     nseq, maxp = page_table.shape
     assert nseq * kv_heads == bkv, (page_table.shape, kv_heads, bkv)
-    assert kv_row_bits(wpr, d) and v_words.shape[-1] == wpr, (
+    bits = kv_row_bits(wpr, d)
+    assert v_words.shape[-1] == wpr, (
         "packed row width mismatch", k_words.shape, v_words.shape, d)
+    ab = bits if kv_active_bits is None else kv_active_bits
+    if not 2 <= ab <= bits:
+        raise ValueError(f"kv_active_bits {ab} outside [2, bits={bits}]")
+    has_trunc = kv_trunc is not None
+    if has_trunc and int_mac:
+        raise ValueError("int_mac with traced kv_trunc is unsupported — "
+                         "use a static kv_active_bits instead")
+    chunks = wpr // bits
+    if ab != bits:
+        k_exp = (k_exp.astype(jnp.int32) + (bits - ab)).astype(jnp.int8)
+        v_exp = (v_exp.astype(jnp.int32) + (bits - ab)).astype(jnp.int8)
     bq = min(bq, t)
     assert t % bq == 0, (t, bq)
     tail_len = 0 if k_tail is None else k_tail.shape[1]
@@ -490,35 +577,43 @@ def flash_attention_paged_pallas(q, k_words, k_exp, v_words, v_exp,
         _flash_paged_kernel, head_dim=d, groups=groups, bq=bq, bk=page,
         k_steps=maxp, tail_len=tail_len, causal=causal, window=window,
         scale=d ** -0.5, int32_shifts=int32_shifts, int_mac=int_mac,
-        bits=kv_row_bits(wpr, d))
+        bits=ab, has_trunc=has_trunc)
     from jax.experimental.pallas import tpu as pltpu
 
-    def kv_map(b, i, j, pt, off):             # physical page of logical j
-        return (pt[b // kv_heads, j], 0, b % kv_heads, 0)
+    def kv_map(b, i, j, pt, off, tr):         # physical page of logical j
+        return (pt[b // kv_heads, j], 0, b % kv_heads, 0, 0)
 
+    # plane-axis pool views: page blocks pin the plane axis to the first
+    # `ab` planes (zero-copy narrow read of the shared pool)
+    kw5 = k_words.reshape(-1, page, kv_heads, bits, chunks)
+    vw5 = v_words.reshape(-1, page, kv_heads, bits, chunks)
     in_specs = [
         pl.BlockSpec((1, groups, bq, d),
-                     lambda b, i, j, pt, off: (b, 0, i, 0)),
-        pl.BlockSpec((1, page, 1, wpr), kv_map),
-        pl.BlockSpec((1, page, 1, gexp), kv_map),
-        pl.BlockSpec((1, page, 1, wpr), kv_map),
-        pl.BlockSpec((1, page, 1, gexp), kv_map),
+                     lambda b, i, j, pt, off, tr: (b, 0, i, 0)),
+        pl.BlockSpec((1, page, 1, ab, chunks), kv_map),
+        pl.BlockSpec((1, page, 1, gexp),
+                     lambda b, i, j, pt, off, tr:
+                     (pt[b // kv_heads, j], 0, b % kv_heads, 0)),
+        pl.BlockSpec((1, page, 1, ab, chunks), kv_map),
+        pl.BlockSpec((1, page, 1, gexp),
+                     lambda b, i, j, pt, off, tr:
+                     (pt[b // kv_heads, j], 0, b % kv_heads, 0)),
     ]
-    operands = [q, k_words, k_exp, v_words, v_exp]
+    operands = [q, kw5, k_exp, vw5, v_exp]
     if tail_len:
         in_specs += [
             pl.BlockSpec((1, tail_len, d),
-                         lambda b, i, j, pt, off: (b, 0, 0)),
+                         lambda b, i, j, pt, off, tr: (b, 0, 0)),
             pl.BlockSpec((1, tail_len, d),
-                         lambda b, i, j, pt, off: (b, 0, 0)),
+                         lambda b, i, j, pt, off, tr: (b, 0, 0)),
         ]
         operands += [k_tail, v_tail]
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=3,
         grid=grid,
         in_specs=in_specs,
         out_specs=pl.BlockSpec((1, groups, bq, d),
-                               lambda b, i, j, pt, off: (b, 0, i, 0)),
+                               lambda b, i, j, pt, off, tr: (b, 0, i, 0)),
         scratch_shapes=[
             pltpu.VMEM((groups * bq, 1), jnp.float32),
             pltpu.VMEM((groups * bq, 1), jnp.float32),
@@ -528,12 +623,19 @@ def flash_attention_paged_pallas(q, k_words, k_exp, v_words, v_exp,
     pt = jnp.asarray(page_table, jnp.int32)
     off = jnp.broadcast_to(jnp.asarray(q_offset, jnp.int32).reshape(-1),
                            (bkv,))
+    # per-sequence trunc vector -> one SMEM entry per (b, kv) program (the
+    # offset vector's layout); scalar/None broadcasts
+    trv = jnp.asarray(0 if kv_trunc is None else kv_trunc,
+                      jnp.int32).reshape(-1)
+    if trv.shape[0] == nseq and kv_heads > 1:
+        trv = jnp.repeat(trv, kv_heads)
+    tr = jnp.broadcast_to(trv, (bkv,))
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((bkv, groups, t, d), q.dtype),
         interpret=interpret,
-    )(pt, off, *operands)
+    )(pt, off, tr, *operands)
 
 
 # ---------------------------------------------------------------------------
@@ -547,14 +649,17 @@ def _pad_seq(x, pad):
 
 @functools.partial(jax.jit,
                    static_argnames=("causal", "window", "k_chunk",
-                                    "int32_shifts", "int_mac"))
+                                    "int32_shifts", "int_mac",
+                                    "kv_active_bits"))
 def flash_attention_packed_jnp(q, k_words, k_exp, v_words, v_exp,
                                causal: bool = True, window: int = 0,
                                q_offset=0, is_global=None,
                                k_tail=None, v_tail=None,
                                k_chunk: int = DEFAULT_BK,
                                int32_shifts: bool = False,
-                               int_mac: bool = False):
+                               int_mac: bool = False,
+                               kv_active_bits: int | None = None,
+                               kv_trunc=None):
     """q (B, T, H, D); planes (B, S, Kv, ·) -> (B, T, H, D).
 
     Per scan step exactly one (B, kc, Kv, D) K/V tile is dequantized —
@@ -570,10 +675,32 @@ def flash_attention_packed_jnp(q, k_words, k_exp, v_words, v_exp,
     quantized once to the cache's bits/group, per-group int MAC + rank-1
     rescale summed in ascending group order, fp32 tail against Q(q)) —
     bit-identical to the kernel's int mode at matching tiles.
+
+    ``kv_active_bits`` (static) reads the plane-prefix view — the same
+    narrowed words/compensated exponents the kernel's prefix BlockSpec
+    fetches. ``kv_trunc`` (traced (B,) int32, fp mode only) shifts each
+    sequence's rows by extra planes at dequant time — the mixed-precision
+    decode lanes.
     """
     b, t, h, d = q.shape
     s_len, kv = k_words.shape[1], k_words.shape[2]
     g = h // kv
+    stored = kv_row_bits(k_words.shape[-1], d)
+    if kv_active_bits is not None and kv_active_bits != stored:
+        if not 2 <= kv_active_bits <= stored:
+            raise ValueError(f"kv_active_bits {kv_active_bits} outside "
+                             f"[2, bits={stored}]")
+        sh = stored - kv_active_bits
+        k_words = plane_prefix_words(k_words, stored, kv_active_bits)
+        v_words = plane_prefix_words(v_words, stored, kv_active_bits)
+        k_exp = (k_exp.astype(jnp.int32) + sh).astype(jnp.int8)
+        v_exp = (v_exp.astype(jnp.int32) + sh).astype(jnp.int8)
+    if kv_trunc is not None:
+        if int_mac:
+            raise ValueError("int_mac with traced kv_trunc is unsupported "
+                             "— use a static kv_active_bits instead")
+        kv_trunc = jnp.asarray(kv_trunc, jnp.int32).reshape(
+            -1, 1, 1, 1)                      # (B,1,1,1) over (B,kc,Kv,D)
     kc = min(k_chunk, s_len)
     pad = (-s_len) % kc
     ragged = pad > 0
@@ -634,14 +761,16 @@ def flash_attention_packed_jnp(q, k_words, k_exp, v_words, v_exp,
                               preferred_element_type=jnp.float32) * scale
     else:
         def packed_scores(kwb, keb):
-            kblk = dequant_kv_rows(kwb, keb, d, int32_shifts=int32_shifts)
+            kblk = dequant_kv_rows(kwb, keb, d, int32_shifts=int32_shifts,
+                                   trunc=kv_trunc)
             return jnp.einsum("btkgd,bskd->bkgts", qg, kblk,
                               preferred_element_type=jnp.float32) * scale
 
         def merged_scores(kwb, keb, ktail):
             # one score GEMM over kc + Tt columns (the kernel's merged
             # last step — same float sequence)
-            kblk = dequant_kv_rows(kwb, keb, d, int32_shifts=int32_shifts)
+            kblk = dequant_kv_rows(kwb, keb, d, int32_shifts=int32_shifts,
+                                   trunc=kv_trunc)
             kcat = jnp.concatenate([kblk, ktail.astype(jnp.float32)],
                                    axis=1)
             return jnp.einsum("btkgd,bskd->bkgts", qg, kcat,
@@ -689,7 +818,8 @@ def flash_attention_packed_jnp(q, k_words, k_exp, v_words, v_exp,
 
     def k_step(carry, inp):
         kwb, keb, vwb, veb, ki = inp
-        vblk = dequant_kv_rows(vwb, veb, d, int32_shifts=int32_shifts)
+        vblk = dequant_kv_rows(vwb, veb, d, int32_shifts=int32_shifts,
+                               trunc=kv_trunc)
         return tile_update(carry, packed_scores(kwb, keb), vblk,
                            tile_mask(ki * kc + jnp.arange(kc))), None
 
@@ -712,7 +842,8 @@ def flash_attention_packed_jnp(q, k_words, k_exp, v_words, v_exp,
                                 v_tail.astype(jnp.float32), tmask)
         else:
             kwb, keb, vwb, veb = (x[nk - 1] for x in xs[:4])
-            vblk = dequant_kv_rows(vwb, veb, d, int32_shifts=int32_shifts)
+            vblk = dequant_kv_rows(vwb, veb, d, int32_shifts=int32_shifts,
+                                   trunc=kv_trunc)
             carry = tile_update(
                 carry,
                 merged_scores(kwb, keb, k_tail),

@@ -56,7 +56,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.gse import _PACK_CHUNK, exp2_int, qmax_for_bits
+from repro.core.gse import (_PACK_CHUNK, exp2_int, mantissa_abs_max,
+                            qmax_for_bits)
 from repro.kernels.gse_unpack import unpack_tile
 
 DEFAULT_BM = 128
@@ -64,28 +65,42 @@ DEFAULT_BN = 128
 DEFAULT_BK = 512
 
 # Static overflow guard for the realigned int-MAC mode: the int32
-# accumulator of one contraction tile must hold depth * qmax_a * qmax_b in
+# accumulator of one contraction tile must hold depth * |m_a| * |m_b| in
 # the worst case (every realigned mantissa at full scale). Module-level so
 # tests can shrink it to exercise the guard without a 2^18-deep GEMM.
 INT32_ACC_MAX = 2 ** 31 - 1
 
 
-def int_mac_max_depth(a_bits: int, b_bits: int) -> int:
+def int_mac_max_depth(a_bits: int, b_bits: int,
+                      a_truncated: bool = False,
+                      b_truncated: bool = False) -> int:
     """Largest contraction-tile depth whose realigned int32 accumulation
-    cannot wrap: depth * qmax_a * qmax_b <= INT32_ACC_MAX."""
-    return INT32_ACC_MAX // (qmax_for_bits(a_bits) * qmax_for_bits(b_bits))
+    cannot wrap: depth * |m_a|_max * |m_b|_max <= INT32_ACC_MAX.
+
+    Plane-prefix views floor-truncate and can decode ``-2^(b-1)`` — one
+    past ``qmax`` — so the ``*_truncated`` flags budget the asymmetric
+    bound (``mantissa_abs_max``) and the safe depth shrinks slightly for
+    truncated operands.
+    """
+    return INT32_ACC_MAX // (mantissa_abs_max(a_bits, a_truncated)
+                             * mantissa_abs_max(b_bits, b_truncated))
 
 
-def check_int_mac_depth(depth: int, a_bits: int, b_bits: int) -> None:
+def check_int_mac_depth(depth: int, a_bits: int, b_bits: int,
+                        a_truncated: bool = False,
+                        b_truncated: bool = False) -> None:
     """Reject (at trace time) a tile configuration whose realigned int-MAC
     accumulation could overflow int32. ``depth`` is the contraction extent
     of ONE kernel tile (the int32 accumulator is rescaled to fp32 at every
-    tile boundary, so only the in-tile depth counts)."""
-    limit = int_mac_max_depth(a_bits, b_bits)
+    tile boundary, so only the in-tile depth counts). Truncated (plane-
+    prefix view) operands use the widened ``qmax+1`` magnitude bound."""
+    limit = int_mac_max_depth(a_bits, b_bits, a_truncated, b_truncated)
     if depth > limit:
         raise ValueError(
             f"int-MAC tile depth {depth} can overflow int32 accumulation at "
-            f"{a_bits}x{b_bits} bits (max safe depth {limit}); shrink the "
+            f"{a_bits}x{b_bits} bits"
+            f"{' (truncated operands)' if a_truncated or b_truncated else ''}"
+            f" (max safe depth {limit}); shrink the "
             "contraction tile or disable int_mac")
 
 
@@ -201,7 +216,10 @@ def _gse_matmul_packed_kernel(am_ref, ae_ref, bw_ref, be_ref, o_ref,
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    bm = unpack_tile(bw_ref[...], bits, int32_shifts)  # VMEM-only int8 tile
+    # bw_ref is the (bn, bits, ckb) plane-axis block — only the active
+    # planes were fetched; flatten back to the plane-major tile stream
+    bw = bw_ref[...].reshape(bw_ref.shape[0], bits * bw_ref.shape[2])
+    bm = unpack_tile(bw, bits, int32_shifts)           # VMEM-only int8 tile
     _mac_accumulate(am_ref[...], ae_ref[...], bm, be_ref[...],
                     acc_ref, group=group)
 
@@ -245,34 +263,56 @@ def gse_matmul_pallas(a_m, a_e, b_m, b_e, group: int = 32,
     )(a_m, a_e, b_m, b_e)
 
 
+def _shift_exponents(e, shift: int):
+    """Fold a plane-prefix view's exponent compensation into the working
+    int8 exponents (``e + (stored - active)``; max 15 + 6 fits int8)."""
+    if not shift:
+        return e
+    return (e.astype(jnp.int32) + shift).astype(jnp.int8)
+
+
 @functools.partial(jax.jit,
                    static_argnames=("bits", "group", "bm", "bn", "bk",
-                                    "interpret", "int32_shifts"))
+                                    "interpret", "int32_shifts",
+                                    "active_bits"))
 def gse_matmul_packed_pallas(a_m, a_e, b_words, b_e, bits: int,
                              group: int = 32,
                              bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
                              bk: int = DEFAULT_BK, interpret: bool = True,
-                             int32_shifts: bool = False):
+                             int32_shifts: bool = False,
+                             active_bits: int | None = None):
     """Fused packed-dequant GSE matmul.
 
     a_m (M, K) int8, a_e (M, K//G) int8 — activations in working form;
-    b_words (N, K//32*bits) uint32 — weight mantissas in packed storage;
-    b_e (N, K//G) int8. Returns (M, N) fp32, bit-exact vs the unpacked
-    kernel and ``gse_matmul_reference``.
+    b_words (N, bits*(K//32)) uint32 — weight mantissas in packed storage
+    (``bits`` = stored width = word stride); b_e (N, K//G) int8. Returns
+    (M, N) fp32, bit-exact vs the unpacked kernel and
+    ``gse_matmul_reference``.
+
+    ``active_bits`` (default ``bits``) reads the plane-prefix view: the
+    word BlockSpec walks the (N, bits, K//32) plane-axis view and fetches
+    only the first ``active_bits`` planes per K tile — the dropped planes'
+    HBM bytes are never moved — while the exponent compensation
+    ``bits - active_bits`` folds into ``b_e`` before the call.
     """
+    ab = bits if active_bits is None else active_bits
+    if not 2 <= ab <= bits:
+        raise ValueError(f"active_bits {ab} outside [2, bits={bits}]")
     m_dim, k_dim = a_m.shape
     n_dim = b_words.shape[0]
     assert b_words.shape[1] * _PACK_CHUNK == k_dim * bits, (
         "packed word count mismatch", b_words.shape, k_dim, bits)
+    b_e = _shift_exponents(b_e, bits - ab)
     bm = min(bm, m_dim)
     bn = min(bn, n_dim)
     bk = min(bk, k_dim)
     assert m_dim % bm == 0 and n_dim % bn == 0 and k_dim % bk == 0
     assert bk % group == 0 and bk % _PACK_CHUNK == 0
-    bkw = bk // _PACK_CHUNK * bits
+    chunks = k_dim // _PACK_CHUNK
+    ckb = bk // _PACK_CHUNK
     k_steps = k_dim // bk
     grid = (m_dim // bm, n_dim // bn, k_steps)
-    kernel = functools.partial(_gse_matmul_packed_kernel, bits=bits,
+    kernel = functools.partial(_gse_matmul_packed_kernel, bits=ab,
                                group=group, k_steps=k_steps,
                                int32_shifts=int32_shifts)
     from jax.experimental.pallas import tpu as pltpu
@@ -282,14 +322,14 @@ def gse_matmul_packed_pallas(a_m, a_e, b_words, b_e, bits: int,
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
             pl.BlockSpec((bm, bk // group), lambda i, j, k: (i, k)),
-            pl.BlockSpec((bn, bkw), lambda i, j, k: (j, k)),
+            pl.BlockSpec((bn, ab, ckb), lambda i, j, k: (j, 0, k)),
             pl.BlockSpec((bn, bk // group), lambda i, j, k: (j, k)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m_dim, n_dim), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
-    )(a_m, a_e, b_words, b_e)
+    )(a_m, a_e, b_words.reshape(n_dim, bits, chunks), b_e)
 
 
 # ---------------------------------------------------------------------------
@@ -298,12 +338,13 @@ def gse_matmul_packed_pallas(a_m, a_e, b_words, b_e, bits: int,
 
 def dequant_packed_tile(words, e, bits: int, group: int,
                         int32_shifts: bool = False):
-    """One VMEM tile: packed words (R, C//32*bits) uint32 + shared exponents
-    (R, C//group) int8 -> exactly-dequantized fp32 (R, C).
+    """One VMEM tile: packed words (R, bits*(C//32)) uint32 plane-major +
+    shared exponents (R, C//group) int8 -> exactly-dequantized fp32 (R, C).
 
     Shared by both backward kernels and the ref oracles: shift/mask unpack
     (``unpack_tile``) then the exact ``exp2_int`` power-of-two rescale —
-    each value ``m * 2^e`` is exact in fp32 (|m| <= 127)."""
+    each value ``m * 2^e`` is exact in fp32 (|m| <= 128; the power-of-two
+    extreme a truncated plane-prefix tile can decode to is exact too)."""
     m = unpack_tile(words, bits, int32_shifts)            # (R, C) int8
     r, c = m.shape
     mg = m.astype(jnp.float32).reshape(r, c // group, group)
@@ -319,6 +360,8 @@ def _gse_matmul_packed_nt_kernel(aw_ref, ae_ref, bw_ref, be_ref, o_ref,
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
+    aw = aw_ref[...].reshape(aw_ref.shape[0], a_bits * aw_ref.shape[2])
+    bw = bw_ref[...].reshape(bw_ref.shape[0], b_bits * bw_ref.shape[2])
     if int_mac:
         # bounded tier: realign both tiles onto tile-shared exponents (A
         # per row — its grouping axis IS the contraction; B per K column
@@ -326,8 +369,8 @@ def _gse_matmul_packed_nt_kernel(aw_ref, ae_ref, bw_ref, be_ref, o_ref,
         # one rank-1 2^(eamax+ebmax) rescale per tile. Low mantissa bits
         # shift out in the realignment: NOT bit-exact vs the fp32 tier
         # (error bound: ref.int_realign_bound).
-        am = unpack_tile(aw_ref[...], a_bits, int32_shifts)   # (bm, bn)
-        bm = unpack_tile(bw_ref[...], b_bits, int32_shifts)   # (bn, bk)
+        am = unpack_tile(aw, a_bits, int32_shifts)            # (bm, bn)
+        bm = unpack_tile(bw, b_bits, int32_shifts)            # (bn, bk)
         am_r, ea_max = realign_rows(am, ae_ref[...], group=a_group)
         bm_r, eb_max = realign_col_groups(bm, be_ref[...], group=b_group)
         prod = jax.lax.dot_general(
@@ -341,9 +384,9 @@ def _gse_matmul_packed_nt_kernel(aw_ref, ae_ref, bw_ref, be_ref, o_ref,
                   * sb[None, :, None]).reshape(bm_sz, bk)
         acc_ref[...] = acc_ref[...] + scaled
     else:
-        adeq = dequant_packed_tile(aw_ref[...], ae_ref[...], a_bits, a_group,
+        adeq = dequant_packed_tile(aw, ae_ref[...], a_bits, a_group,
                                    int32_shifts)              # (bm, bn)
-        bdeq = dequant_packed_tile(bw_ref[...], be_ref[...], b_bits, b_group,
+        bdeq = dequant_packed_tile(bw, be_ref[...], b_bits, b_group,
                                    int32_shifts)              # (bn, bk)
         acc_ref[...] = acc_ref[...] + jnp.dot(
             adeq, bdeq, preferred_element_type=jnp.float32)
@@ -356,14 +399,20 @@ def _gse_matmul_packed_nt_kernel(aw_ref, ae_ref, bw_ref, be_ref, o_ref,
 @functools.partial(jax.jit,
                    static_argnames=("a_bits", "b_bits", "a_group", "b_group",
                                     "bm", "bn", "bk", "interpret",
-                                    "int32_shifts", "int_mac"))
+                                    "int32_shifts", "int_mac",
+                                    "a_active_bits", "b_active_bits",
+                                    "a_truncated", "b_truncated"))
 def gse_matmul_packed_nt_pallas(a_words, a_e, b_words, b_e, a_bits: int,
                                 b_bits: int, a_group: int = 32,
                                 b_group: int = 32,
                                 bm: int = DEFAULT_BM, bn: int = DEFAULT_BK,
                                 bk: int = DEFAULT_BN, interpret: bool = True,
                                 int32_shifts: bool = False,
-                                int_mac: bool = False):
+                                int_mac: bool = False,
+                                a_active_bits: int | None = None,
+                                b_active_bits: int | None = None,
+                                a_truncated: bool = False,
+                                b_truncated: bool = False):
     """dX-shaped packed matmul: A (M, N) @ B (N, K) -> (M, K) fp32,
     contracting over N.
 
@@ -384,7 +433,20 @@ def gse_matmul_packed_nt_pallas(a_words, a_e, b_words, b_e, a_bits: int,
     oracle ``ref.gse_matmul_packed_nt_int_ref``, bound
     ``ref.int_realign_bound``); :func:`check_int_mac_depth` rejects tile
     depths whose int32 accumulation could wrap.
+
+    ``a_active_bits`` / ``b_active_bits`` (default: the stored widths) read
+    either operand as its plane-prefix view: only the active planes are
+    fetched per tile, exponent compensation folds into the working
+    exponents, and the int-MAC depth guard widens to the truncated
+    ``qmax+1`` magnitude bound.
     """
+    a_ab = a_bits if a_active_bits is None else a_active_bits
+    b_ab = b_bits if b_active_bits is None else b_active_bits
+    if not (2 <= a_ab <= a_bits and 2 <= b_ab <= b_bits):
+        raise ValueError(f"active bits ({a_ab}, {b_ab}) outside "
+                         f"[2, stored ({a_bits}, {b_bits})]")
+    a_e = _shift_exponents(a_e, a_bits - a_ab)
+    b_e = _shift_exponents(b_e, b_bits - b_ab)
     m_dim, naw = a_words.shape
     n_dim, nbw = b_words.shape
     assert naw * _PACK_CHUNK == n_dim * a_bits, (a_words.shape, n_dim, a_bits)
@@ -396,14 +458,20 @@ def gse_matmul_packed_nt_pallas(a_words, a_e, b_words, b_e, a_bits: int,
         (m_dim, n_dim, k_dim), (bm, bn, bk))
     assert bn % a_group == 0 and bn % _PACK_CHUNK == 0
     assert bk % b_group == 0 and bk % _PACK_CHUNK == 0
-    bnw = bn // _PACK_CHUNK * a_bits
-    bkw = bk // _PACK_CHUNK * b_bits
+    bnc = bn // _PACK_CHUNK
+    bkc = bk // _PACK_CHUNK
     if int_mac:
-        check_int_mac_depth(bn, a_bits, b_bits)
+        # an operand is truncated if this call narrows it (active < stored)
+        # OR the caller already holds a pre-narrowed plane-prefix view and
+        # says so (a_truncated/b_truncated — e.g. PackedGSETensor.with_bits
+        # words arriving at their face width)
+        check_int_mac_depth(bn, a_ab, b_ab,
+                            a_truncated=a_truncated or a_ab < a_bits,
+                            b_truncated=b_truncated or b_ab < b_bits)
     n_steps = n_dim // bn
     grid = (m_dim // bm, k_dim // bk, n_steps)
-    kernel = functools.partial(_gse_matmul_packed_nt_kernel, a_bits=a_bits,
-                               b_bits=b_bits, a_group=a_group,
+    kernel = functools.partial(_gse_matmul_packed_nt_kernel, a_bits=a_ab,
+                               b_bits=b_ab, a_group=a_group,
                                b_group=b_group, n_steps=n_steps,
                                int32_shifts=int32_shifts, int_mac=int_mac)
     from jax.experimental.pallas import tpu as pltpu
@@ -411,16 +479,17 @@ def gse_matmul_packed_nt_pallas(a_words, a_e, b_words, b_e, a_bits: int,
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((bm, bnw), lambda i, j, n: (i, n)),
+            pl.BlockSpec((bm, a_ab, bnc), lambda i, j, n: (i, 0, n)),
             pl.BlockSpec((bm, bn // a_group), lambda i, j, n: (i, n)),
-            pl.BlockSpec((bn, bkw), lambda i, j, n: (n, j)),
+            pl.BlockSpec((bn, b_ab, bkc), lambda i, j, n: (n, 0, j)),
             pl.BlockSpec((bn, bk // b_group), lambda i, j, n: (n, j)),
         ],
         out_specs=pl.BlockSpec((bm, bk), lambda i, j, n: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m_dim, k_dim), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bm, bk), jnp.float32)],
         interpret=interpret,
-    )(a_words, a_e, b_words, b_e)
+    )(a_words.reshape(m_dim, a_bits, naw // a_bits), a_e,
+      b_words.reshape(n_dim, b_bits, nbw // b_bits), b_e)
 
 
 def _gse_matmul_packed_tn_kernel(aw_ref, ae_ref, bw_ref, be_ref, o_ref,
@@ -431,13 +500,15 @@ def _gse_matmul_packed_tn_kernel(aw_ref, ae_ref, bw_ref, be_ref, o_ref,
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
+    aw = aw_ref[...].reshape(aw_ref.shape[0], a_bits * aw_ref.shape[2])
+    bw = bw_ref[...].reshape(bw_ref.shape[0], b_bits * bw_ref.shape[2])
     if int_mac:
         # bounded tier: the contraction runs over the shared leading axis
         # of BOTH operands, so both realign per output column group (one
         # shared exponent per group across all contracted rows), then one
         # dim0 x dim0 int8 MXU MAC and a rank-1 rescale per tile.
-        am = unpack_tile(aw_ref[...], a_bits, int32_shifts)   # (bm, bk)
-        bm = unpack_tile(bw_ref[...], b_bits, int32_shifts)   # (bm, bn)
+        am = unpack_tile(aw, a_bits, int32_shifts)            # (bm, bk)
+        bm = unpack_tile(bw, b_bits, int32_shifts)            # (bm, bn)
         am_r, ea_max = realign_col_groups(am, ae_ref[...], group=a_group)
         bm_r, eb_max = realign_col_groups(bm, be_ref[...], group=b_group)
         prod = jax.lax.dot_general(
@@ -453,9 +524,9 @@ def _gse_matmul_packed_tn_kernel(aw_ref, ae_ref, bw_ref, be_ref, o_ref,
                   * sb[None, :, None]).reshape(bk, bn_sz)
         acc_ref[...] = acc_ref[...] + scaled
     else:
-        adeq = dequant_packed_tile(aw_ref[...], ae_ref[...], a_bits, a_group,
+        adeq = dequant_packed_tile(aw, ae_ref[...], a_bits, a_group,
                                    int32_shifts)              # (bm, bk)
-        bdeq = dequant_packed_tile(bw_ref[...], be_ref[...], b_bits, b_group,
+        bdeq = dequant_packed_tile(bw, be_ref[...], b_bits, b_group,
                                    int32_shifts)              # (bm, bn)
         acc_ref[...] = acc_ref[...] + jax.lax.dot_general(
             adeq, bdeq, (((0,), (0,)), ((), ())),
@@ -469,14 +540,20 @@ def _gse_matmul_packed_tn_kernel(aw_ref, ae_ref, bw_ref, be_ref, o_ref,
 @functools.partial(jax.jit,
                    static_argnames=("a_bits", "b_bits", "a_group", "b_group",
                                     "bm", "bn", "bk", "interpret",
-                                    "int32_shifts", "int_mac"))
+                                    "int32_shifts", "int_mac",
+                                    "a_active_bits", "b_active_bits",
+                                    "a_truncated", "b_truncated"))
 def gse_matmul_packed_tn_pallas(a_words, a_e, b_words, b_e, a_bits: int,
                                 b_bits: int, a_group: int = 32,
                                 b_group: int = 32,
                                 bm: int = DEFAULT_BK, bn: int = DEFAULT_BN,
                                 bk: int = DEFAULT_BM, interpret: bool = True,
                                 int32_shifts: bool = False,
-                                int_mac: bool = False):
+                                int_mac: bool = False,
+                                a_active_bits: int | None = None,
+                                b_active_bits: int | None = None,
+                                a_truncated: bool = False,
+                                b_truncated: bool = False):
     """dW-shaped packed matmul: A (M, K)^T @ B (M, N) -> (K, N) fp32,
     contracting over the shared leading token axis M of both packed
     operands (for dW: A is the saved Q(X) residual grouped along K, B the
@@ -490,7 +567,17 @@ def gse_matmul_packed_tn_pallas(a_words, a_e, b_words, b_e, a_bits: int,
     ``int_mac=True``: realigned integer tile MAC (bounded tier — see
     :func:`gse_matmul_packed_nt_pallas`; oracle
     ``ref.gse_matmul_packed_tn_int_ref``).
+
+    ``a_active_bits`` / ``b_active_bits``: plane-prefix reads of either
+    operand, exactly as in :func:`gse_matmul_packed_nt_pallas`.
     """
+    a_ab = a_bits if a_active_bits is None else a_active_bits
+    b_ab = b_bits if b_active_bits is None else b_active_bits
+    if not (2 <= a_ab <= a_bits and 2 <= b_ab <= b_bits):
+        raise ValueError(f"active bits ({a_ab}, {b_ab}) outside "
+                         f"[2, stored ({a_bits}, {b_bits})]")
+    a_e = _shift_exponents(a_e, a_bits - a_ab)
+    b_e = _shift_exponents(b_e, b_bits - b_ab)
     m_dim, naw = a_words.shape
     m2, nbw = b_words.shape
     assert m_dim == m2, (a_words.shape, b_words.shape)
@@ -503,14 +590,16 @@ def gse_matmul_packed_tn_pallas(a_words, a_e, b_words, b_e, a_bits: int,
         (m_dim, n_dim, k_dim), (bm, bn, bk))
     assert bk % a_group == 0 and bk % _PACK_CHUNK == 0
     assert bn % b_group == 0 and bn % _PACK_CHUNK == 0
-    bkw = bk // _PACK_CHUNK * a_bits
-    bnw = bn // _PACK_CHUNK * b_bits
+    bkc = bk // _PACK_CHUNK
+    bnc = bn // _PACK_CHUNK
     if int_mac:
-        check_int_mac_depth(bm, a_bits, b_bits)
+        check_int_mac_depth(bm, a_ab, b_ab,
+                            a_truncated=a_truncated or a_ab < a_bits,
+                            b_truncated=b_truncated or b_ab < b_bits)
     m_steps = m_dim // bm
     grid = (k_dim // bk, n_dim // bn, m_steps)
-    kernel = functools.partial(_gse_matmul_packed_tn_kernel, a_bits=a_bits,
-                               b_bits=b_bits, a_group=a_group,
+    kernel = functools.partial(_gse_matmul_packed_tn_kernel, a_bits=a_ab,
+                               b_bits=b_ab, a_group=a_group,
                                b_group=b_group, m_steps=m_steps,
                                int32_shifts=int32_shifts, int_mac=int_mac)
     from jax.experimental.pallas import tpu as pltpu
@@ -518,13 +607,14 @@ def gse_matmul_packed_tn_pallas(a_words, a_e, b_words, b_e, a_bits: int,
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((bm, bkw), lambda i, j, s: (s, i)),
+            pl.BlockSpec((bm, a_ab, bkc), lambda i, j, s: (s, 0, i)),
             pl.BlockSpec((bm, bk // a_group), lambda i, j, s: (s, i)),
-            pl.BlockSpec((bm, bnw), lambda i, j, s: (s, j)),
+            pl.BlockSpec((bm, b_ab, bnc), lambda i, j, s: (s, 0, j)),
             pl.BlockSpec((bm, bn // b_group), lambda i, j, s: (s, j)),
         ],
         out_specs=pl.BlockSpec((bk, bn), lambda i, j, s: (i, j)),
         out_shape=jax.ShapeDtypeStruct((k_dim, n_dim), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bk, bn), jnp.float32)],
         interpret=interpret,
-    )(a_words, a_e, b_words, b_e)
+    )(a_words.reshape(m_dim, a_bits, naw // a_bits), a_e,
+      b_words.reshape(m_dim, b_bits, nbw // b_bits), b_e)

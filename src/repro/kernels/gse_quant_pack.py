@@ -9,9 +9,10 @@ working form never touches HBM: a tile goes fp32-in / b-bit-words-out.
 
 Outputs per (BM, BK) input tile:
 
-* mantissa words  (BM, BK//32 * bits) uint32 — the wire layout of
-  ``repro.core.gse`` (bit-planar chunks of 32, offset-binary ``m + qmax``),
-  identical word-for-word to ``gse_pack(gse_quantize(x))``.
+* mantissa words  (BM, bits * BK//32) uint32 — the wire layout of
+  ``repro.core.gse`` (plane-major MSB-first bit planes over chunks of 32,
+  offset-binary ``m + 2^(bits-1)``), identical word-for-word to
+  ``gse_pack(gse_quantize(x))``.
 * exponents       (BM, BK//G) int8 — unbiased shared exponents. Exponents
   are ~``1/group`` of the payload and their wire layout is a *flat* stream
   over the whole tensor (chunk boundaries cross kernel tiles), so the 5-bit
@@ -61,9 +62,13 @@ def _gse_quant_pack_kernel(x_ref, w_ref, e_ref, *, bits: int, group: int,
                            int32_shifts: bool):
     m, e = quantize_tile(x_ref[...], bits, group)  # shared quantize math
     # offset-binary bit-planar pack while the tile sits in VMEM — the int8
-    # mantissas never exist outside this kernel
-    w_ref[...] = pack_mantissas(m.astype(jnp.int8), bits,
-                                int32_shifts=int32_shifts)
+    # mantissas never exist outside this kernel. pack_mantissas emits the
+    # plane-major (bm, bits*ckb) tile; the output block is the matching
+    # (bm, bits, ckb) slice of the global plane-axis view, so each plane
+    # lands in its own contiguous run of the wire stream.
+    words = pack_mantissas(m.astype(jnp.int8), bits,
+                           int32_shifts=int32_shifts)
+    w_ref[...] = words.reshape(words.shape[0], bits, -1)
     e_ref[...] = e.astype(jnp.int8)
 
 
@@ -85,25 +90,29 @@ def gse_quant_pack_pallas(x: jax.Array, bits: int = 6, group: int = 32,
     bm = _fit_block(m_dim, bm)
     bk = _fit_block(k_dim, bk, multiple=int(np.lcm(_PACK_CHUNK, group)))
     assert m_dim % bm == 0 and k_dim % bk == 0, (x.shape, bm, bk)
-    bkw = bk // _PACK_CHUNK * bits
+    ckb = bk // _PACK_CHUNK
+    chunks = k_dim // _PACK_CHUNK
     grid = (m_dim // bm, k_dim // bk)
     kernel = functools.partial(_gse_quant_pack_kernel, bits=bits,
                                group=group, int32_shifts=int32_shifts)
-    return pl.pallas_call(
+    words, exp = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[pl.BlockSpec((bm, bk), lambda i, j: (i, j))],
         out_specs=[
-            pl.BlockSpec((bm, bkw), lambda i, j: (i, j)),
+            # (M, bits, chunks) plane-axis view of the plane-major wire
+            # stream; each grid step writes its ckb chunk columns of every
+            # plane
+            pl.BlockSpec((bm, bits, ckb), lambda i, j: (i, 0, j)),
             pl.BlockSpec((bm, bk // group), lambda i, j: (i, j)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((m_dim, k_dim // _PACK_CHUNK * bits),
-                                 jnp.uint32),
+            jax.ShapeDtypeStruct((m_dim, bits, chunks), jnp.uint32),
             jax.ShapeDtypeStruct((m_dim, k_dim // group), jnp.int8),
         ],
         interpret=interpret,
     )(x)
+    return words.reshape(m_dim, bits * chunks), exp
 
 
 # 1-D inputs re-tile to this row width when it divides them: (n/K0, K0)
@@ -141,9 +150,16 @@ def gse_quantize_pack(x: jax.Array, bits: int = 6, group: int = 32,
     words, exp = gse_quant_pack_pallas(x2, bits, group, bm=bm, bk=bk,
                                        interpret=interpret,
                                        int32_shifts=int32_shifts)
-    # per-row chunks concatenate in flat chunk order, so reshaping the 2-D
-    # retiling back is exactly the wire layout of the original shape
-    words = words.reshape(*x.shape[:-1], k // _PACK_CHUNK * bits)
+    if x.ndim == 1:
+        # the flat wire layout is plane-major over the *whole* stream; the
+        # 2-D retiling packed each row independently, so restore global
+        # plane order: (R, bits, ck0) -> (bits, R, ck0) -> flat
+        ck0 = k0 // _PACK_CHUNK
+        words = words.reshape(-1, bits, ck0).transpose(1, 0, 2).reshape(-1)
+    else:
+        # rows pack independently in the per-row layout, so reshaping the
+        # 2-D retiling back is exactly the wire layout of the original shape
+        words = words.reshape(*x.shape[:-1], bits * (k // _PACK_CHUNK))
     eshape = (*x.shape[:-1], k // group)
     return PackedGSETensor(words, pack_exponents(exp.reshape(eshape)),
                            bits, group, tuple(x.shape))

@@ -1,18 +1,26 @@
 """Pallas TPU kernel: on-chip unpack of bit-planar packed GSE mantissas.
 
 Input is the real storage format (``repro.core.gse`` module docstring): the
-last axis carries chunks of 32 values as ``bits`` uint32 plane words each —
-plane ``j`` holds bit ``j`` of the 32 offset-binary mantissas, lane ``i``
-(bit ``i`` of the word) is value ``i`` of the chunk. Unpacking is therefore
-a pure vectorized shift/mask in VMEM — no gathers, no field ever straddles
-a word:
+last axis carries ``bits`` MSB-first bit planes of ``ceil(K/32)`` chunks in
+*plane-major* word order — word ``p * chunks + c`` is plane ``p`` (holding
+mantissa bit ``bits-1-p``) of chunk ``c``; lane ``i`` (bit ``i`` of the
+word) is value ``i`` of the chunk. Unpacking is therefore a pure vectorized
+shift/mask in VMEM — no gathers, no field ever straddles a word:
 
-    u_i = sum_j ((plane_j >> i) & 1) << j;      m_i = u_i - qmax
+    u_i = sum_p ((plane_p >> i) & 1) << (bits-1-p);   m_i = u_i - 2^(bits-1)
 
 The bit-plane loop is a static Python loop of ``bits`` (<= 8) iterations
 over rank-3 tiles, which Mosaic maps onto the VPU; interpret mode runs the
 identical math on CPU. Masking with ``& 1`` makes the math correct whether
 the backend shifts uint32 logically or int32 arithmetically.
+
+Plane-prefix reads (``active_bits < stored bits``): because the layout is
+plane-major with the MSB plane first, reading only the first
+``active_bits`` planes of each chunk decodes the floor-truncated mantissas
+``m >> (stored - active)`` — the kernel's BlockSpec walks a
+``(rows, bits, chunks)`` view of the word array and pins the plane axis to
+its first ``active_bits`` entries, so narrow reads *move fewer HBM bytes*,
+not just mask them after the fact.
 
 HBM holds only the packed words (b bits/value); full int8 mantissas exist
 only transiently as VMEM tiles (or as this kernel's output when a consumer
@@ -34,51 +42,72 @@ DEFAULT_BK = 512
 
 def unpack_tile(words: jax.Array, bits: int,
                 int32_shifts: bool = False) -> jax.Array:
-    """(BM, C*bits) uint32 plane words -> (BM, C*32) int8 mantissas.
+    """(BM, bits*C) uint32 plane-major words -> (BM, C*32) int8 mantissas.
 
-    Shared by this kernel, the fused packed matmul, and the packed-KV flash
-    attention. The shift/mask body is ``repro.core.gse.unpack_mantissas`` —
-    pure jnp, so the same code defines the wire format once and runs both
-    host-side and on VMEM-resident tiles inside kernels.
-    ``int32_shifts`` selects the bitcast-int32 shift fallback for Mosaic
-    targets lacking u32 shifts (bit-identical output, see core.gse).
+    ``bits`` is the number of planes actually present in ``words`` — a
+    plane-prefix tile of a wider stream is decoded by passing its
+    ``active_bits``, yielding the floor-truncated mantissas. Shared by this
+    kernel, the fused packed matmul, and the packed-KV flash attention. The
+    shift/mask body is ``repro.core.gse.unpack_mantissas`` — pure jnp, so
+    the same code defines the wire format once and runs both host-side and
+    on VMEM-resident tiles inside kernels. ``int32_shifts`` selects the
+    bitcast-int32 shift fallback for Mosaic targets lacking u32 shifts
+    (bit-identical output, see core.gse).
     """
     k = words.shape[-1] // bits * _PACK_CHUNK
     return unpack_mantissas(words, bits, k, int32_shifts=int32_shifts)
 
 
 def _gse_unpack_kernel(w_ref, m_ref, *, bits: int, int32_shifts: bool):
-    m_ref[...] = unpack_tile(w_ref[...], bits, int32_shifts)
+    bm = w_ref.shape[0]
+    # (bm, bits, ckb) plane-axis block -> the contiguous plane-major tile
+    # stream unpack_tile expects
+    tile = w_ref[...].reshape(bm, bits * w_ref.shape[2])
+    m_ref[...] = unpack_tile(tile, bits, int32_shifts)
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("bits", "bm", "bk", "interpret",
-                                    "int32_shifts"))
+                   static_argnames=("bits", "active_bits", "bm", "bk",
+                                    "interpret", "int32_shifts"))
 def gse_unpack_pallas(words: jax.Array, bits: int,
+                      active_bits: int | None = None,
                       bm: int = DEFAULT_BM, bk: int = DEFAULT_BK,
                       interpret: bool = True,
                       int32_shifts: bool = False) -> jax.Array:
-    """words (M, K//32*bits) uint32 -> mantissas (M, K) int8.
+    """words (M, bits*(K//32)) uint32 -> mantissas (M, K) int8.
 
     K is implied by the word count; K % 32 == 0 (kernel storage invariant —
     the jnp path in ``repro.core.gse`` handles ragged tails by padding).
     Tiles (bm, bk) of the *output*; bk % 32 == 0.
+
+    ``active_bits`` (default: ``bits``) decodes the plane-prefix view at a
+    narrower width: the index map reads only the first ``active_bits``
+    planes of each chunk, so the words of the dropped planes are never
+    fetched, and the output is the floor-truncated ``active_bits``-bit
+    mantissas.
     """
+    ab = bits if active_bits is None else active_bits
+    if not 2 <= ab <= bits:
+        raise ValueError(f"active_bits {ab} outside [2, bits={bits}]")
     m_dim, kw = words.shape
     k_dim = kw // bits * _PACK_CHUNK
+    chunks = k_dim // _PACK_CHUNK
     bm = min(bm, m_dim)
     bk = min(bk, k_dim)
     assert m_dim % bm == 0 and k_dim % bk == 0 and bk % _PACK_CHUNK == 0, (
         words.shape, bits, bm, bk)
-    bkw = bk // _PACK_CHUNK * bits
+    ckb = bk // _PACK_CHUNK
     grid = (m_dim // bm, k_dim // bk)
-    kernel = functools.partial(_gse_unpack_kernel, bits=bits,
+    kernel = functools.partial(_gse_unpack_kernel, bits=ab,
                                int32_shifts=int32_shifts)
+    # (M, bits, chunks) plane-axis view: plane index 0 pins the block to
+    # the first `ab` planes — the zero-copy prefix read
+    wp = words.reshape(m_dim, bits, chunks)
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[pl.BlockSpec((bm, bkw), lambda i, j: (i, j))],
+        in_specs=[pl.BlockSpec((bm, ab, ckb), lambda i, j: (i, 0, j))],
         out_specs=pl.BlockSpec((bm, bk), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m_dim, k_dim), jnp.int8),
         interpret=interpret,
-    )(words)
+    )(wp)

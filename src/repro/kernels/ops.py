@@ -290,7 +290,9 @@ def flash_attention_packed(q, k_words, k_exp, v_words, v_exp, *,
                            q_offset=0, is_global=None,
                            k_tail=None, v_tail=None,
                            bq: int = 256, bk: int = 512,
-                           int_mac: bool = False):
+                           int_mac: bool = False,
+                           kv_active_bits: int | None = None,
+                           kv_trunc=None):
     """Fused packed-KV flash attention dispatcher.
 
     q (B, T, H, D); planes (B, S, Kv, ·) in the row-planar packed layout;
@@ -309,6 +311,13 @@ def flash_attention_packed(q, k_words, k_exp, v_words, v_exp, *,
     exact-tier integer path — in-tile q quantization, int8 MACs, rank-1
     rescale — on BOTH routes (same int sequence, kernel == fallback
     bitwise).
+
+    ``kv_active_bits`` reads only the first b mantissa planes of the
+    stored KV (plane-prefix view, docs/gse-format.md §7) — floor
+    truncation against the same shared exponents, identical on both
+    routes. ``kv_trunc`` (traced scalar or per-sequence (B,) vector)
+    shifts *additional* planes below the active width per sequence
+    (mixed-precision serving lanes); incompatible with ``int_mac``.
     """
     global _LAST_FAP_ROUTE
     b, t, h, d = q.shape
@@ -319,7 +328,15 @@ def flash_attention_packed(q, k_words, k_exp, v_words, v_exp, *,
         q_offset = off
     use_kernel, reason = fap_route_decision(
         t, s_len, h, kv, has_is_global=is_global is not None, bq=bq, bk=bk)
+    if kv_trunc is not None and use_kernel:
+        # the planar kernel grid has no trunc prefetch lane (only the paged
+        # kernel does) — per-sequence truncation runs the jnp fallback
+        use_kernel = False
+        reason = "traced kv_trunc (per-sequence plane shifts) needs the " \
+                 "jnp fallback"
     reason += " [int-mac scores]" if int_mac else ""
+    if kv_active_bits is not None:
+        reason += f" [kv plane prefix b={kv_active_bits}]"
     _LAST_FAP_ROUTE = ("kernel" if use_kernel else "fallback", reason)
     _fap_log.debug("flash_attention_packed -> %s (%s)",
                    _LAST_FAP_ROUTE[0], reason)
@@ -341,14 +358,14 @@ def flash_attention_packed(q, k_words, k_exp, v_words, v_exp, *,
             qf, fold(k_words), fold(k_exp), fold(v_words), fold(v_exp),
             causal=causal, window=window, q_offset=q_offset, bq=bq, bk=bk,
             interpret=not _on_tpu(), int32_shifts=int32_shift_fallback(),
-            int_mac=int_mac, **tails)
+            int_mac=int_mac, kv_active_bits=kv_active_bits, **tails)
         return o.reshape(b, kv, g, t, d).transpose(0, 3, 1, 2, 4).reshape(
             b, t, h, d)
     return fap.flash_attention_packed_jnp(
         q, k_words, k_exp, v_words, v_exp, causal=causal, window=window,
         q_offset=q_offset, is_global=is_global, k_tail=k_tail,
         v_tail=v_tail, k_chunk=bk, int32_shifts=int32_shift_fallback(),
-        int_mac=int_mac)
+        int_mac=int_mac, kv_active_bits=kv_active_bits, kv_trunc=kv_trunc)
 
 
 _LAST_PAGED_ROUTE = ("", "never dispatched")
@@ -365,7 +382,9 @@ def flash_attention_paged(q, kp_words, kp_exp, vp_words, vp_exp,
                           window: int = 0, q_offset=0, is_global=None,
                           k_tail=None, v_tail=None, bq: int = 256,
                           k_chunk: int | None = None,
-                          int_mac: bool = False):
+                          int_mac: bool = False,
+                          kv_active_bits: int | None = None,
+                          kv_trunc=None):
     """Paged packed-KV flash attention dispatcher.
 
     q (B, T, H, D); pools (P, page, Kv, ·) — the row-planar planes carved
@@ -381,6 +400,15 @@ def flash_attention_paged(q, kp_words, kp_exp, vp_words, vp_exp,
     planar view and runs the planar jnp path (the bit-exact oracle at
     ``k_chunk == page``). Routing speaks the same REPRO_FAP_ROUTE knob and
     eligibility rules as the planar dispatcher.
+
+    ``kv_active_bits`` reads the first b mantissa planes of each page
+    (static plane-prefix view over the pool's stored width); ``kv_trunc``
+    is a per-sequence (B,) int32 vector of *additional* plane shifts below
+    the active width — it rides the scalar-prefetch lane beside the page
+    table and offset vector, so one fused decode block serves lanes at
+    mixed effective widths from the one pool. Both are floor truncation
+    against the shared exponents on both routes; ``kv_trunc`` is
+    incompatible with ``int_mac``.
     """
     global _LAST_PAGED_ROUTE
     b, t, h, d = q.shape
@@ -391,6 +419,10 @@ def flash_attention_paged(q, kp_words, kp_exp, vp_words, vp_exp,
         t, maxp * page, h, kv, has_is_global=is_global is not None,
         bq=bq, bk=page)
     reason += " [int-mac scores]" if int_mac else ""
+    if kv_active_bits is not None:
+        reason += f" [kv plane prefix b={kv_active_bits}]"
+    if kv_trunc is not None:
+        reason += " [per-seq kv trunc]"
     _LAST_PAGED_ROUTE = ("kernel" if use_kernel else "fallback",
                          "paged: " + reason)
     _fap_log.debug("flash_attention_paged -> %s (%s)",
@@ -413,7 +445,8 @@ def flash_attention_paged(q, kp_words, kp_exp, vp_words, vp_exp,
             jnp.asarray(page_table, jnp.int32), q_offset=off,
             causal=causal, window=window, bq=bq,
             interpret=not _on_tpu(), int32_shifts=int32_shift_fallback(),
-            int_mac=int_mac, **tails)
+            int_mac=int_mac, kv_active_bits=kv_active_bits,
+            kv_trunc=kv_trunc, **tails)
         return o.reshape(b, kv, g, t, d).transpose(0, 3, 1, 2, 4).reshape(
             b, t, h, d)
     pt = jnp.asarray(page_table, jnp.int32)
@@ -423,7 +456,7 @@ def flash_attention_paged(q, kp_words, kp_exp, vp_words, vp_exp,
         causal=causal, window=window, q_offset=q_offset,
         is_global=is_global, k_tail=k_tail, v_tail=v_tail,
         k_chunk=k_chunk or page, int32_shifts=int32_shift_fallback(),
-        int_mac=int_mac)
+        int_mac=int_mac, kv_active_bits=kv_active_bits, kv_trunc=kv_trunc)
 
 
 # ---------------------------------------------------------------------------
@@ -514,6 +547,11 @@ def _words_2d(p: PackedGSETensor):
 
 def _exps_2d(p: PackedGSETensor):
     e = unpack_exponents(p.exponent_words, p.exponent_shape)
+    if p.exp_shift:
+        # plane-prefix view: the kernels decode the (narrowed) words at
+        # p.bits == active_bits, so the truncation's exponent compensation
+        # folds here, once, outside the kernels (max 15 + 6 fits int8)
+        e = (e.astype(jnp.int32) + p.exp_shift).astype(jnp.int8)
     return e.reshape(-1, e.shape[-1])
 
 
@@ -578,7 +616,11 @@ def qcd_matmul_dx(dyq, wq, *, compute_dtype, f32_out: bool = False,
             dyq.bits, wq.bits, a_group=dyq.group_size, b_group=wq.group_size,
             bm=_fit_block(int(np.prod(dyq.shape[:-1])), 128),
             bn=_fit(n, 512, dyq.group_size), bk=_fit(k, 128, wq.group_size),
-            int_mac=int_mac)
+            int_mac=int_mac,
+            # plane-prefix views arrive pre-narrowed (words at face width),
+            # so the kernel cannot see the truncation — declare it for the
+            # int-MAC depth guard (truncated mantissas reach -2^(b-1))
+            a_truncated=dyq.exp_shift > 0, b_truncated=wq.exp_shift > 0)
         return dx.reshape(*dyq.shape[:-1], k).astype(compute_dtype)
     dyd = _deq(dyq, compute_dtype)
     wd = _deq(wq, compute_dtype)            # (N, K) == Q(W)^T already
@@ -604,7 +646,8 @@ def qcd_matmul_dw(xq, dyq, *, out_dtype, x_dtype=None, dy_dtype=None,
             _words_2d(xq), _exps_2d(xq), _words_2d(dyq), _exps_2d(dyq),
             xq.bits, dyq.bits, a_group=xq.group_size, b_group=dyq.group_size,
             bm=_fit_block(m, 512), bn=_fit(n, 128, dyq.group_size),
-            bk=_fit(k, 128, xq.group_size), int_mac=int_mac)
+            bk=_fit(k, 128, xq.group_size), int_mac=int_mac,
+            a_truncated=xq.exp_shift > 0, b_truncated=dyq.exp_shift > 0)
         return dw.astype(out_dtype)
     xd = _deq(xq, x_dtype or out_dtype)
     dyd = _deq(dyq, dy_dtype or out_dtype)
@@ -625,5 +668,7 @@ def gse_linear_packed(x, w_packed: PackedGSETensor, **block_kw):
     bits, group = w_packed.bits, w_packed.group_size
     xm, xe = gse_quantize(x, bits, group)
     we = unpack_exponents(w_packed.exponent_words, w_packed.exponent_shape)
+    if w_packed.exp_shift:                  # plane-prefix view compensation
+        we = (we.astype(jnp.int32) + w_packed.exp_shift).astype(jnp.int8)
     return gse_matmul_packed(xm, xe, w_packed.mantissa_words, we, bits,
                              group, **block_kw)

@@ -6,7 +6,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.gse import (EXP_MIN, EXP_MAX, as_f32_exact, ceil_log2,
-                            exp2_int, qmax_for_bits, unpack_mantissas)
+                            exp2_int, mantissa_abs_max, plane_prefix_words,
+                            qmax_for_bits, unpack_mantissas)
 from repro.core.nf4 import NF4_CODE, BLOCK
 
 
@@ -54,33 +55,49 @@ def gse_quant_pack_ref(x: jax.Array, bits: int = 6, group: int = 32):
     return pack_mantissas(m, bits), e
 
 
-def gse_unpack_ref(words, bits: int):
+def gse_unpack_ref(words, bits: int, active_bits: int | None = None):
     """Oracle for gse_unpack_pallas: (M, K//32*bits) uint32 -> (M, K) int8
-    via the jnp bit-plane unpack in repro.core.gse."""
+    via the jnp bit-plane unpack in repro.core.gse. ``active_bits`` decodes
+    the plane-prefix view (floor-truncated mantissas) from the same full-
+    width words, mirroring the kernel's narrow read."""
+    ab = bits if active_bits is None else active_bits
     m_dim, kw = words.shape
     k_dim = kw // bits * 32
-    return unpack_mantissas(words, bits, k_dim)
+    return unpack_mantissas(plane_prefix_words(words, bits, ab), ab, k_dim)
 
 
 def gse_matmul_packed_ref(a_m, a_e, b_words, b_e, bits: int,
-                          group: int = 32):
-    """Oracle for gse_matmul_packed_pallas: unpack then exact GSE matmul."""
-    b_m = gse_unpack_ref(b_words, bits)
+                          group: int = 32, active_bits: int | None = None):
+    """Oracle for gse_matmul_packed_pallas: unpack then exact GSE matmul.
+    ``active_bits`` replays the plane-prefix read: truncated mantissas with
+    the B exponents compensated by ``bits - active_bits``."""
+    ab = bits if active_bits is None else active_bits
+    b_m = gse_unpack_ref(b_words, bits, ab)
+    if ab != bits:
+        b_e = (b_e.astype(jnp.int32) + (bits - ab)).astype(jnp.int8)
     return gse_matmul_ref(a_m, a_e, b_m, b_e, group)
 
 
-def _dequant_rows_ref(words, e, bits: int, group: int):
+def _dequant_rows_ref(words, e, bits: int, group: int,
+                      active_bits: int | None = None):
     """Unpack + exact dequant of a whole packed operand: (R, C//32*bits)
     uint32 + (R, C//G) int8 -> fp32 (R, C). Same math as the kernels'
-    ``dequant_packed_tile`` but via the host-side ``unpack_mantissas``."""
+    ``dequant_packed_tile`` but via the host-side ``unpack_mantissas``.
+    ``active_bits`` dequantizes the plane-prefix view (truncated mantissas
+    scaled by ``2^(e + bits - active_bits)``)."""
+    ab = bits if active_bits is None else active_bits
     c = words.shape[-1] // bits * 32
-    m = unpack_mantissas(words, bits, c).astype(jnp.float32)
+    m = unpack_mantissas(plane_prefix_words(words, bits, ab), ab,
+                         c).astype(jnp.float32)
     mg = m.reshape(*m.shape[:-1], c // group, group)
-    return (mg * exp2_int(e)[..., None]).reshape(m.shape)
+    scale = exp2_int(e.astype(jnp.int32) + (bits - ab))
+    return (mg * scale[..., None]).reshape(m.shape)
 
 
 def gse_matmul_packed_nt_ref(a_words, a_e, b_words, b_e, a_bits: int,
-                             b_bits: int, group: int = 32, bn: int = 512):
+                             b_bits: int, group: int = 32, bn: int = 512,
+                             a_active_bits: int | None = None,
+                             b_active_bits: int | None = None):
     """Oracle for gse_matmul_packed_nt_pallas: dequantize both packed
     operands exactly in fp32 and replay the kernel's contraction schedule —
     one fp32 dot per ``bn``-wide N tile, tiles accumulated sequentially in
@@ -89,8 +106,10 @@ def gse_matmul_packed_nt_ref(a_words, a_e, b_words, b_e, a_bits: int,
     m_dim = a_words.shape[0]
     n_dim = b_words.shape[0]
     k_dim = b_words.shape[-1] // b_bits * 32
-    adeq = _dequant_rows_ref(a_words, a_e, a_bits, group)   # (M, N)
-    bdeq = _dequant_rows_ref(b_words, b_e, b_bits, group)   # (N, K)
+    adeq = _dequant_rows_ref(a_words, a_e, a_bits, group,
+                             a_active_bits)                 # (M, N)
+    bdeq = _dequant_rows_ref(b_words, b_e, b_bits, group,
+                             b_active_bits)                 # (N, K)
     bn = min(bn, n_dim)
     acc = jnp.zeros((m_dim, k_dim), jnp.float32)
     for n0 in range(0, n_dim, bn):
@@ -100,15 +119,19 @@ def gse_matmul_packed_nt_ref(a_words, a_e, b_words, b_e, a_bits: int,
 
 
 def gse_matmul_packed_tn_ref(a_words, a_e, b_words, b_e, a_bits: int,
-                             b_bits: int, group: int = 32, bm: int = 512):
+                             b_bits: int, group: int = 32, bm: int = 512,
+                             a_active_bits: int | None = None,
+                             b_active_bits: int | None = None):
     """Oracle for gse_matmul_packed_tn_pallas: exact fp32 dequant of both
     packed operands, then the dim-0 x dim-0 contraction replayed one
     ``bm``-wide M tile at a time in ascending order."""
     m_dim = a_words.shape[0]
     k_dim = a_words.shape[-1] // a_bits * 32
     n_dim = b_words.shape[-1] // b_bits * 32
-    adeq = _dequant_rows_ref(a_words, a_e, a_bits, group)   # (M, K)
-    bdeq = _dequant_rows_ref(b_words, b_e, b_bits, group)   # (M, N)
+    adeq = _dequant_rows_ref(a_words, a_e, a_bits, group,
+                             a_active_bits)                 # (M, K)
+    bdeq = _dequant_rows_ref(b_words, b_e, b_bits, group,
+                             b_active_bits)                 # (M, N)
     bm = min(bm, m_dim)
     acc = jnp.zeros((k_dim, n_dim), jnp.float32)
     for m0 in range(0, m_dim, bm):
@@ -124,7 +147,8 @@ def gse_matmul_packed_tn_ref(a_words, a_e, b_words, b_e, a_bits: int,
 # ---------------------------------------------------------------------------
 
 
-def gse_score_int_ref(q, k_words, k_exp, head_dim: int):
+def gse_score_int_ref(q, k_words, k_exp, head_dim: int,
+                      active_bits: int | None = None):
     """Grouped fp32 oracle for the integer-MAC attention score GEMM
     (``gse_matmul.gse_score_tile`` fed by in-kernel q quantization).
 
@@ -135,16 +159,19 @@ def gse_score_int_ref(q, k_words, k_exp, head_dim: int):
     Every within-group partial sum is exact in fp32 — all products share
     the scale ``2^(eq+ek)`` and their integer content stays below 2^24 —
     so this float computation equals the int32 MAC + rank-1 rescale
-    **bit-for-bit** (the exact-tier contract). Returns (R, S) pre-scale
-    scores."""
+    **bit-for-bit** (the exact-tier contract). ``active_bits`` replays a
+    plane-prefix read of the cache: k decodes truncated (exponents
+    compensated) and q quantizes at the active width, matching the
+    kernel's in-kernel q quantization. Returns (R, S) pre-scale scores."""
     chunks = -(-head_dim // 32)
     bits = k_words.shape[-1] // chunks
+    ab = bits if active_bits is None else active_bits
     g = head_dim // k_exp.shape[-1]
     ng = head_dim // g
-    qm, qe = gse_quantize_ref(jnp.asarray(q, jnp.float32), bits, g)
+    qm, qe = gse_quantize_ref(jnp.asarray(q, jnp.float32), ab, g)
     qdq = (qm.astype(jnp.float32).reshape(-1, ng, g)
            * exp2_int(qe.astype(jnp.int32))[..., None])       # (R, ng, g)
-    kdq = packed_kv_dequant_ref(k_words, k_exp, head_dim)
+    kdq = packed_kv_dequant_ref(k_words, k_exp, head_dim, ab)
     kdq = kdq.reshape(-1, ng, g)                              # (S, ng, g)
     acc = jnp.zeros((qdq.shape[0], kdq.shape[0]), jnp.float32)
     for gi in range(ng):                  # ordered group sum (contract)
@@ -180,17 +207,27 @@ def _realign_col_groups_ref(m, e, group: int):
 
 def gse_matmul_packed_nt_int_ref(a_words, a_e, b_words, b_e, a_bits: int,
                                  b_bits: int, a_group: int = 32,
-                                 b_group: int = 32, bn: int = 512):
+                                 b_group: int = 32, bn: int = 512,
+                                 a_active_bits: int | None = None,
+                                 b_active_bits: int | None = None):
     """Oracle for ``gse_matmul_packed_nt_pallas(int_mac=True)``: replay the
     tile schedule with the floor-division realignment, an exact integer
     tile GEMM, and the per-tile rank-1 rescale, tiles accumulated in
     ascending order — bit-exact vs the int-MAC kernel at the same ``bn``
-    (every rescale multiplies by a power of two, hence is exact)."""
+    (every rescale multiplies by a power of two, hence is exact). Active
+    bits replay the plane-prefix read: truncated mantissas with exponents
+    compensated before realignment."""
+    a_ab = a_bits if a_active_bits is None else a_active_bits
+    b_ab = b_bits if b_active_bits is None else b_active_bits
     m_dim = a_words.shape[0]
     n_dim = b_words.shape[0]
     k_dim = b_words.shape[-1] // b_bits * 32
-    ma = unpack_mantissas(a_words, a_bits, n_dim)
-    mb = unpack_mantissas(b_words, b_bits, k_dim)
+    ma = unpack_mantissas(plane_prefix_words(a_words, a_bits, a_ab), a_ab,
+                          n_dim)
+    mb = unpack_mantissas(plane_prefix_words(b_words, b_bits, b_ab), b_ab,
+                          k_dim)
+    a_e = (a_e.astype(jnp.int32) + (a_bits - a_ab)).astype(jnp.int8)
+    b_e = (b_e.astype(jnp.int32) + (b_bits - b_ab)).astype(jnp.int8)
     bn = min(bn, n_dim)
     acc = jnp.zeros((m_dim, k_dim), jnp.float32)
     for n0 in range(0, n_dim, bn):
@@ -209,16 +246,24 @@ def gse_matmul_packed_nt_int_ref(a_words, a_e, b_words, b_e, a_bits: int,
 
 def gse_matmul_packed_tn_int_ref(a_words, a_e, b_words, b_e, a_bits: int,
                                  b_bits: int, a_group: int = 32,
-                                 b_group: int = 32, bm: int = 512):
+                                 b_group: int = 32, bm: int = 512,
+                                 a_active_bits: int | None = None,
+                                 b_active_bits: int | None = None):
     """Oracle for ``gse_matmul_packed_tn_pallas(int_mac=True)``: both
     operands realign per output column group (contraction runs over the
     shared leading axis), exact integer tile GEMM, rank-1 rescale, ordered
     tile accumulation."""
+    a_ab = a_bits if a_active_bits is None else a_active_bits
+    b_ab = b_bits if b_active_bits is None else b_active_bits
     m_dim = a_words.shape[0]
     k_dim = a_words.shape[-1] // a_bits * 32
     n_dim = b_words.shape[-1] // b_bits * 32
-    ma = unpack_mantissas(a_words, a_bits, k_dim)
-    mb = unpack_mantissas(b_words, b_bits, n_dim)
+    ma = unpack_mantissas(plane_prefix_words(a_words, a_bits, a_ab), a_ab,
+                          k_dim)
+    mb = unpack_mantissas(plane_prefix_words(b_words, b_bits, b_ab), b_ab,
+                          n_dim)
+    a_e = (a_e.astype(jnp.int32) + (a_bits - a_ab)).astype(jnp.int8)
+    b_e = (b_e.astype(jnp.int32) + (b_bits - b_ab)).astype(jnp.int8)
     bm = min(bm, m_dim)
     acc = jnp.zeros((k_dim, n_dim), jnp.float32)
     for m0 in range(0, m_dim, bm):
@@ -238,7 +283,9 @@ def gse_matmul_packed_tn_int_ref(a_words, a_e, b_words, b_e, a_bits: int,
 
 def int_realign_bound(a_e, b_e, a_bits: int, b_bits: int, *,
                       a_group: int = 32, b_group: int = 32,
-                      tile: int = 512, kind: str = "nt"):
+                      tile: int = 512, kind: str = "nt",
+                      a_truncated: bool = False,
+                      b_truncated: bool = False):
     """Worst-case |int-MAC − fp32 kernel| bound per output element for the
     realigned (bounded-tier) matmuls — the documented contract the
     property tests assert.
@@ -253,8 +300,14 @@ def int_realign_bound(a_e, b_e, a_bits: int, b_bits: int, *,
 
     ``kind="nt"``: a_e (M, N/Ga), b_e (N, K/Gb) -> bound (M, K).
     ``kind="tn"``: a_e (M, K/Ga), b_e (M, N/Gb) -> bound (K, N).
+
+    ``a_truncated``/``b_truncated``: the operand is a plane-prefix view,
+    whose mantissas reach ``-2^(bits-1)`` (one past qmax) — pass the
+    *active* bits as ``a_bits``/``b_bits`` and set the flag, and note the
+    caller's exponents must already carry the view's compensation shift.
     """
-    qa, qb = qmax_for_bits(a_bits), qmax_for_bits(b_bits)
+    qa = mantissa_abs_max(a_bits, a_truncated)
+    qb = mantissa_abs_max(b_bits, b_truncated)
     slack = (qa + qb) + tile * qa * qb * 2.0 ** -20
     ae = jnp.asarray(a_e, jnp.int32)
     be = jnp.asarray(b_e, jnp.int32)
@@ -304,30 +357,51 @@ def flash_attention_oracle(q, k, v, causal=True, window=0, q_offset=0):
                                      window=window))
 
 
-def packed_kv_dequant_ref(words, exps, head_dim: int):
+def plane_prefix_truncate_ref(m, e, stored_bits: int, b: int):
+    """Floor-truncation oracle for ``PackedGSETensor.with_bits(b)``: the
+    value a ``b``-bit plane-prefix read of a ``stored_bits``-bit stream
+    must decode to. Deliberately computed as numpy floor *division* (not a
+    shift) so a shift-direction bug in the wire code cannot cancel out.
+
+    m int8 mantissas, e int8 exponents (grouped shape) -> (m_t int32 in
+    [-2^(b-1), 2^(b-1)-1], e_t int32 = e + (stored_bits - b))."""
+    import numpy as np
+    t = stored_bits - b
+    m_t = np.floor_divide(np.asarray(m, np.int64), 1 << t)
+    return m_t.astype(np.int32), np.asarray(e, np.int32) + t
+
+
+def packed_kv_dequant_ref(words, exps, head_dim: int,
+                          active_bits: int | None = None):
     """Oracle for the row-planar KV dequant: numpy bit-field decode written
-    straight from the wire spec (docs/gse-format.md §3.1/§4), deliberately
-    NOT sharing ``unpack_mantissas`` so a layout bug in the shared helper
-    cannot cancel out in the parity test. (..., W) uint32 + (..., G) int8
-    -> (..., head_dim) fp32 (each product mantissa*2^e is fp32-exact)."""
+    straight from the wire spec (docs/gse-format.md §3.1/§4/§7),
+    deliberately NOT sharing ``unpack_mantissas`` so a layout bug in the
+    shared helper cannot cancel out in the parity test. (..., W) uint32 +
+    (..., G) int8 -> (..., head_dim) fp32 (each product mantissa*2^e is
+    fp32-exact).
+
+    ``active_bits``: decode the plane-prefix view — read only the first
+    ``active_bits`` planes of each row and scale by ``2^(e + shift)``."""
     import numpy as np
     w = np.asarray(words, np.uint32)
     e = np.asarray(exps, np.int64)
     d32 = -(-head_dim // 32) * 32
     chunks = d32 // 32
     bits = w.shape[-1] // chunks
-    qmax = 2 ** (bits - 1) - 1
-    wf = w.reshape(-1, chunks, bits)
-    # value i of a row: bit-plane p lives at bit (i % 32) of word
-    # (i // 32) * bits + p; fields are offset-binary (m + qmax)
+    ab = bits if active_bits is None else active_bits
+    wf = w.reshape(-1, bits, chunks)
+    # value i of a row: bit-plane p (holding mantissa bit bits-1-p, MSB
+    # plane first) lives at bit (i % 32) of word p * chunks + (i // 32);
+    # fields are offset-binary (m + 2^(bits-1)); the prefix view keeps
+    # planes [0, ab) and compensates the exponents by (bits - ab)
     idx = np.arange(head_dim)
     chunk, lane = idx // 32, idx % 32
     u = np.zeros((wf.shape[0], head_dim), np.int64)
-    for p in range(bits):
-        u |= ((wf[:, chunk, p] >> lane) & 1).astype(np.int64) << p
-    m = (u - qmax).reshape(*w.shape[:-1], head_dim)
+    for p in range(ab):
+        u |= ((wf[:, p, chunk] >> lane) & 1).astype(np.int64) << (ab - 1 - p)
+    m = (u - (1 << (ab - 1))).reshape(*w.shape[:-1], head_dim)
     g = head_dim // e.shape[-1]
-    scale = np.exp2(e.astype(np.float64))            # exact powers of two
+    scale = np.exp2(e.astype(np.float64) + (bits - ab))  # exact powers of 2
     vals = m.astype(np.float32).reshape(*m.shape[:-1], e.shape[-1], g)
     out = vals * scale[..., None].astype(np.float32)
     return jnp.asarray(out.reshape(*m.shape[:-1], head_dim), jnp.float32)
@@ -335,7 +409,7 @@ def packed_kv_dequant_ref(words, exps, head_dim: int):
 
 def flash_attention_packed_oracle(q, k_words, k_exp, v_words, v_exp,
                                   causal=True, window=0, q_offset=0,
-                                  bq=256, bk=512):
+                                  bq=256, bk=512, kv_active_bits=None):
     """Unpack-then-attend oracle for the packed-KV flash kernel: dequantize
     the **entire** K/V (what the round-trip decode path used to do), then
     run the dense flash kernel at the identical tiling. Because GSE dequant
@@ -344,8 +418,10 @@ def flash_attention_packed_oracle(q, k_words, k_exp, v_words, v_exp,
     (the ordered-accumulation contract), not just allclose."""
     from repro.kernels.flash_attention import flash_attention_pallas
     d = q.shape[-1]
-    k = packed_kv_dequant_ref(k_words, k_exp, d)
-    v = packed_kv_dequant_ref(v_words, v_exp, d)
+    # kv_active_bits replays a plane-prefix read of the KV rows (floor-
+    # truncated mantissas, compensated exponents)
+    k = packed_kv_dequant_ref(k_words, k_exp, d, kv_active_bits)
+    v = packed_kv_dequant_ref(v_words, v_exp, d, kv_active_bits)
     return flash_attention_pallas(q, k, v, causal=causal, window=window,
                                   q_offset=q_offset, bq=bq, bk=bk,
                                   interpret=True)
@@ -353,7 +429,7 @@ def flash_attention_packed_oracle(q, k_words, k_exp, v_words, v_exp,
 
 def flash_attention_packed_gqa_oracle(q, k_words, k_exp, v_words, v_exp,
                                       causal=True, window=0, q_offset=0,
-                                      bq=256, bk=512):
+                                      bq=256, bk=512, kv_active_bits=None):
     """Expand-then-attend oracle for the GQA grid: replicate every packed
     K/V plane row ``G = H // Kv`` times (exactly the memory expansion the
     GQA grid exists to avoid) and run the MHA oracle head-by-head. The GQA
@@ -371,13 +447,14 @@ def flash_attention_packed_gqa_oracle(q, k_words, k_exp, v_words, v_exp,
     qm = q.transpose(0, 2, 1, 3).reshape(b * h, t, d)
     o = flash_attention_packed_oracle(
         qm, expand(k_words), expand(k_exp), expand(v_words), expand(v_exp),
-        causal=causal, window=window, q_offset=q_offset, bq=bq, bk=bk)
+        causal=causal, window=window, q_offset=q_offset, bq=bq, bk=bk,
+        kv_active_bits=kv_active_bits)
     return o.reshape(b, h, t, d).transpose(0, 2, 1, 3)
 
 
 def flash_attention_paged_oracle(q, k_words, k_exp, v_words, v_exp,
                                  page_table, causal=True, window=0,
-                                 q_offset=0, bq=256):
+                                 q_offset=0, bq=256, kv_active_bits=None):
     """Gather-then-attend oracle for the paged kernel: resolve each
     sequence's page-table row with a plain numpy index (straight from the
     §4 wire spec — physical page ``pt[b, j]`` holds logical rows
@@ -386,12 +463,21 @@ def flash_attention_paged_oracle(q, k_words, k_exp, v_words, v_exp,
     offset. The paged kernel — which never materializes the gather — must
     match this bit-exactly.
 
-    q (B, T, H, D); pools (P, page, Kv, ·); page_table (B, maxp) int32."""
+    q (B, T, H, D); pools (P, page, Kv, ·); page_table (B, maxp) int32.
+
+    ``kv_active_bits``: an int (every sequence reads the same width) or a
+    per-sequence (B,) vector of active plane counts — the oracle for the
+    mixed-precision decode lanes of the serving engine."""
     import numpy as np
     b = q.shape[0]
     page = k_words.shape[1]
     pt = np.asarray(page_table)
     off = np.broadcast_to(np.asarray(q_offset), (b,))
+    if kv_active_bits is None:
+        ab = [None] * b
+    else:
+        ab = [int(x) for x in np.broadcast_to(np.asarray(kv_active_bits),
+                                              (b,))]
     outs = []
     for i in range(b):
         def view(pool):           # (P, page, Kv, ·) -> (1, maxp*page, Kv, ·)
@@ -400,5 +486,5 @@ def flash_attention_paged_oracle(q, k_words, k_exp, v_words, v_exp,
         outs.append(flash_attention_packed_gqa_oracle(
             q[i:i + 1], view(k_words), view(k_exp), view(v_words),
             view(v_exp), causal=causal, window=window,
-            q_offset=int(off[i]), bq=bq, bk=page))
+            q_offset=int(off[i]), bq=bq, bk=page, kv_active_bits=ab[i]))
     return jnp.concatenate(outs, axis=0)

@@ -332,7 +332,8 @@ def attention(q, k, v, info: MaskInfo, *, q_chunk: int = 512,
 
 
 def packed_attention(q, k_words, k_exp, v_words, v_exp, info: MaskInfo, *,
-                     k_tail=None, v_tail=None, k_chunk: int = 512):
+                     k_tail=None, v_tail=None, k_chunk: int = 512,
+                     kv_active_bits: int | None = None, kv_trunc=None):
     """Attention against a **bit-packed** GSE KV cache (row-planar planes,
     see ``repro.kernels.flash_attention_packed``) — the packed decode call
     path. K/V stay packed end to end; only one KV tile is ever dequantized
@@ -347,6 +348,10 @@ def packed_attention(q, k_words, k_exp, v_words, v_exp, info: MaskInfo, *,
     append — the current token is never attended through its own
     quantization).
 
+    ``kv_active_bits`` attends through a plane-prefix view of the stored
+    planes (read b of the stored bits — docs/gse-format.md §7);
+    ``kv_trunc`` adds per-sequence plane shifts below that width.
+
     q (B, T, H, D); planes (B, S, Kv, ·) -> (B, T, H, D).
     """
     from repro.kernels.ops import flash_attention_packed
@@ -354,18 +359,24 @@ def packed_attention(q, k_words, k_exp, v_words, v_exp, info: MaskInfo, *,
         q, k_words, k_exp, v_words, v_exp, causal=info.causal,
         window=info.window, q_offset=info.q_offset,
         is_global=info.is_global, k_tail=k_tail, v_tail=v_tail,
-        bk=k_chunk)
+        bk=k_chunk, kv_active_bits=kv_active_bits, kv_trunc=kv_trunc)
 
 
 def paged_attention(q, kp_words, kp_exp, vp_words, vp_exp, page_table,
                     info: MaskInfo, *, k_tail=None, v_tail=None,
-                    k_chunk: int = 512):
+                    k_chunk: int = 512,
+                    kv_active_bits: int | None = None, kv_trunc=None):
     """Attention against a **paged** packed-KV pool: the row-planar plane
     layout carved into fixed-size pages (``repro.serve.paging``), with each
     sequence's logical KV order given by its ``page_table`` row. The
     continuous-batching decode call path — ``info.q_offset`` is the
     per-sequence ``(B,)`` length vector; routing (page-walking kernel vs
     gather + packed fallback) is ``repro.kernels.ops``'s job.
+
+    ``kv_active_bits`` reads a static plane prefix of every page;
+    ``kv_trunc`` (B,) rides the scalar-prefetch lane so each lane decodes
+    at its own effective width from the one pool (mixed-``kv_bits``
+    serving).
 
     q (B, T, H, D); pools (P, page, Kv, ·); page_table (B, maxp) int32
     -> (B, T, H, D).
@@ -375,4 +386,4 @@ def paged_attention(q, kp_words, kp_exp, vp_words, vp_exp, page_table,
         q, kp_words, kp_exp, vp_words, vp_exp, page_table,
         causal=info.causal, window=info.window, q_offset=info.q_offset,
         is_global=info.is_global, k_tail=k_tail, v_tail=v_tail,
-        k_chunk=k_chunk)
+        k_chunk=k_chunk, kv_active_bits=kv_active_bits, kv_trunc=kv_trunc)

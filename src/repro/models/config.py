@@ -58,6 +58,11 @@ class ModelConfig:
     # attention execution (flash-style chunking)
     attn_q_chunk: int = 512
     attn_k_chunk: int = 1024
+    # packed-KV read width: attend through a plane-prefix view reading only
+    # the first b of the cache's stored mantissa planes (None = stored
+    # width; docs/gse-format.md §7). Static — per-sequence widths instead
+    # ride the traced ``kv_trunc`` cache entry (serve.scheduler).
+    kv_active_bits: Optional[int] = None
     # training-time knobs
     remat: bool = True
     vocab_pad_multiple: int = 2048

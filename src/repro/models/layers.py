@@ -202,8 +202,14 @@ def attn_apply(fz, tr, x, cfg: ModelConfig, policy: QuantPolicy, *,
         # quantize-after-attend, exactly as on the planar packed path: the
         # pool stores the quantized rows; the current token rides the fp
         # tail (packed positions >= each row's offset are masked)
+        # reads may narrow: cfg.kv_active_bits takes a static plane prefix
+        # of every page; the cache's per-sequence "kv_trunc" vector (B,)
+        # shifts extra planes below that per lane (mixed-kv_bits serving).
+        # Writes always quantize at the pool's stored width.
         o = paged_attention(q, kpw, kpe, vpw, vpe, pages, mask_info,
-                            k_tail=k, v_tail=v, k_chunk=cfg.attn_k_chunk)
+                            k_tail=k, v_tail=v, k_chunk=cfg.attn_k_chunk,
+                            kv_active_bits=cfg.kv_active_bits,
+                            kv_trunc=layer_cache.get("kv_trunc"))
     elif layer_cache is not None and "k_words" in layer_cache:
         from repro.kernels.ops import quant_pack_kv_rows
         kw, ke = layer_cache["k_words"], layer_cache["k_exp"]
@@ -233,8 +239,12 @@ def attn_apply(fz, tr, x, cfg: ModelConfig, policy: QuantPolicy, *,
         # current token would be attended twice — ring mode keeps attending
         # its just-quantized rows instead.
         tails = {} if ring_buffer else dict(k_tail=k, v_tail=v)
+        # reads may narrow (plane-prefix view / per-seq trunc) while the
+        # appends above stay at the cache's stored width
         o = packed_attention(q, kw, ke, vw, ve, mask_info,
-                             k_chunk=cfg.attn_k_chunk, **tails)
+                             k_chunk=cfg.attn_k_chunk,
+                             kv_active_bits=cfg.kv_active_bits,
+                             kv_trunc=layer_cache.get("kv_trunc"), **tails)
     else:
         if layer_cache is not None:
             ck, cv, idx = (layer_cache["k"], layer_cache["v"],

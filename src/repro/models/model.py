@@ -34,7 +34,7 @@ _MASK_BIDIR = MaskInfo(causal=False)
 # index
 _ATTN_CACHE_KEYS = ("k", "v", "index", "k_words", "k_exp", "v_words",
                     "v_exp", "kp_words", "kp_exp", "vp_words", "vp_exp",
-                    "pages")
+                    "pages", "kv_trunc")
 
 
 def _attn_cache_view(layer_cache):

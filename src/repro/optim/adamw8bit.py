@@ -110,12 +110,15 @@ class AdamW8bit:
     def _zero_moment(self, n: int, bits: int) -> PackedMoment:
         """Packed all-zero moment, constructed directly: zero groups pin to
         EXP_MIN (biased 0 -> zero exponent words) and mantissa 0 is
-        offset-binary ``qmax``, whose bit-planes are full/empty words."""
+        offset-binary ``2^(b-1)`` — one all-ones MSB plane, zero lower
+        planes, laid out plane-major (docs/gse-format.md §3.1/§3.3)."""
+        from repro.core.gse import mantissa_offset
         n_pad = n + _pad_len(n)
-        qmax = qmax_for_bits(bits)
-        plane = [jnp.uint32(0xFFFFFFFF if (qmax >> j) & 1 else 0)
-                 for j in range(bits)]
-        mw = jnp.tile(jnp.stack(plane), n_pad // 32)
+        u_zero = mantissa_offset(bits)
+        plane = [jnp.uint32(0xFFFFFFFF if (u_zero >> (bits - 1 - p)) & 1
+                            else 0)
+                 for p in range(bits)]
+        mw = jnp.repeat(jnp.stack(plane), n_pad // 32)
         ngroups = n_pad // self.group
         ew = jnp.zeros(((-(-ngroups // 32)) * EXP_BITS,), jnp.uint32)
         return PackedMoment(

@@ -275,7 +275,8 @@ def greedy_generate(fz, tr, prompt, cfg: ModelConfig, policy: QuantPolicy,
                     max_new: int = 16, max_len: Optional[int] = None,
                     kv_quant_bits: Optional[int] = None,
                     kv_group: int = DEFAULT_GROUP,
-                    kv_inplace: bool = True):
+                    kv_inplace: bool = True,
+                    kv_active_bits: Optional[int] = None):
     """Simple batched greedy decoding loop (example/serving driver).
 
     With ``kv_quant_bits`` set the KV cache lives **bit-packed** for the
@@ -291,8 +292,22 @@ def greedy_generate(fz, tr, prompt, cfg: ModelConfig, policy: QuantPolicy,
     as an attention tail (quantize-after-attend append) — so they are
     **token-identical at every bit-width** (asserted exactly in
     tests/test_attention_packed.py).
+
+    ``kv_active_bits`` (in-place packed mode only) *stores* the cache at
+    ``kv_quant_bits`` but *attends* through the b-bit plane-prefix view
+    (docs/gse-format.md §7) — the solo reference for the mixed-``kv_bits``
+    continuous-batching lanes, which decode the same narrowed values via
+    the per-sequence ``kv_trunc`` shifts.
     """
     b, t = prompt.shape
+    if kv_active_bits is not None:
+        if kv_quant_bits is None or not kv_inplace:
+            raise ValueError("kv_active_bits needs the in-place packed "
+                             "cache (kv_quant_bits set, kv_inplace=True)")
+        if not 2 <= kv_active_bits <= kv_quant_bits:
+            raise ValueError(f"kv_active_bits {kv_active_bits} outside "
+                             f"[2, stored {kv_quant_bits}]")
+        cfg = _dc.replace(cfg, kv_active_bits=kv_active_bits)
     max_len = max_len or (t + max_new)
     cache = init_decode_cache(cfg, b, max_len)
     logits, cache = prefill(fz, tr, {"tokens": prompt}, cache, cfg, policy)

@@ -14,10 +14,14 @@ Two page ids are reserved and never allocated:
 
 * ``NULL_PAGE`` (0) — the permanent zero page. Every row holds the packed
   pattern of a **quantized zero** (offset-binary mantissa fields are
-  ``m + qmax``, so an all-zero word would dequantize to ``-qmax``, not
-  0.0 — the pool must be seeded with the real packed-zero pattern).
-  Active sequences point unallocated logical pages here; those columns
-  dequantize to exactly 0.0 and sit behind the per-sequence length mask.
+  ``m + 2^(b-1)``, so an all-zero word would dequantize to ``-2^(b-1)``,
+  not 0.0 — the pool must be seeded with the real packed-zero pattern:
+  under the MSB-first wire format that is an all-ones MSB plane and zero
+  lower planes). Active sequences point unallocated logical pages here;
+  those columns dequantize to exactly 0.0 and sit behind the per-sequence
+  length mask. Zero survives every plane-prefix view: ``2^(b-1) >> t ==
+  2^(b'-1)``, the narrower quantized zero — so NULL/TRASH semantics are
+  width-independent.
 * ``TRASH_PAGE`` (1) — the write sink for inactive batch slots. A freed
   slot keeps riding the batched decode step, and its (stale, still
   advancing) appends must never touch a page that has been recycled to
@@ -116,9 +120,18 @@ def init_paged_cache(cfg: ModelConfig, batch: int, n_pages: int,
 
     Pools (L, P, page, Kv, ·) seeded with the packed-zero pattern on every
     page; page table (L, B, max_pages) — every slot starts inactive, its
-    whole row on the trash page; index (L, B) zeros. The page table is
-    identical across layers (one allocator feeds all layers); it is
-    stacked to (L, ...) purely so the decoder scan can carry it per layer.
+    whole row on the trash page; index (L, B) zeros; ``kv_trunc`` (L, B)
+    zeros — each slot's extra plane shifts below the read width (a slot
+    admitted with ``kv_bits = b`` gets ``stored_bits - b`` here; the
+    vector rides the decode step's scalar-prefetch lane, so lanes at
+    different widths share one fused block over the one stored-width
+    pool). The page table is identical across layers (one allocator feeds
+    all layers); it is stacked to (L, ...) purely so the decoder scan can
+    carry it per layer.
+
+    ``bits`` is the pool's **stored** width — writes always quantize at
+    this width; narrowing happens only at read time (plane-prefix views,
+    docs/gse-format.md §7).
     """
     l = cfg.n_layers
     kv = cfg.n_kv_heads
@@ -131,6 +144,7 @@ def init_paged_cache(cfg: ModelConfig, batch: int, n_pages: int,
         "vp_words": jnp.array(words), "vp_exp": jnp.array(exps),
         "pages": jnp.full((l, batch, max_pages), TRASH_PAGE, jnp.int32),
         "index": jnp.zeros((l, batch), jnp.int32),
+        "kv_trunc": jnp.zeros((l, batch), jnp.int32),
     }
 
 

@@ -54,10 +54,18 @@ class SamplingParams:
     """Per-request sampling: ``temperature <= 0`` is greedy; ``top_k > 0``
     restricts sampling to the k highest logits; ``seed`` decorrelates
     requests (each step reseeds deterministically from request uid, step
-    and this seed)."""
+    and this seed).
+
+    ``kv_bits`` (packed engines only) is the request's KV **read** width:
+    its lane attends through the first ``kv_bits`` mantissa planes of the
+    pool's stored-width pages (plane-prefix view, docs/gse-format.md §7).
+    Storage is untouched — every lane's writes stay at the pool width, so
+    lanes at different ``kv_bits`` batch together in one fused decode
+    block. ``None`` reads the full stored width."""
     temperature: float = 0.0
     top_k: int = 0
     seed: int = 0
+    kv_bits: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -183,6 +191,10 @@ class ContinuousBatchingEngine:
                 kv_quant_bits, kv_group)
             self._table = np.tile(paging.trash_page_row(max_pages_per_slot),
                                   (slots, 1))
+            # per-lane extra plane shifts below the pool's stored width
+            # (stored - kv_bits for a narrowed request, 0 = full width);
+            # mirrored device-side exactly like the page table
+            self._trunc = np.zeros((slots,), np.int32)
         else:
             self.allocator = None
             self.cache = E.init_decode_cache(cfg, slots, self.s_cap)
@@ -206,6 +218,21 @@ class ContinuousBatchingEngine:
         if need > self.s_cap:
             raise ValueError(f"request {req.uid} needs {need} rows > "
                              f"slot capacity {self.s_cap}")
+        kvb = req.sampling.kv_bits
+        if kvb is not None:
+            # validated here at intake, not at trace time inside the fused
+            # decode block — a bad width must bounce the one request, not
+            # poison a compiled executable shared by every lane
+            if not self.packed:
+                raise ValueError(f"request {req.uid} sets kv_bits={kvb} "
+                                 "but the engine serves the fp cache "
+                                 "(kv_quant_bits=None)")
+            if not 2 <= kvb <= self.kv_quant_bits:
+                raise ValueError(
+                    f"request {req.uid} kv_bits={kvb} outside [2, stored "
+                    f"pool width {self.kv_quant_bits}] — the pool stores "
+                    f"{self.kv_quant_bits}-bit planes; reads can only "
+                    "take a plane prefix")
         if self.packed:
             npg = self.allocator.pages_for(need)
             if npg > self.allocator.n_allocatable:
@@ -267,6 +294,10 @@ class ContinuousBatchingEngine:
                 self._table[slot] = paging.slot_page_row(pages,
                                                          self.max_pages)
                 self._push_table()
+                kvb = req.sampling.kv_bits
+                self._trunc[slot] = (0 if kvb is None
+                                     else self.kv_quant_bits - kvb)
+                self._push_trunc()
             else:
                 tok_arr, self.cache = self._admit_jit(
                     self.fz, self.tr, prompt, self.cache, np.int32(slot),
@@ -293,11 +324,19 @@ class ContinuousBatchingEngine:
             self.allocator.free(lane.pages)
             self._table[slot] = paging.trash_page_row(self.max_pages)
             self._push_table()
+            if self._trunc[slot]:
+                self._trunc[slot] = 0
+                self._push_trunc()
 
     def _push_table(self) -> None:
         l = self.cfg.n_layers
         self.cache["pages"] = jnp.broadcast_to(
             jnp.asarray(self._table)[None], (l,) + self._table.shape)
+
+    def _push_trunc(self) -> None:
+        l = self.cfg.n_layers
+        self.cache["kv_trunc"] = jnp.broadcast_to(
+            jnp.asarray(self._trunc)[None], (l, self.slots))
 
     # -- the loop ---------------------------------------------------------
 

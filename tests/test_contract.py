@@ -83,6 +83,45 @@ def test_fp_buffer_scan_excludes_fusion_bodies_not_while_bodies():
     assert hits
 
 
+_HLO_WORDS = """\
+HloModule m
+
+%fused_computation (p0: u32[6,64,2,8]) -> u32[6,64,2,8] {
+  %p0 = u32[6,64,2,8]{3,2,1,0} parameter(0)
+  ROOT %sh = u32[6,64,2,8]{3,2,1,0} shift-right-logical(u32[6,64,2,8]{3,2,1,0} %p0, u32[6,64,2,8]{3,2,1,0} %p0)
+}
+
+ENTRY %main (a: u32[6,64,2,8]) -> u32[6,64,2,4] {
+  %a = u32[6,64,2,8]{3,2,1,0} parameter(0)
+  %view = u32[6,64,2,4]{3,2,1,0} slice(u32[6,64,2,8]{3,2,1,0} %a), slice={[0:6], [0:64], [0:2], [0:4]}
+  %flat = u32[6,64,8]{2,1,0} reshape(u32[6,64,2,4]{3,2,1,0} %view)
+  %fus = u32[6,64,2,8]{3,2,1,0} fusion(u32[6,64,2,8]{3,2,1,0} %a), kind=kLoop, calls=%fused_computation
+  ROOT %repack = u32[6,64,2,4]{3,2,1,0} and(u32[6,64,2,4]{3,2,1,0} %view, u32[6,64,2,4]{3,2,1,0} %view)
+}
+"""
+
+
+def test_u32_word_scan_flags_arithmetic_not_views():
+    """The zero-copy engine: a cache-shaped u32 result from *arithmetic*
+    in a materializing computation is a re-pack; `slice`/`reshape` (the
+    zero-copy ops themselves), fusion internals, and the stored-width
+    pass-through are not."""
+    dims = [(6, 64, 2, 4), (6, 64, 2, 8)]
+    hits = contract.u32_word_compute_scan(_HLO_WORDS, dims)
+    assert len(hits) == 1 and "%repack" in hits[0]["line"]
+    v = contract.audit_view_zero_copy(_HLO_WORDS, dims)
+    assert len(v) == 1 and "re-pack" in v[0]
+    # nothing cache-shaped in sight -> clean
+    assert contract.u32_word_compute_scan(_HLO_WORDS, [(9, 9)]) == []
+
+
+def test_check_plane_prefix_view_green():
+    """The real gate on the real programs: the narrowed planar read and
+    the mixed-width paged serve program audit clean."""
+    r = contract.check_plane_prefix_view()
+    assert r["ok"], r["violations"]
+
+
 # --------------------------------------------- seeded violations ----------
 
 def test_seeded_fp_dot_on_int_route_is_flagged():

@@ -160,6 +160,42 @@ def test_r4_blessed_unpack_bodies_and_nonword_shifts(tmp_path):
     assert fs == []
 
 
+def test_r5_flags_hand_plane_prefix_slice(tmp_path):
+    """A width-bounded slice of packed words outside the blessed bodies
+    is a hand-rolled plane-prefix view — with_bits/plane_prefix_words is
+    the one sanctioned slice."""
+    fs = _run(tmp_path, **{"repro/serve/x.py": (
+        "def f(words, bits, chunks, kw):\n"
+        "    a = words[..., : bits * chunks]\n"
+        "    b = kw.mantissa_words[:, : n_planes(bits)]\n"
+        "    return a, b\n")})
+    assert [f.rule for f in fs] == ["R5", "R5"]
+
+
+def test_r5_blessed_bodies_and_nonwidth_slices(tmp_path):
+    body = ("def view(words, bits, chunks):\n"
+            "    return words[..., : bits * chunks]\n")
+    fs = _run(tmp_path, **{
+        "repro/core/gse.py": body,          # blessed: the sanctioned slice
+        "repro/kernels/ref.py": body,       # blessed: the numpy oracles
+        "repro/serve/ok.py": (
+            "def f(words, n, x, bits):\n"
+            "    a = words[..., :n]\n"       # bound is not a width
+            "    b = words[:n]\n"
+            "    c = x[..., : bits * 4]\n"   # target is not word data
+            "    return a, b, c\n"),
+    })
+    assert fs == []
+
+
+def test_r5_pragma_disable(tmp_path):
+    fs = _run(tmp_path, **{"repro/serve/x.py": (
+        "def f(words, bits, chunks):\n"
+        "    return words[..., : bits * chunks]"
+        "  # gse-lint: disable=R5\n")})
+    assert fs == []
+
+
 # ----------------------------------------------------------- baseline -----
 
 def test_baseline_suppression_roundtrip(tmp_path):

@@ -1,0 +1,320 @@
+"""Progressive precision: plane-prefix views of the packed substrate
+(docs/gse-format.md §7).
+
+Covers the truncation semantics end to end: ``with_bits(b)`` is a
+zero-copy word slice that decodes to the floor-truncation oracle
+bit-exactly (property-swept over widths and ragged K), composes, and is
+the identity at the stored width; every packed kernel route
+(unpack / fused matmul / nt / tn / planar attention / paged attention)
+reads the same view through ``active_bits`` — incl. the int32-shift
+fallback and the traced per-sequence ``kv_trunc`` vector; and
+checkpoint ``restore(bits=b)`` loads the view without the wide stream.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.core.gse import (gse_pack, gse_quantize, gse_unpack,
+                            plane_prefix_words)
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention_packed import quant_pack_kv_rows
+from repro.serve import paging
+
+
+def _pack(seed, shape, bits=8, scale=0.5, group=32):
+    x = jax.random.normal(jax.random.PRNGKey(seed), shape) * scale
+    return gse_pack(gse_quantize(x, bits, group))
+
+
+def _assert_view_is_floor_trunc(p, b):
+    """gse_unpack(with_bits(b)) == the numpy floor-division oracle, and
+    the view's words are literally the stored prefix (zero-copy)."""
+    stored = p.stored_bits
+    if p.shape[-1] % 32 == 0:       # word-aligned: per-row chunks
+        chunks = p.shape[-1] // 32
+    else:                           # ragged: flat stream over all values
+        chunks = -(-int(np.prod(p.shape)) // 32)
+    v = p.with_bits(b)
+    assert v.bits == b and v.stored_bits == stored
+    assert v.exp_shift == stored - b
+    assert v.mantissa_words.shape[-1] == b * chunks
+    np.testing.assert_array_equal(
+        np.asarray(v.mantissa_words),
+        np.asarray(p.mantissa_words[..., :b * chunks]))
+    assert v.exponent_words is p.exponent_words      # shared, not copied
+    full = gse_unpack(p)
+    got = gse_unpack(v)
+    m_ref, e_ref = ref.plane_prefix_truncate_ref(
+        np.asarray(full.mantissa), np.asarray(full.exponent), stored, b)
+    np.testing.assert_array_equal(
+        np.asarray(got.mantissa).astype(np.int32), m_ref)
+    np.testing.assert_array_equal(
+        np.asarray(got.exponent).astype(np.int32), e_ref)
+
+
+# ---------------- core view semantics --------------------------------------
+
+@pytest.mark.parametrize("b", range(2, 9))
+@pytest.mark.parametrize("shape,group", [((4, 192), 32), ((3, 48), 16)])
+def test_with_bits_matches_floor_trunc_oracle(b, shape, group):
+    """Every prefix width of an 8-bit stream — word-aligned K and a
+    ragged final chunk (K % 32 != 0)."""
+    _assert_view_is_floor_trunc(_pack(b + shape[-1], shape, group=group), b)
+
+
+def test_with_bits_identity_composition_and_bounds():
+    p = _pack(7, (4, 64))
+    assert p.with_bits(8) is p                       # stored width: no-op
+    v = p.with_bits(6).with_bits(4)
+    w = p.with_bits(4)
+    assert v.bits == w.bits == 4 and v.exp_shift == w.exp_shift == 4
+    np.testing.assert_array_equal(np.asarray(v.mantissa_words),
+                                  np.asarray(w.mantissa_words))
+    for bad in (1, 9):
+        with pytest.raises(ValueError):
+            p.with_bits(bad)
+    with pytest.raises(ValueError):
+        w.with_bits(6)                               # can't widen a view
+
+
+@settings(max_examples=20, deadline=None)
+@given(b1=st.integers(2, 8), b2=st.integers(2, 8),
+       group=st.sampled_from([16, 32]), ngroups=st.integers(1, 8),
+       seed=st.integers(0, 2 ** 16))
+def test_property_prefix_view_is_floor_truncation(b1, b2, group, ngroups,
+                                                  seed):
+    """Any (stored, view) width pair, K swept across group counts incl.
+    ragged word chunks (K % 32 != 0), decodes to floor truncation under
+    the shared (now compensated) exponents."""
+    stored, b = max(b1, b2), min(b1, b2)
+    p = _pack(seed, (3, group * ngroups), bits=stored, group=group)
+    _assert_view_is_floor_trunc(p, b)
+
+
+def test_view_dequant_tracks_requantize_ordering():
+    """The two tiers are distinct and ordered: the zero-copy view is
+    lossier than a fresh b-bit re-quantization, both exact at b=8."""
+    x = jax.random.normal(jax.random.PRNGKey(3), (64, 256))
+    p = gse_pack(gse_quantize(x, 8, 32))
+    np.testing.assert_array_equal(
+        np.asarray(p.with_bits(8).dequantize()),
+        np.asarray(p.requantize(8).dequantize()))
+    for b in (4, 6):
+        ev = float(jnp.mean((p.with_bits(b).dequantize() - x) ** 2))
+        er = float(jnp.mean((p.requantize(b).dequantize() - x) ** 2))
+        assert er <= ev                     # nearest-even beats floor
+        assert ev < float(jnp.mean(x ** 2))  # but the view is still signal
+
+
+# ---------------- kernel routes: active_bits == the view --------------------
+
+@pytest.mark.parametrize("b", [2, 5, 8])
+@pytest.mark.parametrize("int32_shifts", [False, True])
+def test_unpack_kernel_active_bits_vs_ref(b, int32_shifts):
+    """The unpack kernel's narrowed index map (first b planes per tile)
+    matches the ref oracle, incl. the bitcast-int32 shift mode."""
+    from repro.kernels.gse_unpack import gse_unpack_pallas
+    p = _pack(21 + b, (16, 64))
+    y1 = gse_unpack_pallas(p.mantissa_words, 8, active_bits=b, bm=8,
+                           bk=32, int32_shifts=int32_shifts)
+    y2 = ref.gse_unpack_ref(p.mantissa_words, 8, b)
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+
+
+@pytest.mark.parametrize("b", [2, 5, 8])
+def test_matmul_packed_active_bits_vs_ref_and_face_width(b):
+    """The fused packed matmul reading a b-bit prefix of 8-bit words
+    equals (a) the ref oracle and (b) computing over the sliced face-width
+    stream with the exponent shift folded in — the wrapper's contract."""
+    from repro.kernels.gse_matmul import gse_matmul_packed_pallas
+    ta = gse_quantize(
+        jax.random.normal(jax.random.PRNGKey(31), (16, 64)) * 0.3, 8, 32)
+    tb = gse_quantize(
+        jax.random.normal(jax.random.PRNGKey(32), (32, 64)) * 0.3, 8, 32)
+    pb = gse_pack(tb)
+    kw = dict(bm=16, bn=32, bk=64)
+    y1 = gse_matmul_packed_pallas(ta.mantissa, ta.exponent,
+                                  pb.mantissa_words, tb.exponent, 8, 32,
+                                  active_bits=b, **kw)
+    y2 = ref.gse_matmul_packed_ref(ta.mantissa, ta.exponent,
+                                   pb.mantissa_words, tb.exponent, 8, 32,
+                                   active_bits=b)
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+    face = pb.with_bits(b)
+    e_face = (tb.exponent.astype(jnp.int32) + face.exp_shift).astype(
+        jnp.int8)
+    y3 = gse_matmul_packed_pallas(ta.mantissa, ta.exponent,
+                                  face.mantissa_words, e_face, b, 32, **kw)
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y3))
+
+
+@pytest.mark.parametrize("widths", [(4, 8), (8, 3), (5, 6)])
+def test_backward_matmuls_active_bits_vs_ref(widths):
+    """nt (dX-shaped) and tn (dW-shaped) packed matmuls narrow each
+    operand independently, bit-exact vs the oracles at matching tiling."""
+    from repro.kernels.gse_matmul import (gse_matmul_packed_nt_pallas,
+                                          gse_matmul_packed_tn_pallas)
+    aab, bab = widths
+    aw = _pack(41, (32, 128))
+    bw = _pack(42, (128, 64))
+    y1 = gse_matmul_packed_nt_pallas(
+        aw.mantissa_words, _exps(aw), bw.mantissa_words, _exps(bw), 8, 8,
+        32, 32, bm=32, bn=64, bk=64, a_active_bits=aab, b_active_bits=bab)
+    y2 = ref.gse_matmul_packed_nt_ref(
+        aw.mantissa_words, _exps(aw), bw.mantissa_words, _exps(bw), 8, 8,
+        32, bn=64, a_active_bits=aab, b_active_bits=bab)
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+    xw = _pack(43, (128, 64))
+    dw = _pack(44, (128, 96))
+    y1 = gse_matmul_packed_tn_pallas(
+        xw.mantissa_words, _exps(xw), dw.mantissa_words, _exps(dw), 8, 8,
+        32, 32, bm=64, bn=32, bk=32, a_active_bits=aab, b_active_bits=bab)
+    y2 = ref.gse_matmul_packed_tn_ref(
+        xw.mantissa_words, _exps(xw), dw.mantissa_words, _exps(dw), 8, 8,
+        32, bm=64, a_active_bits=aab, b_active_bits=bab)
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+
+
+def _exps(p):
+    from repro.core.gse import unpack_exponents
+    return unpack_exponents(p.exponent_words, p.exponent_shape)
+
+
+# ---------------- attention: static width and traced kv_trunc ---------------
+
+def _routed(route, fn, *a, **kw):
+    os.environ["REPRO_FAP_ROUTE"] = route
+    try:
+        return fn(*a, **kw)
+    finally:
+        del os.environ["REPRO_FAP_ROUTE"]
+
+
+@pytest.mark.parametrize("b", [3, 6])
+def test_attention_kv_active_bits_routes_vs_face_width(b):
+    """Planar attention with ``kv_active_bits=b`` over the 8-bit cache:
+    kernel and fallback routes agree, and both equal attending over the
+    literally-sliced b-bit stream with compensated exponents — a narrowed
+    read IS the b-bit cache."""
+    bs, t, h, kv, d, s, bk = 2, 8, 4, 2, 32, 128, 64
+    q = jax.random.normal(jax.random.PRNGKey(51), (bs, t, h, d))
+    k = jax.random.normal(jax.random.PRNGKey(52), (bs, s, kv, d)) * 0.5
+    v = jax.random.normal(jax.random.PRNGKey(53), (bs, s, kv, d)) * 0.5
+    kw8, ke8 = quant_pack_kv_rows(k, 8)
+    vw8, ve8 = quant_pack_kv_rows(v, 8)
+    off = jnp.asarray([s - t, s - t - 16], jnp.int32)
+    args = dict(causal=True, q_offset=off, bk=bk)
+    ok = _routed("kernel", ops.flash_attention_packed, q, kw8, ke8, vw8,
+                 ve8, kv_active_bits=b, **args)
+    assert ops.last_fap_route()[0] == "kernel"
+    of = _routed("fallback", ops.flash_attention_packed, q, kw8, ke8, vw8,
+                 ve8, kv_active_bits=b, **args)
+    assert ops.last_fap_route()[0] == "fallback"
+    np.testing.assert_array_equal(np.asarray(ok), np.asarray(of))
+    t_shift = 8 - b
+    face = ops.flash_attention_packed(
+        q, plane_prefix_words(kw8, 8, b),
+        (ke8.astype(jnp.int32) + t_shift).astype(jnp.int8),
+        plane_prefix_words(vw8, 8, b),
+        (ve8.astype(jnp.int32) + t_shift).astype(jnp.int8), **args)
+    np.testing.assert_array_equal(np.asarray(ok), np.asarray(face))
+
+
+def test_paged_kv_trunc_mixed_lanes_vs_per_lane_planar():
+    """The traced per-sequence plane-shift vector: lane 0 reads 4-bit,
+    lane 1 full width, from ONE 8-bit pool in one call. Kernel and
+    fallback routes agree, and each lane equals a solo planar call at its
+    static width."""
+    bs, t, h, kv, d, s, page = 2, 8, 4, 2, 32, 128, 64
+    maxp = s // page
+    n_pages = paging.FIRST_PAGE + bs * maxp
+    k = jax.random.normal(jax.random.PRNGKey(61), (bs, s, kv, d)) * 0.5
+    v = jax.random.normal(jax.random.PRNGKey(62), (bs, s, kv, d)) * 0.5
+    kw, ke = quant_pack_kv_rows(k, 8)
+    vw, ve = quant_pack_kv_rows(v, 8)
+    rng = np.random.default_rng(63)
+    pt = rng.permutation(np.arange(paging.FIRST_PAGE, n_pages)).reshape(
+        bs, maxp).astype(np.int32)
+
+    def pool(x):
+        p = np.zeros((n_pages, page) + x.shape[2:], np.asarray(x).dtype)
+        xn = np.asarray(x).reshape(bs, maxp, page, *x.shape[2:])
+        for i in range(bs):
+            for j in range(maxp):
+                p[pt[i, j]] = xn[i, j]
+        return jnp.asarray(p)
+
+    kpw, kpe, vpw, vpe = pool(kw), pool(ke), pool(vw), pool(ve)
+    q = jax.random.normal(jax.random.PRNGKey(64), (bs, t, h, d))
+    off = jnp.asarray([s - t, s - t - 16], jnp.int32)
+    tr = jnp.asarray([4, 0], jnp.int32)          # widths 4 and 8
+    args = dict(causal=True, q_offset=off, kv_trunc=tr)
+    ok = _routed("kernel", ops.flash_attention_paged, q, kpw, kpe, vpw,
+                 vpe, jnp.asarray(pt), **args)
+    assert ops.last_paged_route()[0] == "kernel"
+    oj = _routed("fallback", ops.flash_attention_paged, q, kpw, kpe, vpw,
+                 vpe, jnp.asarray(pt), **args)
+    assert ops.last_paged_route()[0] == "fallback"
+    np.testing.assert_array_equal(np.asarray(ok), np.asarray(oj))
+    for lane, width in enumerate([4, 8]):
+        solo = ops.flash_attention_packed(
+            q[lane:lane + 1], kw[lane:lane + 1], ke[lane:lane + 1],
+            vw[lane:lane + 1], ve[lane:lane + 1], causal=True,
+            q_offset=off[lane:lane + 1], bk=page,
+            kv_active_bits=None if width == 8 else width)
+        np.testing.assert_array_equal(np.asarray(ok[lane]),
+                                      np.asarray(solo[0]))
+
+
+# ---------------- checkpoint: restore(bits=b) -------------------------------
+
+@pytest.mark.parametrize("b", [2, 5, 8])
+def test_checkpoint_restore_bits_matches_with_bits(tmp_path, b):
+    """Plane-prefix load: restoring a full-width checkpoint at width b
+    yields exactly ``with_bits(b)`` of every packed leaf (words and
+    dequant), without touching fp leaves."""
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.core.gse import PackedGSETensor
+    from repro.kernels.ops import gse_quantize_pack
+    rng = np.random.default_rng(3)
+    w1 = jnp.asarray(rng.standard_normal((8, 96)), jnp.float32)
+    w2 = jnp.asarray(rng.standard_normal((4, 64)), jnp.float32)
+    tree = {"w1": gse_quantize_pack(w1, 8, 32),
+            "nested": {"m": gse_quantize_pack(w2, 8, 32)},
+            "fp": jnp.ones((3,), jnp.float32)}
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, tree)
+    view, _, _ = mgr.restore(1, tree, bits=b)
+    for got, src in ((view["w1"], tree["w1"]),
+                     (view["nested"]["m"], tree["nested"]["m"])):
+        want = src.with_bits(b)
+        assert isinstance(got, PackedGSETensor)
+        assert got.bits == b and got.stored_bits == 8
+        np.testing.assert_array_equal(np.asarray(got.mantissa_words),
+                                      np.asarray(want.mantissa_words))
+        np.testing.assert_array_equal(np.asarray(got.dequantize()),
+                                      np.asarray(want.dequantize()))
+    np.testing.assert_array_equal(np.asarray(view["fp"]),
+                                  np.ones((3,), np.float32))
+
+
+def test_checkpoint_lossy_snapshot_narrows(tmp_path):
+    """A lossy ``gse_bits=8`` float snapshot restores narrowed too — the
+    fp leaf comes back as the b-bit view's dequant, and actually differs
+    from the full-width restore."""
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.kernels.ops import gse_quantize_pack
+    rng = np.random.default_rng(5)
+    w = jnp.asarray(rng.standard_normal((8, 96)), jnp.float32)
+    tree = {"w": w}
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, tree, gse_bits=8, gse_min_size=1)
+    r8, _, _ = mgr.restore(1, tree)
+    r4, _, _ = mgr.restore(1, tree, bits=4)
+    want4 = gse_quantize_pack(w, 8, 32).with_bits(4).dequantize()
+    np.testing.assert_array_equal(np.asarray(r4["w"]), np.asarray(want4))
+    assert not np.array_equal(np.asarray(r4["w"]), np.asarray(r8["w"]))

@@ -160,3 +160,56 @@ def test_sampling_deterministic_and_varied(model):
     # top-k=1 at any temperature is greedy
     np.testing.assert_array_equal(
         run(SamplingParams(temperature=2.0, top_k=1, seed=3)), greedy)
+
+
+def test_mixed_kv_bits_token_identity_vs_solo(model):
+    """Progressive precision through the engine: five requests at
+    per-request read widths (4/full/6/8/3-bit) share two slots and ONE
+    8-bit page pool, admitted and evicted mid-flight — and every stream
+    is exactly its solo run at the same ``kv_active_bits``. One compiled
+    executable serves all widths (the per-sequence plane shift is a
+    traced scalar-prefetch lane, not a retrace)."""
+    cfg, fz, tr = model
+    spec = [(12, 10, 4), (4, 3, None), (6, 8, 6), (5, 2, 8), (9, 6, 3)]
+    base = _requests(cfg, [(t, mn) for t, mn, _ in spec])
+    reqs = [Request(uid=r.uid, prompt=r.prompt, max_new=r.max_new,
+                    sampling=SamplingParams(kv_bits=kb))
+            for r, (_, _, kb) in zip(base, spec)]
+    eng = _engine(model, 8)
+    for r in reqs:
+        eng.submit(r)
+    res = eng.run()
+    assert eng.summary()["admitted"] == eng.summary()["evicted"] == 5
+    for r, (_, _, kb) in zip(reqs, spec):
+        solo = E.greedy_generate(fz, tr, jnp.asarray(r.prompt)[None], cfg,
+                                 FP, max_new=r.max_new, max_len=S_CAP,
+                                 kv_quant_bits=8, kv_active_bits=kb)
+        np.testing.assert_array_equal(res[r.uid], np.asarray(solo[0]))
+    # the narrow widths are real: at least one narrowed stream diverges
+    # from its full-width decode
+    full = {r.uid: np.asarray(E.greedy_generate(
+        fz, tr, jnp.asarray(r.prompt)[None], cfg, FP, max_new=r.max_new,
+        max_len=S_CAP, kv_quant_bits=8)[0]) for r in reqs}
+    assert any(not np.array_equal(res[r.uid], full[r.uid])
+               for r, (_, _, kb) in zip(reqs, spec)
+               if kb not in (None, 8))
+
+
+def test_submit_validates_kv_bits(model):
+    """Width validation happens at intake (bounce one request), never at
+    trace time (poison the shared executable): out-of-range widths and
+    kv_bits against an fp-cache engine are rejected; the pool width
+    itself is accepted."""
+    eng = _engine(model, 8)
+    cfg, _, _ = model
+    def req(uid, kb):
+        return Request(uid=uid, prompt=np.asarray([5, 6, 7], np.int32),
+                       max_new=2, sampling=SamplingParams(kv_bits=kb))
+    eng.submit(req(0, 8))                        # pool width: fine
+    eng.submit(req(1, 2))                        # narrowest legal width
+    for bad in (1, 9):
+        with pytest.raises(ValueError, match="kv_bits"):
+            eng.submit(req(2, bad))
+    fp_eng = _engine(model, None)
+    with pytest.raises(ValueError, match="fp cache"):
+        fp_eng.submit(req(3, 4))
